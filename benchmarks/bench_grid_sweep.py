@@ -1,0 +1,47 @@
+"""Paper Fig. 7 analog: communication volume vs processor grid shape, for
+fixed p — measured from the compiled SPMD HLO (wire bytes of the actual
+collectives), compared with the α-β-γ model.  The paper's claim: the
+optimum sits at pr/pc ≈ m/n; 1-D grids are worst."""
+
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+def main(emit):
+    p, m, n, k = 64, 6144, 4096, 32      # m/n = 1.5 -> optimal near 8×8..16×4
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_grid_sub.py"), str(p),
+         str(m), str(n), str(k), "grid"],
+        capture_output=True, text=True, env=env, timeout=900)
+    if proc.returncode != 0:
+        emit("fig7_grid_sweep", 0.0, f"FAILED: {proc.stderr[-200:]}")
+        return
+    rows = []
+    for line in proc.stdout.splitlines():
+        if line.startswith("ROW,grid"):
+            _, _, pr, pc, wire, model = line.split(",")
+            rows.append((int(pr), int(pc), float(wire), float(model)))
+            emit(f"fig7_grid_{pr}x{pc}", 0.0,
+                 f"hlo_wire={float(wire) / 1e6:.2f}MB "
+                 f"model={float(model) / 1e6:.2f}MB")
+    best = min(rows, key=lambda r: r[2])
+    from repro.core import costmodel
+    pred = costmodel.optimal_grid(m, n, p)
+    emit("fig7_best_grid", 0.0,
+         f"measured_best={best[0]}x{best[1]} model_optimal={pred[0]}x{pred[1]}")
+    oned = [r for r in rows if r[0] == 1 or r[1] == 1]
+    emit("fig7_1d_worse", 0.0,
+         f"{all(r[2] >= best[2] for r in oned)} "
+         f"(1D volumes {[f'{r[2]/1e6:.1f}MB' for r in oned]})")
+    out = os.path.join(HERE, "results", "fig7_grid_sweep.csv")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write("pr,pc,hlo_wire_bytes,model_bytes\n")
+        for r in rows:
+            f.write(f"{r[0]},{r[1]},{r[2]:.0f},{r[3]:.0f}\n")

@@ -1,0 +1,63 @@
+"""Paper Fig. 6 analog: per-iteration time vs low rank k (p = 864 in the
+paper).  Two parts: (a) measured LUC wall-time on this container's core for
+MU/HALS/BPP as k grows (paper Observation 2: BPP's LUC grows ~k³ vs k² for
+MU/HALS); (b) α-β-γ model for the full iteration at p=864 (Observation 1:
+Naive's communication grows linearly in k, FAUN's as √k)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import algorithms, costmodel
+from repro.core.costmodel import Machine
+
+ROWS = 4096
+
+
+def _time_luc(algo, k):
+    key = jax.random.PRNGKey(0)
+    C = jax.random.normal(key, (3 * k, k))
+    G = C.T @ C + 0.1 * jnp.eye(k)
+    R = jax.random.uniform(jax.random.fold_in(key, 1), (ROWS, k))
+    X = jax.random.uniform(jax.random.fold_in(key, 2), (ROWS, k))
+    up_w, _ = algorithms.get_update_fns(algo)
+    f = jax.jit(lambda g, r, x: up_w(g, r, x))
+    f(G, R, X).block_until_ready()
+    t0 = time.time()
+    reps = 5
+    for _ in range(reps):
+        f(G, R, X).block_until_ready()
+    return (time.time() - t0) / reps
+
+
+def main(emit):
+    ks = [10, 20, 30, 40, 50]
+    luc = {}
+    for algo in ["mu", "hals", "bpp"]:
+        for k in ks:
+            luc[(algo, k)] = _time_luc(algo, k)
+            emit(f"fig6_luc_{algo}_k{k}", luc[(algo, k)] * 1e6, "")
+        growth = luc[(algo, 50)] / luc[(algo, 10)]
+        emit(f"fig6_luc_growth_{algo}", 0.0,
+             f"t(k=50)/t(k=10)={growth:.1f}")
+    # Observation 2: BPP grows faster with k than MU
+    emit("fig6_bpp_grows_faster", 0.0,
+         f"{luc[('bpp', 50)] / luc[('bpp', 10)] > luc[('mu', 50)] / luc[('mu', 10)]}")
+
+    mach = Machine()
+    m, n, p = 207_360, 138_240, 864
+    pr, pc = costmodel.optimal_grid(m, n, p)
+    for k in ks:
+        words_f = costmodel.mpifaun_cost(m, n, k, pr, pc).words
+        words_n = costmodel.naive_cost(m, n, k, p).words
+        emit(f"fig6_words_k{k}", 0.0,
+             f"faun={words_f:.3e} naive={words_n:.3e} "
+             f"ratio={words_n / words_f:.1f}")
+    # naive comm linear in k, faun ~sqrt(k): ratio should grow ~sqrt(k)
+    r10 = costmodel.naive_cost(m, n, 10, p).words \
+        / costmodel.mpifaun_cost(m, n, 10, pr, pc).words
+    r50 = costmodel.naive_cost(m, n, 50, p).words \
+        / costmodel.mpifaun_cost(m, n, 50, pr, pc).words
+    emit("fig6_comm_ratio_growth", 0.0,
+         f"naive/faun words ratio k10={r10:.1f} k50={r50:.1f} (grows ~sqrt k)")

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig4 fig7  # subset
+"""
+
+import sys
+import time
+
+from benchmarks import (bench_cost_table, bench_datasets, bench_error_curves,
+                        bench_grid_sweep, bench_k_sweep,
+                        bench_strong_scaling)
+
+BENCHES = {
+    "fig4_error_curves": bench_error_curves.main,
+    "fig5_strong_scaling": bench_strong_scaling.main,
+    "fig6_k_sweep": bench_k_sweep.main,
+    "fig7_grid_sweep": bench_grid_sweep.main,
+    "table1_datasets": bench_datasets.main,
+    "table3_cost": bench_cost_table.main,
+}
+
+
+def main() -> None:
+    args = sys.argv[1:]
+    selected = {k: v for k, v in BENCHES.items()
+                if not args or any(a in k for a in args)}
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in selected.items():
+        t0 = time.time()
+
+        def emit(row_name, us, derived=""):
+            print(f"{row_name},{us:.2f},{derived}", flush=True)
+
+        try:
+            fn(emit)
+            print(f"{name}__total,{(time.time() - t0) * 1e6:.0f},ok",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}__total,0,FAILED:{type(e).__name__}:{e}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

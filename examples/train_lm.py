@@ -1,0 +1,37 @@
+"""End-to-end training driver: train a (reduced) assigned architecture on
+a synthetic Markov language for a few hundred steps with the full runtime — sharded (if
+devices allow), checkpointed, restartable, straggler-monitored.
+
+  PYTHONPATH=src python examples/train_lm.py --arch smollm-135m --steps 200
+
+(On a real TPU pod, drop --reduced to train the full config on the
+production mesh; this container is 1 CPU core, so the default exercises the
+identical code path at smoke scale.)
+"""
+
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    argv = ["--arch", args.arch, "--steps", str(args.steps),
+            "--batch", "8", "--seq", "32", "--lr", "1e-2",
+            "--ckpt-dir", f"/tmp/repro_train_{args.arch}",
+            "--ckpt-every", "50", "--task", "markov"]
+    if not args.full:
+        argv.append("--reduced")
+    hist = train_main(argv)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"\nmarkov-LM loss: {first:.3f} -> {last:.3f} "
+          f"({'LEARNED' if last < first - 0.2 else 'descending'})")
+
+
+if __name__ == "__main__":
+    main()

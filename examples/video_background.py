@@ -1,0 +1,60 @@
+"""Paper §6.4.1: moving-object detection by background subtraction.
+
+A video is reshaped so every frame is a column; the rank-k NMF
+reconstruction Â = WH captures the static background and A − Â the moving
+objects.  We synthesise a "surveillance" clip (static scene + moving
+blob), run NMF, and report how much of the motion energy lands in the
+residual — the quantitative version of the paper's Figure 9.
+
+  PYTHONPATH=src python examples/video_background.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aunmf
+
+
+def make_video(key, hw: int = 32, frames: int = 96):
+    """Static background + a bright blob sweeping across the scene."""
+    kb, _ = jax.random.split(key)
+    bg = jax.random.uniform(kb, (hw, hw), minval=0.2, maxval=0.6)
+    ys = jnp.linspace(4, hw - 5, frames).astype(int)
+    xs = (jnp.linspace(0, 2 * jnp.pi, frames))
+    vids = []
+    motion_masks = []
+    for t in range(frames):
+        y = int(ys[t])
+        x = int(hw / 2 + (hw / 3) * jnp.sin(xs[t]))
+        frame = bg
+        mask = jnp.zeros((hw, hw), bool)
+        frame = jax.lax.dynamic_update_slice(
+            frame, jnp.full((3, 3), 1.0), (y, x))
+        mask = jax.lax.dynamic_update_slice(
+            mask, jnp.full((3, 3), True), (y, x))
+        vids.append(frame.reshape(-1))
+        motion_masks.append(mask.reshape(-1))
+    return jnp.stack(vids, 1), jnp.stack(motion_masks, 1)  # (pixels, frames)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    A, motion = make_video(key)
+    print(f"video matrix: {A.shape[0]} pixels × {A.shape[1]} frames "
+          f"(paper: 1,013,400 × 13,824)")
+    res = aunmf.fit(A, k=6, algo="bpp", iters=40, key=key)
+    Ahat = res.W @ res.H
+    resid = jnp.abs(A - Ahat)
+
+    on_motion = float(resid[motion].mean())
+    off_motion = float(resid[~motion].mean())
+    print(f"rank-6 reconstruction rel_err: {float(res.rel_errors[-1]):.4f}")
+    print(f"residual on moving pixels:  {on_motion:.4f}")
+    print(f"residual on background:     {off_motion:.4f}")
+    print(f"separation ratio:           {on_motion / max(off_motion, 1e-9):.1f}x"
+          f"  (>5x = clean background subtraction)")
+    assert on_motion > 5 * off_motion
+
+
+if __name__ == "__main__":
+    main()

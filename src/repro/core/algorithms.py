@@ -1,0 +1,115 @@
+"""Local Update Computations (LUC) for AU-NMF (paper §4).
+
+Every AU-NMF algorithm updates the factors from the same four matrix
+products.  We express both half-updates in a single "row-factor" convention:
+
+    X ∈ R_+^{r×k}  (rows of W, or columns of H transposed)
+    G ∈ R^{k×k}    (Gram of the *fixed* factor: HHᵀ or WᵀW)
+    R ∈ R^{r×k}    (cross product block: (AHᵀ) rows, or (WᵀA)ᵀ rows)
+
+so ``update(G, R, X)`` works unchanged for the W-step and the H-step, and
+unchanged between serial and distributed (shard_map) execution — the paper's
+central design point: LUC is local, only the matrix products communicate.
+
+Implemented algorithms (paper §4.1–4.3):
+  * ``mu``    — Lee & Seung multiplicative update.
+  * ``hals``  — Cichocki et al. hierarchical ALS (sequential column sweep).
+  * ``bpp``   — exact ANLS via block principal pivoting (core/bpp.py).
+
+HALS normalisation: the paper's Algorithm normalises each column of W
+immediately after updating it (the H half-update has no normalisation).  In
+the distributed setting the column norm is a global reduction, which the
+paper charges as the extra ``k·log p`` latency of HALS.  ``hals`` therefore
+takes a ``norm_psum`` callable: identity for serial, ``lax.psum`` over the
+grid for distributed — keeping serial and distributed bit-identical.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bpp import solve_bpp
+
+_EPS = 1e-16
+
+
+def update_mu(G: jax.Array, R: jax.Array, X: jax.Array) -> jax.Array:
+    """X ← X ⊙ R / (X G + ε)   (paper eq. (3); F = 2rk² flops)."""
+    denom = X @ G + _EPS
+    return X * (R / denom)
+
+
+def update_hals(G: jax.Array, R: jax.Array, X: jax.Array, *,
+                normalize: bool = False,
+                norm_psum: Callable[[jax.Array], jax.Array] = lambda v: v,
+                ) -> jax.Array:
+    """Sequential HALS column sweep (paper eq. (5); F = 2rk² flops).
+
+    W-step (normalize=True):   w^i ← [w^i·G_ii + R^i − X G^i]_+ ;  w^i ← w^i/‖w^i‖
+    H-step (normalize=False):  h_i ← [h_i + (R^i − X G^i)/G_ii]_+
+
+    This is Cichocki & Phan's fast-HALS (their Algorithm 2).  The paper's
+    eq. (5) writes the unscaled form, which is the same rule under its
+    convention that W's columns are unit-normalised after every update
+    (then (WᵀW)_ii = 1); we keep the G_ii factors explicit so the sweep is
+    correct for *any* scaling — including the first iteration, where W is
+    not yet normalised.  Columns are updated in order so later columns see
+    earlier updates — the defining property of HALS as 2k-block BCD.
+    """
+    k = G.shape[0]
+
+    def col(i, X):
+        gii = G[i, i]
+        if normalize:
+            xi = X[:, i] * gii + R[:, i] - X @ G[:, i]
+            xi = jnp.maximum(xi, 0.0)
+            sq = norm_psum(jnp.sum(xi * xi))
+            nrm = jnp.sqrt(sq)
+            # Guard the all-zero column (paper's code resets to machine eps).
+            xi = jnp.where(nrm > 0, xi / jnp.maximum(nrm, _EPS), xi)
+        else:
+            xi = X[:, i] + (R[:, i] - X @ G[:, i]) / jnp.maximum(gii, _EPS)
+            xi = jnp.maximum(xi, 0.0)
+        return X.at[:, i].set(xi)
+
+    return jax.lax.fori_loop(0, k, col, X, unroll=False)
+
+
+def update_bpp(G: jax.Array, R: jax.Array, X: jax.Array, *,
+               max_iter: int | None = None) -> jax.Array:
+    """Exact NLS via block principal pivoting; X is only a shape/dtype hint."""
+    del X  # BPP re-solves from scratch (ANLS is memoryless per half-update)
+    return solve_bpp(G, R, max_iter=max_iter)
+
+
+ALGORITHMS: dict[str, Callable] = {
+    "mu": update_mu,
+    "hals": update_hals,
+    "bpp": update_bpp,
+}
+
+
+def get_update_fns(algo: str, *, norm_psum=lambda v: v):
+    """Returns (update_w, update_h) closures for the chosen algorithm.
+
+    update_w normalises columns under HALS (paper's convention); update_h
+    never does.  Both have signature (G, R, X) -> X_new with X, R of shape
+    (rows, k).
+    """
+    algo = algo.lower()
+    if algo == "mu":
+        return update_mu, update_mu
+    if algo == "hals":
+        def w_up(G, R, X):
+            return update_hals(G, R, X, normalize=True, norm_psum=norm_psum)
+
+        def h_up(G, R, X):
+            return update_hals(G, R, X, normalize=False)
+
+        return w_up, h_up
+    if algo in ("bpp", "abpp", "anls"):
+        return update_bpp, update_bpp
+    raise ValueError(f"unknown NMF algorithm {algo!r}; choose from mu|hals|bpp")

@@ -1,0 +1,153 @@
+"""Block Principal Pivoting (BPP) solver for nonnegative least squares.
+
+Solves, for each right-hand side b (a row of ``R``):
+
+    min_{x >= 0} || C x - b ||_2
+
+given the precomputed normal-equation matrices ``G = CᵀC`` (k×k) and
+``R = (CᵀB)ᵀ`` (r×k, one row per right-hand side), exactly as the paper's
+``SolveBPP(CᵀC, CᵀB)`` subroutine (Kim & Park 2011, Algorithm 2).
+
+The KKT conditions for a single column are
+
+    y = G x - r,   x >= 0,   y >= 0,   x ⊙ y = 0,
+
+with complementary supports: the *passive* set P holds indices with x_i free
+(y_i = 0) and the *active* set holds x_i = 0 (y_i free).  BPP greedily swaps
+infeasible indices between the two sets — full exchanges while they keep
+shrinking the infeasible set, falling back to Murty's single-index rule
+(largest infeasible index) to guarantee finite termination.
+
+This implementation is a faithful, fully vectorised JAX port:
+
+* all right-hand sides are solved simultaneously (state tensors carry a
+  leading ``r`` axis) under a single ``jax.lax.while_loop``;
+* the passive-set least-squares solve uses the masked normal equations
+  ``(G ⊙ PPᵀ + diag(¬P)) x = r ⊙ P`` so every column is one batched k×k
+  ``jnp.linalg.solve`` (k ≪ m, n per the paper, so these hit the MXU as a
+  small batched GEMM + LU on TPU);
+* converged columns are frozen with ``jnp.where`` so stragglers don't
+  perturb finished solutions.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class _BPPState(NamedTuple):
+    x: jax.Array        # (r, k) primal iterate
+    y: jax.Array        # (r, k) dual iterate  y = G x - r
+    passive: jax.Array  # (r, k) bool, passive set P
+    alpha: jax.Array    # (r,) int32 remaining full-exchange credits
+    beta: jax.Array     # (r,) int32 best (smallest) infeasible count seen
+    done: jax.Array     # (r,) bool
+    it: jax.Array       # () int32
+
+
+def _masked_solve(G: jax.Array, passive: jax.Array, rhs: jax.Array,
+                  ridge: float) -> jax.Array:
+    """Solve G[P,P] x_P = rhs[P] for each row's passive set P.
+
+    Implemented as a dense masked system so it batches:  rows/cols outside P
+    are replaced by identity, giving x_i = 0 there.
+    """
+    pf = passive.astype(G.dtype)                       # (r, k)
+    # (r, k, k): G on P×P; 1.0 on the diagonal for non-passive rows (identity
+    # fill) so x_i = 0 outside P; optional ridge on passive diagonal entries.
+    mask2 = pf[:, :, None] * pf[:, None, :]
+    eye = jnp.eye(G.shape[-1], dtype=G.dtype)
+    M = (G[None] * mask2
+         + eye[None] * (1.0 - pf)[:, :, None]
+         + (ridge * eye)[None] * pf[:, :, None])
+    b = rhs * pf
+    x = jnp.linalg.solve(M, b[..., None])[..., 0]
+    return x * pf
+
+
+def solve_bpp(G: jax.Array, R: jax.Array, *, max_iter: int | None = None,
+              ridge: float = 0.0) -> jax.Array:
+    """Solve min_{X>=0} ||C Xᵀ - B||_F given G = CᵀC and R = (CᵀB)ᵀ.
+
+    Args:
+      G: (k, k) Gram matrix CᵀC (symmetric PSD; assumed full rank as in the
+        paper's normal-equation formulation).
+      R: (r, k) — row i is (Cᵀb_i)ᵀ for right-hand side i.
+      max_iter: pivoting iteration cap; default ``5 * k + 10``.
+      ridge: optional tiny diagonal regulariser for near-singular passive
+        blocks (0.0 = paper-faithful).
+
+    Returns:
+      X: (r, k) with X >= 0, KKT-optimal per row (up to fp tolerance).
+    """
+    r, k = R.shape
+    if max_iter is None:
+        max_iter = 5 * k + 10
+    dtype = jnp.result_type(G.dtype, R.dtype)
+    G = G.astype(dtype)
+    R = R.astype(dtype)
+
+    init = _BPPState(
+        x=jnp.zeros((r, k), dtype),
+        y=-R,                                        # y = G·0 − r
+        passive=jnp.zeros((r, k), bool),
+        alpha=jnp.full((r,), 3, jnp.int32),
+        beta=jnp.full((r,), k + 1, jnp.int32),
+        done=jnp.all(-R >= 0, axis=1),               # already KKT at x = 0
+        it=jnp.zeros((), jnp.int32),
+    )
+
+    tol = jnp.asarray(0.0, dtype)  # strict sign tests, as in the reference code
+
+    def infeasible(st: _BPPState) -> jax.Array:
+        return (st.passive & (st.x < -tol)) | (~st.passive & (st.y < -tol))
+
+    def cond(st: _BPPState) -> jax.Array:
+        return (~jnp.all(st.done)) & (st.it < max_iter)
+
+    def body(st: _BPPState) -> _BPPState:
+        V = infeasible(st)                           # (r, k)
+        ninf = jnp.sum(V, axis=1).astype(jnp.int32)  # (r,)
+        col_done = ninf == 0
+
+        improved = ninf < st.beta
+        use_full = improved | (st.alpha > 0)
+        new_beta = jnp.where(improved, ninf, st.beta)
+        new_alpha = jnp.where(improved, 3, jnp.where(use_full, st.alpha - 1, st.alpha))
+
+        # Backup rule: flip only the largest infeasible index.
+        idx = jnp.arange(k)[None, :]
+        largest = jnp.max(jnp.where(V, idx, -1), axis=1)    # (r,)
+        single = idx == largest[:, None]
+        flip = jnp.where(use_full[:, None], V, V & single)
+
+        passive = st.passive ^ flip
+        x = _masked_solve(G, passive, R, ridge)
+        y = x @ G.T - R
+        y = jnp.where(passive, 0.0, y)
+        x = jnp.where(passive, x, 0.0)
+
+        # Freeze finished columns.
+        keep = (st.done | col_done)[:, None]
+        return _BPPState(
+            x=jnp.where(keep, st.x, x),
+            y=jnp.where(keep, st.y, y),
+            passive=jnp.where(keep, st.passive, passive),
+            alpha=jnp.where(st.done | col_done, st.alpha, new_alpha),
+            beta=jnp.where(st.done | col_done, st.beta, new_beta),
+            done=st.done | col_done,
+            it=st.it + 1,
+        )
+
+    st = jax.lax.while_loop(cond, body, init)
+    # Non-terminated columns (pathological / singular G): clamp to feasibility.
+    return jnp.maximum(st.x, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter",))
+def solve_bpp_jit(G: jax.Array, R: jax.Array, max_iter: int = 0) -> jax.Array:
+    return solve_bpp(G, R, max_iter=max_iter or None)

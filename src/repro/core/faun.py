@@ -1,0 +1,285 @@
+"""MPI-FAUN (paper Algorithm 3) on a TPU mesh via shard_map.
+
+Layouts (paper Fig. 2), for a pr × pc grid with p = pr·pc:
+
+    A    (m, n)  → P("pr", "pc")            A_ij   is (m/pr, n/pc)
+    W    (m, k)  → P(("pr", "pc"), None)    (W_i)_j is (m/p, k)
+    H    (k, n)  → P(None, ("pc", "pr"))    (H^j)^i is (k, n/p)
+
+Per-iteration schedule (exactly the paper's six collectives):
+
+  W-step:
+    U_ij = (H^j)^i (H^j)^iᵀ            local Gram               [line 3]
+    HHᵀ  = all-reduce(U_ij)            psum over ("pr","pc")    [line 4]
+    H^j  = all-gather_{pr}((H^j)^i)    panel gather             [line 5]
+    V_ij = A_ij · H^jᵀ                 local GEMM (Pallas-able) [line 6]
+    (AHᵀ)_i = reduce-scatter_{pc}(V)   psum_scatter over rows   [line 7]
+    (W_i)_j = UpdateW(HHᵀ, ·)          LUC                      [line 8]
+  H-step: symmetric with pr ↔ pc                                [lines 9–14]
+
+The multi-pod mesh adds a leading "pod" axis folded into the row dimension of
+the grid (pr_eff = pod·pr): FAUN is grid-shape agnostic, so multi-pod is just
+a taller processor grid whose slow inter-pod hops carry only factor panels
+(never A) — the paper's "never communicate the data matrix" invariant is what
+makes cross-pod NMF viable at all.
+
+Relative error uses the byproduct trick (core/error.py): per-iteration cost
+is one extra k×k local Gram + scalars in the existing all-reduce.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import algorithms
+from repro.core.aunmf import NMFResult, init_h, init_w
+from repro.util.compat import shard_map
+
+
+# ---------------------------------------------------------------------------
+# The paper's three communication primitives, reused by distributed/ for FSDP.
+# ---------------------------------------------------------------------------
+
+def gram_allreduce(X_loc: jax.Array, axes: Sequence[str],
+                   transpose: bool = True) -> jax.Array:
+    """k×k Gram of a distributed tall-skinny matrix: local XᵀX + all-reduce."""
+    G = X_loc.T @ X_loc if transpose else X_loc @ X_loc.T
+    return lax.psum(G, tuple(axes))
+
+
+def allgather_panel(X_loc: jax.Array, axis: str, *, concat_axis: int) -> jax.Array:
+    """All-gather a factor panel along one grid axis (paper lines 5/11)."""
+    return lax.all_gather(X_loc, axis, axis=concat_axis, tiled=True)
+
+
+def matmul_reducescatter(Y_loc: jax.Array, axis: str, *,
+                         scatter_axis: int) -> jax.Array:
+    """Reduce-scatter a local GEMM result along one grid axis (lines 7/13)."""
+    return lax.psum_scatter(Y_loc, axis, scatter_dimension=scatter_axis,
+                            tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# FAUN iteration body (runs inside shard_map; everything below is per-device)
+# ---------------------------------------------------------------------------
+
+def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, *, row_axes, col_axis,
+                   algo: str, local_mm: Callable | None = None,
+                   local_mm_t: Callable | None = None,
+                   local_gram: Callable | None = None,
+                   panel_dtype=None):
+    """One AU-NMF iteration of Algorithm 3 on local blocks.
+
+    A_blk  : (m/prE, n/pc)  local data block (prE = pod*pr on multi-pod)
+    W_blk  : (m/p, k)       local W rows
+    Ht_blk : (n/p, k)       local Hᵀ rows  (H column block, transposed)
+    row_axes: mesh axis name(s) forming the grid-row dimension ("pod","pr")
+    col_axis: mesh axis name for grid columns ("pc")
+
+    Returns (W_blk, Ht_blk, sq_err).
+    """
+    all_axes = tuple(row_axes) + (col_axis,)
+    acc32 = functools.partial(lax.dot_general,
+                              dimension_numbers=(((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    if panel_dtype is not None and local_mm is None:
+        # Beyond-paper: ship factor panels over the wire in bf16 (half the
+        # all-gather bytes) and accumulate the GEMM in fp32 on the MXU.
+        mm = lambda a, b: acc32(a, b)
+        mm_t = lambda a, b: lax.dot_general(
+            a, b, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        gram = lambda x: lax.dot_general(
+            x, x, dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        cast = lambda x: x.astype(panel_dtype)
+    else:
+        mm = local_mm or (lambda a, b: a @ b)
+        mm_t = local_mm_t or (lambda a, b: a.T @ b)
+        gram = local_gram or (lambda x: x.T @ x)
+        cast = lambda x: x
+
+    def norm_psum(v):  # HALS column-norm reduction over the whole grid
+        return lax.psum(v, all_axes)
+
+    update_w, update_h = algorithms.get_update_fns(algo, norm_psum=norm_psum)
+
+    # Low-precision panel gathers: ship the bf16 *bit pattern* (u16) so CPU
+    # XLA's f32-dot legalization cannot commute the widening convert back
+    # across the collective (on TPU bf16 dots are native and the bitcasts
+    # are free views — wire bytes are what we measure here either way).
+    if panel_dtype is not None:
+        bits = jnp.uint16 if panel_dtype == jnp.bfloat16 else None
+
+        def gather_low(x, axis):
+            xl = x.astype(panel_dtype)
+            if bits is not None:
+                xl = lax.bitcast_convert_type(xl, bits)
+            g = allgather_panel(xl, axis, concat_axis=0)
+            if bits is not None:
+                g = lax.bitcast_convert_type(g, panel_dtype)
+            return g
+    else:
+        def gather_low(x, axis):
+            return allgather_panel(x, axis, concat_axis=0)
+
+    # ---- W given H (paper lines 3–8) ----
+    HHt = lax.psum(gram(Ht_blk), all_axes)                        # k×k
+    Hj_t = gather_low(Ht_blk, row_axes[-1])
+    if len(row_axes) == 2:  # multi-pod: finish the gather across pods
+        Hj_t = allgather_panel(Hj_t, row_axes[0], concat_axis=0) \
+            if panel_dtype is None else gather_low(Hj_t, row_axes[0])
+    V = mm(cast(A_blk), Hj_t)                                     # (m/prE, k)
+    AHt_blk = matmul_reducescatter(V, col_axis, scatter_axis=0)   # (m/p, k)
+    W_blk = update_w(HHt, AHt_blk, W_blk)
+
+    # ---- H given W (paper lines 9–14) ----
+    WtW = lax.psum(gram(W_blk), all_axes)                         # k×k
+    Wi = gather_low(W_blk, col_axis)                              # (m/prE, k)
+    Yt = mm_t(cast(A_blk), Wi)                                    # (n/pc, k)
+    # Scatter outer-to-inner (pod, then pr) to land in the (pc,pod,pr) layout.
+    WtA_t_blk = Yt
+    for ax in row_axes:
+        WtA_t_blk = matmul_reducescatter(WtA_t_blk, ax, scatter_axis=0)
+    Ht_blk = update_h(WtW, WtA_t_blk, Ht_blk)
+
+    # ---- relative error from byproducts (one extra k×k Gram) ----
+    HHt_new = lax.psum(gram(Ht_blk), all_axes)
+    cross = lax.psum(
+        jnp.sum(WtA_t_blk.astype(jnp.float32) * Ht_blk.astype(jnp.float32)),
+        all_axes)
+    quad = jnp.sum(WtW.astype(jnp.float32) * HHt_new.astype(jnp.float32))
+    sq_err = normA_sq - 2.0 * cross + quad
+    return W_blk, Ht_blk, sq_err
+
+
+# ---------------------------------------------------------------------------
+# Host-level driver
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FaunGrid:
+    """Names the mesh axes used as the FAUN processor grid."""
+    mesh: Mesh
+    row_axes: tuple[str, ...] = ("pr",)    # ("pod","pr") on multi-pod meshes
+    col_axis: str = "pc"
+
+    @property
+    def pr(self) -> int:
+        return math.prod(self.mesh.shape[a] for a in self.row_axes)
+
+    @property
+    def pc(self) -> int:
+        return self.mesh.shape[self.col_axis]
+
+    @property
+    def p(self) -> int:
+        return self.pr * self.pc
+
+    # Global-array shardings implied by the paper's Fig. 2 layouts.
+    def spec_A(self) -> P:
+        return P(self.row_axes if len(self.row_axes) > 1 else self.row_axes[0],
+                 self.col_axis)
+
+    def spec_W(self) -> P:
+        return P(tuple(self.row_axes) + (self.col_axis,), None)
+
+    def spec_Ht(self) -> P:
+        return P((self.col_axis,) + tuple(self.row_axes), None)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_faun_mesh(pr: int, pc: int, *, devices=None) -> FaunGrid:
+    devices = devices if devices is not None else jax.devices()
+    assert len(devices) >= pr * pc, (len(devices), pr, pc)
+    import numpy as np
+    mesh = Mesh(np.asarray(devices[: pr * pc]).reshape(pr, pc), ("pr", "pc"))
+    return FaunGrid(mesh=mesh)
+
+
+def build_faun_step(grid: FaunGrid, *, algo: str, use_pallas: bool = False,
+                    panel_dtype=None):
+    """Returns step(A, W, Ht, normA_sq) -> (W, Ht, sq_err) as a shard_mapped,
+    jit-compatible callable over *global* arrays."""
+    local_mm = local_mm_t = local_gram = None
+    if use_pallas:
+        from repro.kernels import ops as kops
+        local_mm = kops.ts_matmul
+        local_mm_t = kops.ts_matmul_t
+        local_gram = kops.gram
+
+    body = functools.partial(
+        faun_iteration, row_axes=grid.row_axes, col_axis=grid.col_axis,
+        algo=algo, local_mm=local_mm, local_mm_t=local_mm_t,
+        local_gram=local_gram, panel_dtype=panel_dtype)
+
+    return shard_map(
+        body, mesh=grid.mesh,
+        in_specs=(grid.spec_A(), grid.spec_W(), grid.spec_Ht(), P()),
+        out_specs=(grid.spec_W(), grid.spec_Ht(), P()),
+    )
+
+
+def fit(A, k: int, *, grid: FaunGrid, algo: str = "bpp", iters: int = 30,
+        key: jax.Array | None = None, H0: jax.Array | None = None,
+        W0: jax.Array | None = None, use_pallas: bool = False,
+        panel_dtype=None, donate: bool = True) -> NMFResult:
+    """Distributed AU-NMF.  Bit-compatible with core.aunmf.fit given the same
+    (W0, H0) up to collective reduction-order rounding."""
+    m, n = A.shape
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if H0 is None:
+        H0 = init_h(key, n, k, dtype=A.dtype)
+    if W0 is None:
+        W0 = init_w(jax.random.fold_in(key, 1), m, k, algo, dtype=A.dtype)
+
+    A = jax.device_put(A, grid.sharding(grid.spec_A()))
+    W = jax.device_put(W0, grid.sharding(grid.spec_W()))
+    Ht = jax.device_put(H0.T, grid.sharding(grid.spec_Ht()))
+
+    step = build_faun_step(grid, algo=algo, use_pallas=use_pallas,
+                           panel_dtype=panel_dtype)
+    normA_sq = jnp.sum(A.astype(jnp.float32) ** 2)  # once, like the paper
+
+    @functools.partial(jax.jit, static_argnames=("iters",),
+                       donate_argnums=(1, 2) if donate else ())
+    def run(A, W, Ht, normA_sq, iters: int):
+        def body(carry, _):
+            W, Ht = carry
+            W, Ht, sq = step(A, W, Ht, normA_sq)
+            rel = jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq)
+            return (W, Ht), rel
+
+        (W, Ht), rels = lax.scan(body, (W, Ht), None, length=iters)
+        return W, Ht, rels
+
+    W, Ht, rels = run(A, W, Ht, normA_sq, iters)
+    return NMFResult(W=W, H=Ht.T, rel_errors=rels, algo=algo, iters=iters)
+
+
+def lower_step(grid: FaunGrid, m: int, n: int, k: int, *, algo: str = "bpp",
+               dtype=jnp.float32, use_pallas: bool = False, panel_dtype=None):
+    """AOT-lower one FAUN iteration for dry-run / roofline analysis."""
+    step = build_faun_step(grid, algo=algo, use_pallas=use_pallas,
+                           panel_dtype=panel_dtype)
+    jstep = jax.jit(step, in_shardings=(
+        grid.sharding(grid.spec_A()), grid.sharding(grid.spec_W()),
+        grid.sharding(grid.spec_Ht()), None),
+        out_shardings=(grid.sharding(grid.spec_W()),
+                       grid.sharding(grid.spec_Ht()), None))
+    args = (jax.ShapeDtypeStruct((m, n), dtype),
+            jax.ShapeDtypeStruct((m, k), dtype),
+            jax.ShapeDtypeStruct((n, k), dtype),
+            jax.ShapeDtypeStruct((), jnp.float32))
+    return jstep.lower(*args)

@@ -1,0 +1,121 @@
+"""Naive-Parallel-AUNMF (paper Algorithm 2; Fairbanks et al. scheme).
+
+The communication-inefficient baseline the paper measures against:
+
+  * A is stored TWICE — once row-distributed (A_i of m/p × n) and once
+    column-distributed (Aⁱ of m × n/p);
+  * each half-iteration all-gathers the ENTIRE fixed factor
+    (O((m+n)k) words vs FAUN's O(√(mnk²/p)));
+  * every processor redundantly computes the k×k Gram of the full factor.
+
+We reproduce it faithfully (including the redundant Gram) on a 1-D mesh so
+benchmarks/bench_cost_table.py can show measured-HLO communication words of
+Naive vs FAUN, mirroring the paper's Figure 5/Table III comparison.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import algorithms
+from repro.core.aunmf import NMFResult, init_h, init_w
+from repro.util.compat import shard_map
+
+
+def naive_iteration(Arow, Acol, W_blk, Ht_blk, normA_sq, *, axis: str,
+                    algo: str):
+    """One iteration of Algorithm 2 on local blocks (inside shard_map).
+
+    Arow: (m/p, n)   row block of A          W_blk: (m/p, k)
+    Acol: (m, n/p)   column block of A       Ht_blk: (n/p, k)
+    """
+    def norm_psum(v):
+        return lax.psum(v, axis)
+
+    update_w, update_h = algorithms.get_update_fns(algo, norm_psum=norm_psum)
+
+    # --- W given H: all-gather whole H, redundant Gram (paper lines 3-4) ---
+    Ht = lax.all_gather(Ht_blk, axis, axis=0, tiled=True)     # (n, k)
+    HHt = Ht.T @ Ht                                           # redundant k×k
+    AHt_blk = Arow @ Ht                                       # (m/p, k)
+    W_blk = update_w(HHt, AHt_blk, W_blk)
+
+    # --- H given W: all-gather whole W, redundant Gram (lines 5-6) ---
+    W = lax.all_gather(W_blk, axis, axis=0, tiled=True)       # (m, k)
+    WtW = W.T @ W
+    WtA_t_blk = Acol.T @ W                                    # (n/p, k)
+    Ht_blk = update_h(WtW, WtA_t_blk, Ht_blk)
+
+    # --- error from byproducts ---
+    HHt_new = lax.psum(Ht_blk.T @ Ht_blk, axis)
+    cross = lax.psum(jnp.sum(WtA_t_blk.astype(jnp.float32)
+                             * Ht_blk.astype(jnp.float32)), axis)
+    quad = jnp.sum(WtW.astype(jnp.float32) * HHt_new.astype(jnp.float32))
+    sq_err = normA_sq - 2.0 * cross + quad
+    return W_blk, Ht_blk, sq_err
+
+
+def build_naive_step(mesh: Mesh, *, algo: str, axis: str = "p"):
+    body = functools.partial(naive_iteration, axis=axis, algo=algo)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None), P(None, axis), P(axis, None), P(axis, None),
+                  P()),
+        out_specs=(P(axis, None), P(axis, None), P()),
+    )
+
+
+def fit(A, k: int, *, mesh: Mesh, algo: str = "bpp", iters: int = 30,
+        key: jax.Array | None = None, H0: jax.Array | None = None,
+        W0: jax.Array | None = None, axis: str = "p") -> NMFResult:
+    m, n = A.shape
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if H0 is None:
+        H0 = init_h(key, n, k, dtype=A.dtype)
+    if W0 is None:
+        W0 = init_w(jax.random.fold_in(key, 1), m, k, algo, dtype=A.dtype)
+
+    sh = lambda spec: NamedSharding(mesh, spec)
+    Arow = jax.device_put(A, sh(P(axis, None)))
+    Acol = jax.device_put(A, sh(P(None, axis)))   # the duplicate copy
+    W = jax.device_put(W0, sh(P(axis, None)))
+    Ht = jax.device_put(H0.T, sh(P(axis, None)))
+
+    step = build_naive_step(mesh, algo=algo, axis=axis)
+    normA_sq = jnp.sum(A.astype(jnp.float32) ** 2)
+
+    @functools.partial(jax.jit, static_argnames=("iters",))
+    def run(Arow, Acol, W, Ht, normA_sq, iters: int):
+        def body(carry, _):
+            W, Ht = carry
+            W, Ht, sq = step(Arow, Acol, W, Ht, normA_sq)
+            rel = jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq)
+            return (W, Ht), rel
+
+        (W, Ht), rels = lax.scan(body, (W, Ht), None, length=iters)
+        return W, Ht, rels
+
+    W, Ht, rels = run(Arow, Acol, W, Ht, normA_sq, iters)
+    return NMFResult(W=W, H=Ht.T, rel_errors=rels, algo=algo, iters=iters)
+
+
+def lower_step(mesh: Mesh, m: int, n: int, k: int, *, algo: str = "bpp",
+               dtype=jnp.float32, axis: str = "p"):
+    step = build_naive_step(mesh, algo=algo, axis=axis)
+    sh = lambda spec: NamedSharding(mesh, spec)
+    jstep = jax.jit(step, in_shardings=(
+        sh(P(axis, None)), sh(P(None, axis)), sh(P(axis, None)),
+        sh(P(axis, None)), None),
+        out_shardings=(sh(P(axis, None)), sh(P(axis, None)), None))
+    args = (jax.ShapeDtypeStruct((m, n), dtype),
+            jax.ShapeDtypeStruct((m, n), dtype),
+            jax.ShapeDtypeStruct((m, k), dtype),
+            jax.ShapeDtypeStruct((n, k), dtype),
+            jax.ShapeDtypeStruct((), jnp.float32))
+    return jstep.lower(*args)

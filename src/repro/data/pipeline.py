@@ -1,0 +1,122 @@
+"""Deterministic synthetic data pipeline.
+
+Restart/elastic-safe by construction: ``batch = f(seed, step)`` is a pure
+function — no iterator state to checkpoint, and re-sharding to a different
+mesh replays identical global batches.  Two LM tasks:
+
+  * "copy":   second half of each sequence repeats the first half — a
+    learnable task (induction), so end-to-end training demonstrably reduces
+    loss (examples/train_lm.py).
+  * "markov": order-1 Markov chain with a fixed random transition table —
+    stationary cross-entropy floor, used for throughput benchmarking.
+
+Plus the paper's NMF matrix generators (dense low-rank, sparse
+Erdős–Rényi, video-like, bag-of-words-like) used by benchmarks/examples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ LM data
+
+@functools.partial(jax.jit, static_argnames=("batch", "seq", "vocab", "task"))
+def lm_batch(seed: jax.Array, step: jax.Array, *, batch: int, seq: int,
+             vocab: int, task: str = "copy"):
+    key = jax.random.fold_in(jax.random.PRNGKey(0) if seed is None else seed,
+                             step)
+    if task == "copy":
+        half = seq // 2
+        first = jax.random.randint(key, (batch, half), 0, vocab)
+        toks = jnp.concatenate([first, first], axis=1)
+        if toks.shape[1] < seq + 1:
+            pad = jax.random.randint(jax.random.fold_in(key, 1),
+                                     (batch, seq + 1 - toks.shape[1]), 0, vocab)
+            toks = jnp.concatenate([toks, pad], axis=1)
+    elif task == "markov":
+        k1, k2 = jax.random.split(key)
+        # fixed transition table from seed only (not step)
+        tkey = jax.random.PRNGKey(7)
+        logits = jax.random.normal(tkey, (vocab, vocab)) * 2.0
+        def gen(carry, k):
+            nxt = jax.random.categorical(k, logits[carry])
+            return nxt, nxt
+        x0 = jax.random.randint(k1, (batch,), 0, vocab)
+        _, seqs = jax.lax.scan(gen, x0, jax.random.split(k2, seq))
+        toks = jnp.concatenate([x0[:, None], seqs.T], axis=1)
+    else:
+        toks = jax.random.randint(key, (batch, seq + 1), 0, vocab)
+    return {"tokens": toks[:, :seq], "labels": toks[:, 1:seq + 1]}
+
+
+def make_lm_loader(cfg, shape, *, seed: int = 0, task: str = "copy",
+                   extra_specs=None):
+    """Returns batch_fn(step) producing the full input dict for an arch,
+    including modality stubs (deterministic from step)."""
+    def batch_fn(step):
+        step = jnp.asarray(step, jnp.int32)
+        b = lm_batch(jax.random.PRNGKey(seed), step,
+                     batch=shape.global_batch, seq=shape.seq_len,
+                     vocab=cfg.vocab, task=task)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 1), step)
+        if cfg.is_encdec:
+            b["enc_frames"] = 0.1 * jax.random.normal(
+                key, (shape.global_batch, shape.seq_len, cfg.d_model),
+                cfg.dtype_jnp)
+        if cfg.frontend == "image_patches":
+            b["img_embeds"] = 0.1 * jax.random.normal(
+                key, (shape.global_batch, cfg.num_image_tokens, cfg.d_model),
+                cfg.dtype_jnp)
+        return b
+    return batch_fn
+
+
+# ----------------------------------------------------------------- NMF data
+
+def lowrank_matrix(key, m, n, k, *, noise: float = 0.0, dtype=jnp.float32):
+    """Paper §6.1.1 dense synthetic: product of two uniform factors."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    W = jax.random.uniform(k1, (m, k), dtype)
+    H = jax.random.uniform(k2, (k, n), dtype)
+    A = W @ H
+    if noise:
+        A = A + noise * jax.random.uniform(k3, (m, n), dtype)
+    return A
+
+
+def erdos_renyi_matrix(key, m, n, density: float, dtype=jnp.float32):
+    """Paper §6.1.1 sparse synthetic (dense storage with zero mask here —
+    the distributed path is dense; flops accounting uses nnz)."""
+    k1, k2 = jax.random.split(key)
+    mask = jax.random.bernoulli(k1, density, (m, n))
+    vals = jax.random.uniform(k2, (m, n), dtype)
+    return jnp.where(mask, vals, 0.0)
+
+
+def video_like_matrix(key, m, n, *, rank: int = 20, motion: float = 0.05,
+                      dtype=jnp.float32):
+    """Static low-rank background + sparse 'moving object' outliers
+    (the paper's video use-case structure)."""
+    A = lowrank_matrix(key, m, n, rank, dtype=dtype)
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 1))
+    mask = jax.random.bernoulli(k1, motion, (m, n))
+    obj = jax.random.uniform(k2, (m, n), dtype)
+    return jnp.where(mask, A + obj, A)
+
+
+def bow_like_matrix(key, vocab, docs, *, topics: int = 20,
+                    doc_len: int = 100, dtype=jnp.float32):
+    """Bag-of-words-like: Zipfian word marginals mixed over latent topics
+    (stack-exchange-shaped, nonneg sparse counts)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    topic_word = jax.random.dirichlet(
+        k1, 0.05 * jnp.ones((vocab,)), (topics,))      # (T, V)
+    doc_topic = jax.random.dirichlet(
+        k2, 0.3 * jnp.ones((topics,)), (docs,))        # (D, T)
+    probs = doc_topic @ topic_word                      # (D, V)
+    counts = jax.random.poisson(k3, doc_len * probs).astype(dtype)
+    return counts.T                                     # (V, D): words × docs

@@ -1,0 +1,92 @@
+"""GPipe-style pipeline parallelism over a mesh axis via shard_map+ppermute.
+
+Stage s holds its slice of layer parameters (leading dim = n_stages,
+sharded over the "pp" axis).  Forward runs the classic GPipe schedule: at
+tick t, stage s processes microbatch (t − s); activations hop stage→stage
+with ``lax.ppermute``.  Everything is differentiable (ppermute's transpose
+is the reverse permute), so ``jax.grad`` through ``pipeline_apply`` yields
+1F1B-equivalent *math* with GPipe scheduling — bubble fraction
+(S−1)/(M+S−1), the standard trade documented in EXPERIMENTS.md.
+
+This composes with the FAUN/FSDP runtime: the "pod" axis of the production
+mesh can be repurposed as the pipeline axis (launch/train.py --pp), giving
+DP×TP×PP —the inter-pod links then carry only microbatch activations
+(boundary activations, not weights), the right traffic shape for slow
+cross-pod links.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.util.compat import shard_map
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x_micro, mesh: Mesh,
+                   axis: str = "pp"):
+    """Run microbatches through the pipeline.
+
+    stage_fn: (params_for_one_stage, x (mb, ...)) -> y (mb, ...)
+    stage_params: pytree, leading dim n_stages (sharded over `axis`)
+    x_micro: (n_micro, mb, ...) microbatched input (replicated over `axis`)
+
+    Returns y_micro (n_micro, mb, ...), replicated over `axis` (valid
+    outputs are produced on the last stage and broadcast via psum).
+    """
+    n_stages = mesh.shape[axis]
+
+    def body(params_loc, x_loc):
+        params_me = jax.tree.map(lambda p: p[0], params_loc)  # my stage slice
+        me = lax.axis_index(axis)
+        n_micro = x_loc.shape[0]
+        total = n_micro + n_stages - 1
+        mb_shape = x_loc.shape[1:]
+
+        fwd = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def tick(carry, t):
+            buf, outs = carry          # buf: (mb,...) activation entering me
+            mb_idx = jnp.clip(t - me, 0, n_micro - 1)
+            x_in = jnp.where(me == 0,
+                             lax.dynamic_index_in_dim(x_loc, mb_idx, 0,
+                                                      keepdims=False),
+                             buf)
+            y = stage_fn(params_me, x_in)
+            # last stage stores its (valid) result at microbatch t-(S-1)
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            valid = (me == n_stages - 1) & (t - (n_stages - 1) >= 0) \
+                & (t - (n_stages - 1) < n_micro)
+            outs = jnp.where(
+                valid,
+                lax.dynamic_update_index_in_dim(outs, y, out_idx, 0),
+                outs)
+            nxt = lax.ppermute(y, axis, fwd)
+            return (nxt, outs), None
+
+        buf0 = jnp.zeros(mb_shape, x_loc.dtype)
+        outs0 = jnp.zeros((n_micro,) + mb_shape, x_loc.dtype)
+        (_, outs), _ = lax.scan(tick, (buf0, outs0), jnp.arange(total))
+        # broadcast final-stage outputs to every stage
+        mask = (me == n_stages - 1).astype(outs.dtype)
+        return lax.psum(outs * mask, axis)
+
+    fn = shard_map(
+        body, mesh,
+        in_specs=(jax.tree.map(lambda _: P(axis), stage_params), P()),
+        out_specs=P(),
+    )
+    return fn(stage_params, x_micro)
+
+
+def make_pipelined_loss(stage_fn, loss_fn, mesh, axis: str = "pp"):
+    """loss over microbatches: mean of loss_fn(y_micro, target_micro)."""
+    def pipe_loss(stage_params, x_micro, t_micro):
+        y = pipeline_apply(stage_fn, stage_params, x_micro, mesh, axis)
+        return jnp.mean(jax.vmap(loss_fn)(y, t_micro))
+    return pipe_loss

@@ -1,0 +1,199 @@
+"""Sharding rules: parameter-path → PartitionSpec for the production meshes.
+
+Scheme (MaxText/Megatron conventions, ZeRO-3 style):
+
+  * "fsdp"  — the data axes ("pod","data"): shards the non-TP dimension of
+    every weight (parameters, grads, optimizer state all ~N/p per chip);
+    XLA's SPMD inserts the all-gather-on-use / reduce-scatter-on-grad pairs —
+    which is exactly the paper's FAUN panel schedule (DESIGN.md §4).
+  * "tp"    — the "model" axis: heads / ffn / vocab / expert dimension.
+  * replicated — norms, scalar gates, small biases.
+
+Rules match on the flattened parameter path (joined with "/"); the first
+regex wins.  Stacked per-group parameters (leading scan dim) get a leading
+None automatically (leaf.ndim == len(spec) + 1).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+FSDP = "__fsdp__"
+TP = "__tp__"
+
+# (path regex, spec template over the *trailing* dims of the leaf)
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed/tok$",            (TP, FSDP)),       # vocab × d_model
+    (r"embed/pos$",            (None, FSDP)),
+    (r"unembed$",              (FSDP, TP)),       # d_model × vocab
+    # attention
+    (r"(attn|xattn)/w[qkv]$",  (FSDP, TP)),
+    (r"(attn|xattn)/wo$",      (TP, FSDP)),
+    (r"(attn|xattn)/b[qkv]$",  (TP,)),
+    (r"(attn|xattn)/bo$",      (None,)),
+    # dense MLP / shared expert
+    (r"(mlp|shared)/wi(_gate|_up)?$", (FSDP, TP)),
+    (r"(mlp|shared)/wo$",      (TP, FSDP)),
+    (r"(mlp|shared)/bi$",      (TP,)),
+    (r"(mlp|shared)/bo$",      (None,)),
+    # MoE experts: E over tp (expert parallelism), D over fsdp
+    (r"moe/router$",           (FSDP, None)),
+    (r"moe/wi(_gate|_up)$",    (TP, FSDP, None)),
+    (r"moe/wo$",               (TP, None, FSDP)),
+    # Griffin / xLSTM
+    (r"(wy|wgate|wup)$",       (FSDP, TP)),
+    (r"(wout|wdown)$",         (TP, FSDP)),
+    (r"lru/w[ax]$",            (FSDP, TP)),
+    (r"lru/(lam|b[ax])$",      (TP,)),
+    (r"conv/w$",               (None, TP)),
+    (r"conv/b$",               (TP,)),
+    (r"cell/w[qkv]$",          (FSDP, TP)),
+    (r"cell/w[if]$",           (FSDP, None)),
+    (r"cell/(b[if]|ogate_scale)$", (None,)),
+    (r"cell/r[zifo]$",         (None,)),          # sLSTM recurrent: tiny
+    (r"ffn_(gate|up)$",        (FSDP, TP)),
+    (r"ffn_down$",             (TP, FSDP)),
+    (r"(w[zifo])$",            (FSDP, TP)),       # sLSTM input projections
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _resolve(template: Sequence, fsdp_axes, tp_axis) -> P:
+    out = []
+    for t in template:
+        if t == FSDP:
+            out.append(fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0])
+        elif t == TP:
+            out.append(tp_axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _divisible(dim: int, axes, mesh: Mesh) -> bool:
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return dim % size == 0
+
+
+def param_pspec(path, leaf, mesh: Mesh, *, fsdp_axes=("pod", "data"),
+                tp_axis="model") -> P:
+    """PartitionSpec for one parameter leaf; falls back axis-by-axis to
+    replication when a dimension isn't divisible by its mesh extent."""
+    fsdp_axes = tuple(a for a in fsdp_axes if a in mesh.shape)
+    ps = _path_str(path)
+    for pat, template in _RULES:
+        if re.search(pat, ps):
+            spec = list(_resolve(template, fsdp_axes, tp_axis))
+            break
+    else:
+        spec = [None] * leaf.ndim
+    # leading scan (group) dimension
+    while len(spec) < leaf.ndim:
+        spec.insert(0, None)
+    spec = spec[-leaf.ndim:] if len(spec) > leaf.ndim else spec
+    # divisibility fallback
+    for i, axes in enumerate(spec):
+        if not _divisible(leaf.shape[i], axes, mesh):
+            spec[i] = None
+    return P(*spec)
+
+
+def param_shardings(params, mesh: Mesh, **kw):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, mesh,
+                                                           **kw)),
+        params)
+
+
+# ----------------------------------------------------------- activations --
+
+def batch_pspec(mesh: Mesh, ndim: int, *, fsdp_axes=("pod", "data"),
+                batch_dim_size: int | None = None) -> P:
+    """Batch-sharded activation spec; drops axes the batch can't cover
+    (e.g. global_batch=1 long-context cells stay replicated)."""
+    axes = tuple(a for a in fsdp_axes if a in mesh.shape)
+    if batch_dim_size is not None:
+        keep = []
+        prod = 1
+        for a in axes:
+            if batch_dim_size % (prod * mesh.shape[a]) == 0:
+                keep.append(a)
+                prod *= mesh.shape[a]
+        axes = tuple(keep)
+    first = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return P(first, *([None] * (ndim - 1)))
+
+
+def make_constraint_fn(mesh: Mesh, *, fsdp_axes=("pod", "data"),
+                       tp_axis="model", seq_parallel: bool = False):
+    """Activation sharding-constraint hook for models.Runtime."""
+    axes = tuple(a for a in fsdp_axes if a in mesh.shape)
+    bspec = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    specs = {
+        "act_btd": P(bspec, tp_axis if seq_parallel else None, None),
+        "act_btv": P(bspec, None, tp_axis),
+    }
+
+    def constrain(x, kind):
+        spec = specs.get(kind)
+        if spec is None:
+            return x
+        # drop seq/vocab axes that don't divide
+        fixed = []
+        for dim, ax in zip(x.shape, spec):
+            fixed.append(ax if _divisible(dim, ax, mesh) else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*fixed)))
+
+    return constrain
+
+
+def cache_shardings(cache_spec, mesh: Mesh, batch: int, *,
+                    fsdp_axes=("pod", "data"), tp_axis="model"):
+    """Decode-cache shardings: batch over fsdp where divisible; the KV
+    length dimension of attention caches over tp (sequence-parallel KV —
+    each chip holds L/tp of every cache; decode attention becomes a
+    distributed flash-decode with a psum combine, inserted by SPMD)."""
+    axes = tuple(a for a in fsdp_axes if a in mesh.shape)
+    baxes = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def leaf_spec(path, leaf):
+        ps = _path_str(path)
+        spec = [None] * leaf.ndim
+        # batch dim = first dim matching the batch size (after any leading
+        # scan-group dim) that divides the fsdp extent
+        if baxes is not None:
+            for i, d in enumerate(leaf.shape):
+                if d == batch and _divisible(d, baxes, mesh):
+                    spec[i] = baxes
+                    break
+        if re.search(r"/(k|v|ek|ev)$", ps) and leaf.ndim >= 3:
+            ldim = leaf.ndim - 3          # (..., B, L, KH, hd)
+            if spec[ldim] is None and _divisible(leaf.shape[ldim], tp_axis,
+                                                 mesh):
+                spec[ldim] = tp_axis
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_spec)

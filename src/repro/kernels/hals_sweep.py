@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: sequential fast-HALS column sweep (paper eq. (5)).
+
+    for i in 0..k-1:   x^i ← [x^i + (R^i − X G^i)/G_ii]_+
+
+The sweep is inherently sequential in i (later columns must see earlier
+updates — HALS is 2k-block BCD), but rows are independent, so the kernel
+grids over row panels and keeps each (block_r × k) X-tile *and* the k×k G
+in VMEM for the entire k-column loop: one HBM read of X and R, one write of
+X, versus k reads/writes for a naive column-at-a-time implementation —
+an O(k)× HBM-traffic reduction for the HALS LUC.
+
+The matvec X·G^i uses the MXU via a (block_r × k)·(k × 1) contraction; for
+MXU-aligned k (ops.py pads) the loop runs k rank-1-ish steps entirely out
+of VMEM.  This is the H-step (unnormalised) form; the W-step's per-column
+global normalisation is a cross-device psum and stays in core/algorithms.py
+(the paper charges it as HALS's extra k·log p latency — no kernel can help).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-16
+
+
+def _hals_kernel(x_ref, g_ref, r_ref, o_ref, *, k: int):
+    X = x_ref[...].astype(jnp.float32)
+    G = g_ref[...].astype(jnp.float32)
+    R = r_ref[...].astype(jnp.float32)
+
+    def col(i, X):
+        gcol = jax.lax.dynamic_slice_in_dim(G, i, 1, axis=1)       # (k, 1)
+        gii = jnp.maximum(jax.lax.dynamic_slice(G, (i, i), (1, 1))[0, 0], _EPS)
+        xi_old = jax.lax.dynamic_slice_in_dim(X, i, 1, axis=1)     # (br, 1)
+        ri = jax.lax.dynamic_slice_in_dim(R, i, 1, axis=1)
+        xg = jax.lax.dot(X, gcol, preferred_element_type=jnp.float32)
+        xi = jnp.maximum(xi_old + (ri - xg) / gii, 0.0)
+        return jax.lax.dynamic_update_slice_in_dim(X, xi, i, axis=1)
+
+    X = jax.lax.fori_loop(0, k, col, X)
+    o_ref[...] = X.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def hals_sweep(X: jax.Array, G: jax.Array, R: jax.Array, *,
+               block_r: int = 512, interpret: bool = False) -> jax.Array:
+    r, k = X.shape
+    assert G.shape == (k, k) and R.shape == (r, k) and r % block_r == 0
+    return pl.pallas_call(
+        functools.partial(_hals_kernel, k=k),
+        grid=(r // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+            pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, k), X.dtype),
+        interpret=interpret,
+    )(X, G, R)

@@ -1,0 +1,125 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+  * shape legalisation — pad rows to the block multiple and k to the MXU
+    lane width (128) with zeros (all four kernels are zero-padding-safe by
+    construction; see each module's docstring), then slice back;
+  * backend dispatch — compiled Pallas on TPU, interpret=True elsewhere
+    (the container is CPU-only; interpret mode executes the same kernel
+    body in Python for correctness validation);
+  * block-size heuristics sized for ~16 MB VMEM working sets.
+
+These are the ``local_mm`` / ``local_gram`` hooks of core/faun.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gram as _gram
+from repro.kernels import hals_sweep as _hals
+from repro.kernels import mu_update as _mu
+from repro.kernels import ts_matmul as _ts
+
+LANE = 128          # MXU/VREG lane width: pad k to this multiple
+_MAX_INTERP_BLOCK = 64   # keep interpret-mode (pure python) loops small
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _block(size: int, target: int) -> int:
+    """Largest divisor of `size` that is <= target (after padding, size is a
+    multiple of LANE or the target itself, so this terminates quickly)."""
+    b = min(target, size)
+    while size % b:
+        b -= 1
+    return b
+
+
+def gram(X: jax.Array, *, block_m: int | None = None) -> jax.Array:
+    """XᵀX (fp32) for arbitrary (m, k)."""
+    interpret = not _on_tpu()
+    m, k = X.shape
+    Xp = _pad_to(_pad_to(X, 1, LANE), 0, 8)
+    bm = block_m or _block(Xp.shape[0], _MAX_INTERP_BLOCK if interpret else 512)
+    out = _gram.gram(Xp, block_m=bm, interpret=interpret)
+    return out[:k, :k]
+
+
+def ts_matmul(A: jax.Array, B: jax.Array, *, block_m: int | None = None,
+              block_n: int | None = None) -> jax.Array:
+    """A @ B (fp32) for arbitrary (m, n) × (n, k)."""
+    interpret = not _on_tpu()
+    m, n = A.shape
+    k = B.shape[1]
+    Ap = _pad_to(_pad_to(A, 0, 8), 1, LANE)
+    Bp = _pad_to(B, 1, LANE)
+    if Bp.shape[0] != Ap.shape[1]:   # match B's rows to A's padded cols
+        Bp = jnp.pad(Bp, ((0, Ap.shape[1] - Bp.shape[0]), (0, 0)))
+    cap = _MAX_INTERP_BLOCK if interpret else None
+    bm = block_m or _block(Ap.shape[0], cap or 256)
+    bn = block_n or _block(Ap.shape[1], cap or 512)
+    out = _ts.ts_matmul(Ap, Bp, block_m=bm, block_n=bn, interpret=interpret)
+    return out[:m, :k]
+
+
+def ts_matmul_t(A: jax.Array, B: jax.Array, *, block_m: int | None = None,
+                block_n: int | None = None) -> jax.Array:
+    """Aᵀ @ B (fp32) for arbitrary (m, n) × (m, k)."""
+    interpret = not _on_tpu()
+    n = A.shape[1]
+    k = B.shape[1]
+    Ap = _pad_to(_pad_to(A, 0, LANE), 1, 8)
+    Bp = _pad_to(_pad_to(B, 1, LANE), 0, LANE)
+    if Bp.shape[0] != Ap.shape[0]:
+        Bp = jnp.pad(Bp, ((0, Ap.shape[0] - Bp.shape[0]), (0, 0)))
+    cap = _MAX_INTERP_BLOCK if interpret else None
+    bm = block_m or _block(Ap.shape[0], cap or 512)
+    bn = block_n or _block(Ap.shape[1], cap or 256)
+    out = _ts.ts_matmul_t(Ap, Bp, block_m=bm, block_n=bn, interpret=interpret)
+    return out[:n, :k]
+
+
+def mu_update(X: jax.Array, G: jax.Array, R: jax.Array, *,
+              block_r: int | None = None) -> jax.Array:
+    """Fused MU LUC for arbitrary (r, k)."""
+    interpret = not _on_tpu()
+    r, k = X.shape
+    Xp = _pad_to(_pad_to(X, 1, LANE), 0, 8)
+    Gp = _pad_to(_pad_to(G, 0, LANE), 1, LANE)
+    Rp = _pad_to(_pad_to(R, 1, LANE), 0, 8)
+    br = block_r or _block(Xp.shape[0], _MAX_INTERP_BLOCK if interpret else 512)
+    out = _mu.mu_update(Xp, Gp, Rp, block_r=br, interpret=interpret)
+    return out[:r, :k]
+
+
+def hals_sweep(X: jax.Array, G: jax.Array, R: jax.Array, *,
+               block_r: int | None = None) -> jax.Array:
+    """Fused HALS sweep (H-step form) for arbitrary (r, k).
+
+    NOTE: k is *not* padded here — padding G's diagonal with zeros would
+    change which columns the sweep visits; instead the kernel loops exactly
+    k columns and only rows are padded.
+    """
+    interpret = not _on_tpu()
+    r, k = X.shape
+    Xp = _pad_to(X, 0, 8)
+    Rp = _pad_to(R, 0, 8)
+    br = block_r or _block(Xp.shape[0], _MAX_INTERP_BLOCK if interpret else 512)
+    out = _hals.hals_sweep(Xp, G, Rp, block_r=br, interpret=interpret)
+    return out[:r, :k]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Tests sweep shapes/dtypes and assert the kernels (interpret=True on CPU)
+match these to tolerance; on TPU the same asserts run against the compiled
+kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-16
+
+
+def gram(X: jax.Array) -> jax.Array:
+    """XᵀX with fp32 accumulation."""
+    return jax.lax.dot(X.T, X, preferred_element_type=jnp.float32)
+
+
+def ts_matmul(A: jax.Array, B: jax.Array) -> jax.Array:
+    """A @ B, B tall-skinny (n × k), fp32 accumulation."""
+    return jax.lax.dot(A, B, preferred_element_type=jnp.float32)
+
+
+def ts_matmul_t(A: jax.Array, B: jax.Array) -> jax.Array:
+    """Aᵀ @ B without materialising Aᵀ."""
+    return jax.lax.dot_general(
+        A, B, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def mu_update(X: jax.Array, G: jax.Array, R: jax.Array) -> jax.Array:
+    """X ⊙ R / (X G + ε) (paper eq. (3))."""
+    denom = jax.lax.dot(X, G, preferred_element_type=jnp.float32) + _EPS
+    return (X.astype(jnp.float32) * (R.astype(jnp.float32) / denom)).astype(X.dtype)
+
+
+def hals_sweep(X: jax.Array, G: jax.Array, R: jax.Array) -> jax.Array:
+    """Sequential fast-HALS column sweep, H-step form (no normalisation):
+
+        x^i ← [x^i + (R^i − X G^i)/G_ii]_+   for i = 0..k-1 in order.
+    """
+    k = G.shape[0]
+    X = X.astype(jnp.float32)
+    G = G.astype(jnp.float32)
+    R = R.astype(jnp.float32)
+
+    def col(i, X):
+        gii = jnp.maximum(G[i, i], _EPS)
+        xi = X[:, i] + (R[:, i] - X @ G[:, i]) / gii
+        return X.at[:, i].set(jnp.maximum(xi, 0.0))
+
+    return jax.lax.fori_loop(0, k, col, X)

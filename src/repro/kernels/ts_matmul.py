@@ -1,0 +1,86 @@
+"""Pallas TPU kernels: tall-skinny matrix products V = A·B and Y = Aᵀ·B.
+
+These are the paper's lines 6/12 hot spots — the only operations that touch
+the (huge) local data block A_ij.  The skinny operand (k columns, k ≪ m, n)
+stays VMEM-resident per grid row while A streams through once:
+
+  * ``ts_matmul``  : (bm × bn) A-tiles × (bn × k) B-tiles, accumulate over n;
+  * ``ts_matmul_t``: (bm × bn) A-tiles × (bm × k) B-tiles, accumulate over m,
+    contracting A's *row* dimension so Aᵀ is never materialised in HBM
+    (the H-step needs AᵀW; a physical transpose of A would double the
+    iteration's HBM traffic).
+
+Accumulation is fp32 in VMEM (out tile revisited across the contraction
+grid dimension, which is innermost so the output block stays resident).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ab_kernel(a_ref, b_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot(a_ref[...], b_ref[...],
+                              preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def ts_matmul(A: jax.Array, B: jax.Array, *, block_m: int = 256,
+              block_n: int = 512, interpret: bool = False) -> jax.Array:
+    """A (m, n) @ B (n, k) -> (m, k) fp32."""
+    m, n = A.shape
+    n2, k = B.shape
+    assert n == n2 and m % block_m == 0 and n % block_n == 0, (A.shape, B.shape)
+    return pl.pallas_call(
+        _ab_kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=interpret,
+    )(A, B)
+
+
+def _atb_kernel(a_ref, b_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def ts_matmul_t(A: jax.Array, B: jax.Array, *, block_m: int = 512,
+                block_n: int = 256, interpret: bool = False) -> jax.Array:
+    """Aᵀ·B for A (m, n), B (m, k) -> (n, k) fp32, streaming A untransposed."""
+    m, n = A.shape
+    m2, k = B.shape
+    assert m == m2 and m % block_m == 0 and n % block_n == 0, (A.shape, B.shape)
+    return pl.pallas_call(
+        _atb_kernel,
+        grid=(n // block_n, m // block_m),
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (j, i)),
+            pl.BlockSpec((block_m, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=interpret,
+    )(A, B)

@@ -1,0 +1,41 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (spec requirement).  The dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before importing jax;
+everything else sees the real device set.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.util.compat import make_mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (one v5e pod's worth of chips) or 2×16×16 (two pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_faun_production_grid(*, multi_pod: bool = False):
+    """The same chips arranged as the paper's pr×pc processor grid for the
+    NMF workloads: row axis = ("pod","pr"), column axis = "pc"."""
+    from repro.core.faun import FaunGrid
+    if multi_pod:
+        mesh = make_mesh((2, 16, 16), ("pod", "pr", "pc"))
+        return FaunGrid(mesh=mesh, row_axes=("pod", "pr"), col_axis="pc")
+    mesh = make_mesh((16, 16), ("pr", "pc"))
+    return FaunGrid(mesh=mesh, row_axes=("pr",), col_axis="pc")
+
+
+def make_test_mesh(n: int | None = None, axes=("data", "model"),
+                   shape=None):
+    """Small mesh over whatever devices exist (tests/examples)."""
+    devs = jax.devices()
+    n = n or len(devs)
+    if shape is None:
+        shape = (n // 2, 2) if n % 2 == 0 and n > 1 else (n, 1)
+    return make_mesh(shape, axes, devices=devs[: shape[0] * shape[1]])

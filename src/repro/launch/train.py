@@ -1,0 +1,96 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+
+Full-size configs target the production mesh (run under a real TPU runtime
+or the dry-run); --reduced runs the same code path end-to-end on whatever
+devices exist (CPU smoke / CI).  Supports restart (auto-restores the latest
+checkpoint), straggler logging, and optional pipeline parallelism over the
+"pod" axis (--pp, demonstration path).
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cb
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import make_lm_loader
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.models import lm
+from repro.optim.optimizers import OptConfig
+from repro.train import steps as steps_lib
+from repro.train.loop import LoopConfig, train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--task", default="copy")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "test", "single", "multipod"],
+                    default="none")
+    ap.add_argument("--log-level", default="INFO")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=args.log_level,
+                        format="%(asctime)s %(name)s %(message)s")
+
+    cfg = (cb.get_reduced_config(args.arch) if args.reduced
+           else cb.get_config(args.arch))
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    opt_cfg = OptConfig(kind=cfg.optimizer, lr=args.lr,
+                        warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps)
+
+    if args.mesh == "none":
+        mesh = None
+    elif args.mesh == "test":
+        mesh = make_test_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multipod"))
+
+    rt = steps_lib.make_runtime(mesh)
+    state = steps_lib.init_train_state(cfg, opt_cfg, jax.random.PRNGKey(args.seed))
+    if mesh is not None:
+        ssh = steps_lib.state_shardings(
+            jax.eval_shape(lambda: state), mesh)
+        state = jax.device_put(state, ssh)
+        step_fn = jax.jit(steps_lib.make_train_step(cfg, opt_cfg, rt=rt),
+                          in_shardings=(ssh, None), out_shardings=(ssh, None),
+                          donate_argnums=(0,))
+    else:
+        step_fn = jax.jit(steps_lib.make_train_step(cfg, opt_cfg, rt=rt),
+                          donate_argnums=(0,))
+
+    batch_fn = make_lm_loader(cfg, shape, seed=args.seed, task=args.task)
+    loop_cfg = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                          ckpt_dir=args.ckpt_dir)
+
+    # restart path: restore if a checkpoint exists
+    from repro.checkpoint import checkpoint as ckpt_lib
+    restored, rstep = ckpt_lib.restore(args.ckpt_dir, state)
+    if restored is not None:
+        print(f"resuming from step {rstep}")
+        state = restored
+
+    state, history = train(state, step_fn, batch_fn, loop_cfg)
+    print(f"done: {len(history)} steps, "
+          f"loss {history[0]['loss']:.4f} -> {history[-1]['loss']:.4f}")
+    return history
+
+
+if __name__ == "__main__":
+    main()

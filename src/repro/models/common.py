@@ -1,0 +1,104 @@
+"""Shared model building blocks: norms, positions, initializers, dtypes."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ----------------------------------------------------------------- init utils
+
+def dense_init(key, in_dim, out_dim, dtype, scale: float | None = None):
+    scale = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab, dim, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Deterministic fold-in key dispenser so init order can't skew seeds."""
+
+    def __init__(self, key):
+        self._key = key
+        self._i = 0
+
+    def __call__(self):
+        self._i += 1
+        return jax.random.fold_in(self._key, self._i)
+
+
+# ----------------------------------------------------------------------- norms
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(key, dim, dtype, kind: str):
+    del key
+    if kind == "rms":
+        return {"scale": jnp.zeros((dim,), dtype)}          # stored as (1+s)
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def apply_norm(p, x, kind: str):
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+# ------------------------------------------------------------------ positions
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding over the last dim of x (..., T, n_heads, head_dim)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (..., T, half)
+    ang = ang[..., None, :]                                    # broadcast heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int, dtype=jnp.float32):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = pos * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# -------------------------------------------------------------------- helpers
+
+def gelu(x):
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)
+
+
+def silu(x):
+    return (x.astype(jnp.float32) * jax.nn.sigmoid(x.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,190 @@
+"""Top-level model: embeddings, stacks, loss, and the three entry points
+(train_step's loss_fn, prefill, decode) shared by all 10 architectures.
+
+Modality frontends are stubs per the assignment: ``[audio]`` models take
+precomputed frame embeddings (B, S_enc, D); ``[vlm]`` models take
+precomputed patch embeddings (B, N_img, D).  ``input_specs`` below is the
+single source of truth for every (arch × shape) dry-run cell's inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.common import (KeyGen, apply_norm, dense_init, embed_init,
+                                 init_norm, sinusoidal_positions)
+
+Params = dict[str, Any]
+
+
+# ------------------------------------------------------------------- params
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    kg = KeyGen(key)
+    pdt = cfg.param_dtype_jnp
+    p: Params = {"embed": {"tok": embed_init(kg(), cfg.vocab, cfg.d_model, pdt)}}
+    if cfg.pos_kind == "learned":
+        p["embed"]["pos"] = embed_init(kg(), cfg.max_learned_pos, cfg.d_model, pdt)
+    if cfg.is_encdec:
+        p["enc"] = tf.init_stack(kg(), cfg, cfg.encoder_pattern,
+                                 cfg.encoder_layers)
+        p["enc_norm"] = init_norm(kg(), cfg.d_model, pdt, cfg.norm_kind)
+    p["dec"] = tf.init_stack(kg(), cfg, cfg.layer_pattern, cfg.n_layers)
+    p["final_norm"] = init_norm(kg(), cfg.d_model, pdt, cfg.norm_kind)
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(kg(), cfg.d_model, cfg.vocab, pdt)
+    return p
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# -------------------------------------------------------------- embeddings
+
+def embed_tokens(p, cfg, tokens):
+    x = p["embed"]["tok"][tokens].astype(cfg.dtype_jnp)
+    if cfg.pos_kind == "learned":
+        idx = jnp.arange(tokens.shape[1])
+        x = x + p["embed"]["pos"][idx][None].astype(x.dtype)
+    elif cfg.pos_kind == "sinusoidal":
+        pe = sinusoidal_positions(tokens.shape[1], cfg.d_model, x.dtype)
+        x = x + pe[None]
+    return x
+
+
+def _decode_pos_embed(p, cfg, x, pos):
+    """Positional contribution for a single decode position."""
+    if cfg.pos_kind == "learned":
+        return x + p["embed"]["pos"][pos][None, None].astype(x.dtype)
+    if cfg.pos_kind == "sinusoidal":
+        half = cfg.d_model // 2
+        freqs = jnp.exp(-jnp.log(10000.0)
+                        * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+        ang = pos.astype(jnp.float32) * freqs
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+        return x + pe.astype(x.dtype)
+    return x
+
+
+def unembed(p, cfg, x):
+    w = (p["embed"]["tok"].T if cfg.tie_embeddings else p["unembed"])
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def _encode(p, cfg, enc_inputs, rt):
+    """Encoder for enc-dec (audio) models: frames (B, S_enc, D) -> states."""
+    x = enc_inputs.astype(cfg.dtype_jnp)
+    if cfg.pos_kind in ("sinusoidal", "learned"):
+        pe = sinusoidal_positions(x.shape[1], cfg.d_model, x.dtype)
+        x = x + pe[None]
+    x, _, _ = tf.apply_stack(p["enc"], x, cfg, cfg.encoder_pattern,
+                             cfg.encoder_layers, mode="train", rt=rt)
+    return apply_norm(p["enc_norm"], x, cfg.norm_kind)
+
+
+def _context(p, cfg, batch, rt):
+    """Cross-attention context from the modality stub, if any."""
+    if cfg.is_encdec:
+        return _encode(p, cfg, batch["enc_frames"], rt)
+    if cfg.frontend == "image_patches":
+        return batch["img_embeds"].astype(cfg.dtype_jnp)
+    return None
+
+
+# ------------------------------------------------------------ entry points
+
+def forward(p, cfg, batch, *, rt=tf.NULL_RT, caches=None):
+    """Full-sequence forward.  batch: {tokens, [enc_frames|img_embeds]}.
+    Returns (logits fp32 (B,S,V), new_caches, aux)."""
+    ctx = _context(p, cfg, batch, rt)
+    x = embed_tokens(p, cfg, batch["tokens"])
+    x = rt.shard(x, "act_btd")
+    x, new_caches, aux = tf.apply_stack(
+        p["dec"], x, cfg, cfg.layer_pattern, cfg.n_layers,
+        mode="prefill" if caches is not None else "train",
+        caches=caches, ctx=ctx, rt=rt)
+    x = apply_norm(p["final_norm"], x, cfg.norm_kind)
+    logits = unembed(p, cfg, x)
+    return rt.shard(logits, "act_btv"), new_caches, aux
+
+
+def loss_fn(p, cfg, batch, *, rt=tf.NULL_RT):
+    """Next-token cross entropy (+ MoE aux).  batch needs tokens, labels."""
+    logits, _, aux = forward(p, cfg, batch, rt=rt)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+def init_caches(cfg, batch_size: int, kv_len: int, enc_len: int = 0):
+    return tf.init_stack_cache(cfg, cfg.layer_pattern, cfg.n_layers,
+                               batch_size, kv_len, enc_len)
+
+
+def prefill(p, cfg, batch, kv_len: int, *, rt=tf.NULL_RT):
+    """Run the prompt, building decode caches.  Returns (logits, caches)."""
+    B, S = batch["tokens"].shape
+    ctx = _context(p, cfg, batch, rt)
+    enc_len = ctx.shape[1] if ctx is not None else 0
+    caches = init_caches(cfg, B, kv_len, enc_len)
+    logits, caches, _ = forward(p, cfg, batch, rt=rt, caches=caches)
+    return logits, caches
+
+
+def decode_step(p, cfg, caches, tokens, pos, *, ctx=None, rt=tf.NULL_RT):
+    """One token for every sequence.  tokens (B, 1) int32, pos scalar int32.
+    Returns (logits (B, 1, V) fp32, new_caches)."""
+    x = p["embed"]["tok"][tokens].astype(cfg.dtype_jnp)
+    x = _decode_pos_embed(p, cfg, x, pos)
+    x, new_caches, _ = tf.apply_stack(
+        p["dec"], x, cfg, cfg.layer_pattern, cfg.n_layers,
+        mode="decode", caches=caches, pos=pos, ctx=ctx, rt=rt)
+    x = apply_norm(p["final_norm"], x, cfg.norm_kind)
+    return unembed(p, cfg, x), new_caches
+
+
+# ------------------------------------------------------------- input specs
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    train:   tokens+labels (B, S)  [+ modality context]
+    prefill: tokens (B, S)         [+ modality context]
+    decode:  tokens (B, 1) + pos scalar (+ caches built via eval_shape)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    act = functools.partial(jax.ShapeDtypeStruct, dtype=cfg.dtype_jnp)
+
+    def modality(seq_len):
+        extra = {}
+        if cfg.is_encdec:               # audio frames, same length as text
+            extra["enc_frames"] = act((B, seq_len, cfg.d_model))
+        if cfg.frontend == "image_patches":
+            extra["img_embeds"] = act((B, cfg.num_image_tokens, cfg.d_model))
+        return extra
+
+    if shape.kind == "train":
+        return {"tokens": i32((B, S)), "labels": i32((B, S)), **modality(S)}
+    if shape.kind == "prefill":
+        return {"tokens": i32((B, S)), **modality(S)}
+    if shape.kind == "decode":
+        enc_len = S if cfg.is_encdec else (
+            cfg.num_image_tokens if cfg.frontend == "image_patches" else 0)
+        cache_spec = jax.eval_shape(
+            lambda: init_caches(cfg, B, S, enc_len))
+        # cross-attention KV (whisper/vision) lives pre-projected in caches,
+        # so decode needs no ctx input.
+        return {"tokens": i32((B, 1)), "pos": i32(()), "caches": cache_spec}
+    raise ValueError(shape.kind)

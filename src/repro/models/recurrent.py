@@ -1,0 +1,315 @@
+"""Recurrent sequence-mixing cells: RG-LRU (Griffin), mLSTM and sLSTM (xLSTM).
+
+TPU-native formulations:
+
+* **RG-LRU** — input-dependent diagonal linear recurrence
+  ``h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)``.  Parallelised over
+  sequence with ``lax.associative_scan`` on the monoid
+  ``(a₂,b₂)∘(a₁,b₁) = (a₁a₂, a₂b₁+b₂)`` in fp32 — O(S log S) work, O(S)
+  memory, exactly the Griffin paper's scan (arXiv:2402.19427 §2.4).
+
+* **mLSTM** — matrix-memory cell ``C_t = f_t C_{t-1} + i_t v_t k_tᵀ`` with
+  exponential gating and max-state stabilisation (arXiv:2405.04517 App. A).
+  Training/prefill run the *chunked parallel form*: intra-chunk attention-like
+  (L×L) matmuls on the MXU + an inter-chunk scan over (C, n, m) summaries —
+  O(S·L) time, constant state, the standard linear-attention chunking (GLA
+  style).  Decode is the O(1) recurrent step.  Both forms share one gate
+  convention and are cross-validated in tests.
+
+* **sLSTM** — scalar-memory cell with recurrent gate mixing
+  (R·h_{t-1} terms, block-diagonal per head): inherently sequential, so it
+  runs as ``lax.scan`` over time (the xLSTM paper makes the same point —
+  sLSTM is not parallelisable; its flops are tiny at these widths).
+
+All recurrences compute in fp32 regardless of activation dtype.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import KeyGen, dense_init
+
+
+# ============================================================= temporal conv
+
+def init_conv1d(key, dim, width, dtype):
+    return {"w": (jax.random.normal(key, (width, dim), jnp.float32)
+                  * width ** -0.5).astype(dtype),
+            "b": jnp.zeros((dim,), dtype)}
+
+
+def conv1d_causal(p, x, state=None):
+    """Depthwise causal conv.  x (B,S,D).  state (B,width-1,D) for decode.
+
+    Returns (y, new_state)."""
+    width = p["w"].shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)           # (B, S+w-1, D)
+    y = sum(xp[:, i:i + x.shape[1], :] * p["w"][i].astype(x.dtype)
+            for i in range(width))
+    y = y + p["b"].astype(x.dtype)
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return y, new_state
+
+
+# =================================================================== RG-LRU
+
+def init_rglru(key, dim, dtype):
+    kg = KeyGen(key)
+    # Λ init so a = exp(-c·softplus(Λ)) lands in [0.9, 0.999] (Griffin §2.4).
+    u = jax.random.uniform(kg(), (dim,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / 8.0))        # softplus⁻¹
+    return {
+        "lam": lam.astype(jnp.float32),
+        "wa": dense_init(kg(), dim, dim, dtype),
+        "ba": jnp.zeros((dim,), dtype),
+        "wx": dense_init(kg(), dim, dim, dtype),
+        "bx": jnp.zeros((dim,), dtype),
+    }
+
+
+def _rglru_coeffs(p, x, c: float):
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ p["wa"].astype(jnp.float32)
+                       + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ p["wx"].astype(jnp.float32)
+                       + p["bx"].astype(jnp.float32))
+    log_a = -c * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    # β = √(1−a²) computed stably via expm1: 1−a² = −expm1(2·log_a)
+    beta = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    b = beta * (i * x32)
+    return a, b
+
+
+def rglru_scan(p, x, *, c: float = 8.0, h0=None):
+    """x (B,S,D) -> (y (B,S,D), h_last (B,D)). Parallel associative scan."""
+    a, b = _rglru_coeffs(p, x, c)
+    if h0 is not None:
+        # Fold the carried state into the first step's offset.
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    A, Bc = lax.associative_scan(combine, (a, b), axis=1)
+    h = Bc                                            # h_t given h_{-1}=0
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_step(p, x_t, h, *, c: float = 8.0):
+    """One decode step.  x_t (B,D), h (B,D) fp32 -> (y_t, h_new)."""
+    a, b = _rglru_coeffs(p, x_t[:, None, :], c)
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(x_t.dtype), h_new
+
+
+# ==================================================================== mLSTM
+
+def init_mlstm_cell(key, d_inner, n_heads, dtype):
+    kg = KeyGen(key)
+    hd = d_inner // n_heads
+    return {
+        "wq": dense_init(kg(), d_inner, d_inner, dtype),
+        "wk": dense_init(kg(), d_inner, d_inner, dtype),
+        "wv": dense_init(kg(), d_inner, d_inner, dtype),
+        "wi": dense_init(kg(), d_inner, n_heads, dtype, scale=0.02),
+        "bi": jnp.zeros((n_heads,), jnp.float32),
+        "wf": dense_init(kg(), d_inner, n_heads, dtype, scale=0.02),
+        "bf": jnp.linspace(3.0, 6.0, n_heads).astype(jnp.float32),
+        "ogate_scale": jnp.ones((n_heads, hd), jnp.float32),
+    }
+
+
+def _mlstm_qkvg(p, x, n_heads):
+    B, S, Din = x.shape
+    hd = Din // n_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, n_heads, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, n_heads, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, n_heads, hd)
+    x32 = x.astype(jnp.float32)
+    ig = x32 @ p["wi"].astype(jnp.float32) + p["bi"]       # (B,S,H)
+    fg = x32 @ p["wf"].astype(jnp.float32) + p["bf"]       # (B,S,H)
+    # heads-major fp32
+    tr = lambda t: t.astype(jnp.float32).transpose(0, 2, 1, 3)
+    return tr(q) * hd ** -0.5, tr(k), tr(v), \
+        ig.transpose(0, 2, 1), fg.transpose(0, 2, 1)
+
+
+def mlstm_chunked(p, x, n_heads: int, chunk: int = 256, state=None):
+    """Chunked-parallel mLSTM.  x (B,S,Din) -> (y (B,S,Din), state).
+
+    state = (C (B,H,dh,dh), n (B,H,dh), m (B,H)).
+    """
+    B, S, Din = x.shape
+    H = n_heads
+    hd = Din // H
+    q, k, v, ig, fg = _mlstm_qkvg(p, x, H)           # (B,H,S,dh) / (B,H,S)
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        # State-safe padding: ĩ=-inf (no input contribution), f̃=+inf (no
+        # decay), so padded steps leave the carried state untouched; their
+        # outputs are sliced off below.
+        zpad = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        q, k, v = (jnp.pad(t, zpad) for t in (q, k, v))
+        ig = jnp.pad(ig, [(0, 0), (0, 0), (0, pad)], constant_values=-1e30)
+        fg = jnp.pad(fg, [(0, 0), (0, 0), (0, pad)], constant_values=1e30)
+    Sp = S + pad
+    nchunks = Sp // L
+    resh = lambda t: t.reshape(B, H, nchunks, L, *t.shape[3:]).swapaxes(0, 2) \
+        .swapaxes(1, 2)  # (nchunks, B, H, L, ...)
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    igs, fgs = resh(ig), resh(fg)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    logsig = jax.nn.log_sigmoid
+
+    def chunk_step(carry, inp):
+        # Derivation: with b_τ = Σ_{s≤τ} log f_s (inclusive cumsum), the true
+        # (unstabilised) state satisfies
+        #   C_τ = e^{b_τ} C_chunk0 + Σ_{s≤τ} e^{b_τ − b_s + ĩ_s} k_s v_sᵀ
+        # (the input at s is NOT decayed by f_s itself).  The carried state
+        # (C, n) is stabilised by e^{−m}; per-token stabiliser
+        #   m_τ = b_τ + max(m_prev, max_{s≤τ}(ĩ_s − b_s)).
+        C, n, m = carry
+        qc, kc, vc, ic, fc = inp                      # (B,H,L,·)
+        lf = logsig(fc)                               # log forget gates
+        bcum = jnp.cumsum(lf, axis=-1)                # b_τ, (B,H,L)
+        btot = bcum[..., -1]
+        src = ic - bcum                               # ĩ_s − b_s
+        m_intra = jax.lax.cummax(src, axis=src.ndim - 1)
+        m_tok = bcum + jnp.maximum(m[..., None], m_intra)
+        # inter-chunk: e^{b_τ + m_prev − m_τ} (qᵀ C)
+        w_inter = jnp.exp(bcum + m[..., None] - m_tok)   # (B,H,L)
+        h_inter = jnp.einsum("bhld,bhde->bhle", qc, C) * w_inter[..., None]
+        l_inter = jnp.einsum("bhld,bhd->bhl", qc, n) * w_inter
+        # intra-chunk: D_τs = e^{b_τ + (ĩ_s − b_s) − m_τ} for s ≤ τ
+        logD = bcum[..., :, None] + src[..., None, :] - m_tok[..., :, None]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        Dm = jnp.where(tri, jnp.exp(logD), 0.0)
+        scores = jnp.einsum("bhld,bhsd->bhls", qc, kc) * Dm
+        h_intra = jnp.einsum("bhls,bhsd->bhld", scores, vc)
+        l_intra = jnp.sum(scores, axis=-1)
+        denom = jnp.maximum(jnp.abs(l_inter + l_intra), jnp.exp(-m_tok))
+        h = (h_inter + h_intra) / denom[..., None]
+        # state propagation to chunk end: m_next = b_L + max(m_prev, max src)
+        M = jnp.maximum(m, jnp.max(src, axis=-1))
+        m_next = btot + M
+        wC_old = jnp.exp(m - M)                           # (B,H)
+        w_src = jnp.exp(src - M[..., None])               # (B,H,L)
+        C_new = C * wC_old[..., None, None] + jnp.einsum(
+            "bhsd,bhse->bhde", kc * w_src[..., None], vc)
+        n_new = n * wC_old[..., None] + jnp.einsum(
+            "bhs,bhsd->bhd", w_src, kc)
+        return (C_new, n_new, m_next), h
+
+    (C, n, m), hs = lax.scan(chunk_step, (C0, n0, m0),
+                             (qs, ks, vs, igs, fgs))
+    # hs: (nchunks, B, H, L, hd) -> (B, S, Din)
+    y = hs.swapaxes(1, 2).swapaxes(0, 2).reshape(B, H, Sp, hd)
+    y = y.transpose(0, 2, 1, 3).reshape(B, Sp, Din)[:, :S]
+    return y.astype(x.dtype), (C, n, m)
+
+
+def mlstm_step(p, x_t, n_heads: int, state):
+    """One decode step.  x_t (B,Din) -> (y_t, state)."""
+    B, Din = x_t.shape
+    H = n_heads
+    hd = Din // H
+    q, k, v, ig, fg = _mlstm_qkvg(p, x_t[:, None, :], H)
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]       # (B,H,hd)
+    ig, fg = ig[:, :, 0], fg[:, :, 0]                  # (B,H)
+    C, n, m = state
+    lf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(lf + m, ig)
+    fprime = jnp.exp(lf + m - m_new)
+    iprime = jnp.exp(ig - m_new)
+    C = C * fprime[..., None, None] + iprime[..., None, None] \
+        * (k[..., :, None] * v[..., None, :])
+    n = n * fprime[..., None] + iprime[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    y = h.reshape(B, Din)
+    return y.astype(x_t.dtype), (C, n, m_new)
+
+
+# ==================================================================== sLSTM
+
+def init_slstm_cell(key, d_inner, n_heads, dtype):
+    kg = KeyGen(key)
+    hd = d_inner // n_heads
+    def rinit():
+        return (jax.random.normal(kg(), (n_heads, hd, hd), jnp.float32)
+                * hd ** -0.5).astype(jnp.float32)
+    return {
+        "wz": dense_init(kg(), d_inner, d_inner, dtype),
+        "wi": dense_init(kg(), d_inner, d_inner, dtype),
+        "wf": dense_init(kg(), d_inner, d_inner, dtype),
+        "wo": dense_init(kg(), d_inner, d_inner, dtype),
+        "rz": rinit(), "ri": rinit(), "rf": rinit(), "ro": rinit(),
+        "bz": jnp.zeros((d_inner,), jnp.float32),
+        "bi": jnp.zeros((d_inner,), jnp.float32),
+        "bf": jnp.repeat(jnp.linspace(3.0, 6.0, n_heads), hd),
+        "bo": jnp.zeros((d_inner,), jnp.float32),
+    }
+
+
+def slstm_scan(p, x, n_heads: int, state=None):
+    """x (B,S,Din) -> (y, state); sequential lax.scan (see module doc)."""
+    B, S, Din = x.shape
+    H = n_heads
+    hd = Din // H
+    x32 = x.astype(jnp.float32)
+    zx = x32 @ p["wz"].astype(jnp.float32) + p["bz"]
+    ix = x32 @ p["wi"].astype(jnp.float32) + p["bi"]
+    fx = x32 @ p["wf"].astype(jnp.float32) + p["bf"]
+    ox = x32 @ p["wo"].astype(jnp.float32) + p["bo"]
+    pre = jnp.stack([zx, ix, fx, ox], 0).reshape(4, B, S, H, hd) \
+        .transpose(2, 0, 1, 3, 4)                     # (S,4,B,H,hd)
+
+    if state is None:
+        zeros = jnp.zeros((B, H, hd), jnp.float32)
+        state = (zeros, zeros + 1e-6, zeros, zeros - 1e30)  # c, n, h, m
+
+    R = jnp.stack([p["rz"], p["ri"], p["rf"], p["ro"]], 0)  # (4,H,hd,hd)
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhd,ghde->gbhe", h, R)       # (4,B,H,hd)
+        z = jnp.tanh(inp[0] + rec[0])
+        ilog = inp[1] + rec[1]
+        flog = jax.nn.log_sigmoid(inp[2] + rec[2])
+        o = jax.nn.sigmoid(inp[3] + rec[3])
+        m_new = jnp.maximum(flog + m, ilog)
+        fp = jnp.exp(flog + m - m_new)
+        ip = jnp.exp(ilog - m_new)
+        c = fp * c + ip * z
+        n = fp * n + ip
+        h = o * (c / jnp.maximum(n, 1e-6))
+        return (c, n, h, m_new), h
+
+    state, hs = lax.scan(step, state, pre)            # hs (S,B,H,hd)
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, Din)
+    return y.astype(x.dtype), state
+
+
+def slstm_step(p, x_t, n_heads: int, state):
+    y, state = slstm_scan(p, x_t[:, None, :], n_heads, state)
+    return y[:, 0, :], state

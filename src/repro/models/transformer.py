@@ -1,0 +1,544 @@
+"""Pattern-based transformer stack covering all assigned architectures.
+
+A model is a cycled ``layer_pattern`` of block kinds over ``n_layers``
+(+ an optional encoder stack for enc-dec models):
+
+  attn        GQA/MQA/MHA self-attention + FFN        (dense/MoE archs)
+  local_attn  windowed self-attention + FFN           (recurrentgemma)
+  xattn       tanh-gated cross-attention + gated FFN  (llama-3.2 vision)
+  attn_cross  self-attn + cross-attn + FFN            (whisper decoder)
+  rglru       Griffin recurrent block + FFN           (recurrentgemma)
+  mlstm       xLSTM matrix-memory block (self-contained projections)
+  slstm       xLSTM scalar-memory block + GeGLU FFN
+
+HLO compactness (critical for the 512-device dry-run): layers are grouped by
+pattern period and the stack runs as ONE ``lax.scan`` over stacked per-group
+parameters, so the compiled module contains each distinct block body once
+regardless of depth (remainder layers unroll as a short tail).  Gradient
+checkpointing (``cfg.remat``) wraps the scan body.
+
+Every block supports three modes sharing parameters:
+  train/prefill: full-sequence, builds decode caches when requested;
+  decode:        x is (B, 1, D) + per-block cache (KV ring buffers for
+                 local attention, constant-size recurrent states).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import recurrent as rec_lib
+from repro.models.common import (KeyGen, apply_norm, dense_init, gelu,
+                                 init_norm, silu)
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------- FFN
+
+def init_mlp(key, cfg):
+    kg = KeyGen(key)
+    D, F = cfg.d_model, cfg.d_ff
+    pdt = cfg.param_dtype_jnp
+    p = {}
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        p["wi_gate"] = dense_init(kg(), D, F, pdt)
+        p["wi_up"] = dense_init(kg(), D, F, pdt)
+    else:
+        p["wi"] = dense_init(kg(), D, F, pdt)
+    p["wo"] = dense_init(kg(), F, D, pdt, scale=F ** -0.5)
+    if cfg.mlp_bias:
+        p["bi"] = jnp.zeros((F,), pdt)
+        p["bo"] = jnp.zeros((D,), pdt)
+    return p
+
+
+def apply_mlp(p, x, cfg):
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = silu if cfg.mlp_kind == "swiglu" else gelu
+        h = act(x @ p["wi_gate"].astype(x.dtype)) * (x @ p["wi_up"].astype(x.dtype))
+    else:
+        h = x @ p["wi"].astype(x.dtype)
+        if "bi" in p:
+            h = h + p["bi"].astype(x.dtype)
+        h = gelu(h)
+    y = h @ p["wo"].astype(x.dtype)
+    if "bo" in p:
+        y = y + p["bo"].astype(x.dtype)
+    return y
+
+
+def _init_ffn(key, cfg):
+    """FFN = dense MLP or MoE depending on cfg."""
+    if cfg.moe.n_experts > 0:
+        return {"moe": moe_lib.init_moe(key, cfg)}
+    return {"mlp": init_mlp(key, cfg)}
+
+
+def _apply_ffn(p, x, cfg, rt, mode="train"):
+    if "moe" in p:
+        if rt is not None and rt.mesh is not None and rt.ep_axis is not None:
+            return moe_lib.moe_ep(p["moe"], x, cfg, rt.mesh,
+                                  data_axes=rt.data_axes, model_axis=rt.ep_axis)
+        return moe_lib.moe_local(p["moe"], x, cfg,
+                                 dropless=(mode == "decode"))
+    return apply_mlp(p["mlp"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+# ----------------------------------------------------------- runtime context
+
+class Runtime:
+    """Mesh context for in-model parallel decisions (EP shard_map, sharding
+    constraints).  None mesh = single-device/test mode."""
+
+    def __init__(self, mesh=None, data_axes=("pod", "data"), ep_axis="model",
+                 constraint_fn=None):
+        self.mesh = mesh
+        self.data_axes = tuple(a for a in data_axes
+                               if mesh is not None and a in mesh.shape)
+        self.ep_axis = (ep_axis if mesh is not None
+                        and ep_axis in (mesh.shape if mesh else {}) else None)
+        self.constraint_fn = constraint_fn
+
+    def shard(self, x, kind: str):
+        if self.constraint_fn is None:
+            return x
+        return self.constraint_fn(x, kind)
+
+
+NULL_RT = Runtime()
+
+
+# ------------------------------------------------------------ block: attn --
+
+def _rope_positions(mode, S, pos):
+    if mode == "decode":
+        return jnp.asarray([[pos]]) if jnp.ndim(pos) == 0 else pos[:, None]
+    return jnp.arange(S)[None, :] + (0 if pos is None else pos)
+
+
+def init_attn_block(key, cfg, *, kind: str):
+    kg = KeyGen(key)
+    D = cfg.d_model
+    p = {"norm1": init_norm(kg(), D, cfg.param_dtype_jnp, cfg.norm_kind),
+         "attn": attn_lib.init_attn(kg(), cfg),
+         "norm2": init_norm(kg(), D, cfg.param_dtype_jnp, cfg.norm_kind),
+         "ffn": _init_ffn(kg(), cfg)}
+    if kind == "attn_cross":
+        p["norm_x"] = init_norm(kg(), D, cfg.param_dtype_jnp, cfg.norm_kind)
+        p["xattn"] = attn_lib.init_attn(kg(), cfg, cross=True)
+    return p
+
+
+def _self_attention(p, h, cfg, *, causal, window, mode, cache, pos, rt):
+    """Shared self-attention core; returns (out, new_cache)."""
+    B, S, _ = h.shape
+    q, k, v = attn_lib.qkv(p, h, cfg)
+    if cfg.pos_kind == "rope":
+        rpos = _rope_positions(mode, S, pos)
+        from repro.models.common import rope
+        q = rope(q, rpos, cfg.rope_theta)
+        k = rope(k, rpos, cfg.rope_theta)
+    new_cache = cache
+    if mode == "decode":
+        W = cache["k"].shape[1]
+        slot = pos % W if window > 0 else pos
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, 1)
+        new_cache = {"k": ck, "v": cv}
+        kv_valid = jnp.minimum(pos + 1, W)
+        out = attn_lib.dense_attention(
+            q, ck, cv, causal=False, window=0, q_offset=0,
+            kv_valid=kv_valid, softcap=cfg.logit_softcap)
+    else:
+        if cfg.attn_chunk and S > cfg.attn_chunk:
+            out = attn_lib.blockwise_attention(
+                q, k, v, causal=causal, window=window,
+                q_chunk=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+                softcap=cfg.logit_softcap, causal_skip=cfg.causal_skip)
+        else:
+            out = attn_lib.dense_attention(q, k, v, causal=causal,
+                                           window=window,
+                                           softcap=cfg.logit_softcap)
+        if cache is not None:            # prefill: populate the cache
+            W = cache["k"].shape[1]
+            if window > 0 and W < S:
+                new_cache = {"k": k[:, -W:].astype(cache["k"].dtype),
+                             "v": v[:, -W:].astype(cache["v"].dtype)}
+                # ring-buffer phase: next write lands at S % W
+            else:
+                pad = [(0, 0), (0, W - S), (0, 0), (0, 0)]
+                new_cache = {"k": jnp.pad(k, pad).astype(cache["k"].dtype),
+                             "v": jnp.pad(v, pad).astype(cache["v"].dtype)}
+    B, S, H, hd = out.shape[0], out.shape[1], cfg.n_heads, cfg.head_dim
+    out = out.reshape(B, S, H * hd) @ p["wo"].astype(h.dtype)
+    if "bo" in p:
+        out = out + p["bo"].astype(out.dtype)
+    return out, new_cache
+
+
+def _cross_attention(p, h, cfg, *, ctx, cache, mode):
+    """Cross-attention; KV from ctx (train/prefill) or cache (decode)."""
+    if mode == "decode" and cache is not None and "ek" in cache:
+        B, S, _ = h.shape
+        H, KH, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+        q = (h @ p["wq"].astype(h.dtype))
+        if "bq" in p:
+            q = q + p["bq"].astype(q.dtype)
+        q = q.reshape(B, S, H, hd)
+        k, v = cache["ek"], cache["ev"]
+        new_cache = cache
+    else:
+        q, k, v = attn_lib.qkv(p, h, cfg, ctx=ctx)
+        new_cache = {"ek": k, "ev": v} if cache is not None else cache
+    out = attn_lib.dense_attention(q, k, v, causal=False,
+                                   softcap=cfg.logit_softcap)
+    B, S = out.shape[0], out.shape[1]
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ p["wo"].astype(h.dtype)
+    return out, new_cache
+
+
+def apply_attn_block(p, x, cfg, *, kind, mode, cache, pos, ctx, rt):
+    causal = cfg.family != "audio_encoder" and kind != "enc_attn"
+    window = cfg.window if kind == "local_attn" else 0
+    aux = jnp.zeros((), jnp.float32)
+
+    h = apply_norm(p["norm1"], x, cfg.norm_kind)
+    sc = cache.get("self") if cache is not None else None
+    out, new_self = _self_attention(
+        p["attn"], h, cfg, causal=(causal and kind != "enc_attn"),
+        window=window, mode=mode, cache=sc, pos=pos, rt=rt)
+    x = x + out
+
+    new_cache = dict(cache) if cache is not None else None
+    if new_cache is not None:
+        new_cache["self"] = new_self
+
+    if kind == "attn_cross":
+        h = apply_norm(p["norm_x"], x, cfg.norm_kind)
+        xc = cache.get("cross") if cache is not None else None
+        out, new_cross = _cross_attention(p["xattn"], h, cfg, ctx=ctx,
+                                          cache=xc, mode=mode)
+        x = x + out
+        if new_cache is not None:
+            new_cache["cross"] = new_cross
+
+    h = apply_norm(p["norm2"], x, cfg.norm_kind)
+    y, moe_aux = _apply_ffn(p["ffn"], h, cfg, rt, mode)
+    x = x + y
+    return x, new_cache, aux + moe_aux
+
+
+# --------------------------------------------------- block: gated xattn ----
+
+def init_xattn_block(key, cfg):
+    kg = KeyGen(key)
+    D = cfg.d_model
+    return {
+        "norm1": init_norm(kg(), D, cfg.param_dtype_jnp, cfg.norm_kind),
+        "xattn": attn_lib.init_attn(kg(), cfg, cross=True),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "norm2": init_norm(kg(), D, cfg.param_dtype_jnp, cfg.norm_kind),
+        "ffn": _init_ffn(kg(), cfg),
+        "gate_ffn": jnp.zeros((), jnp.float32),
+    }
+
+
+def apply_xattn_block(p, x, cfg, *, mode, cache, ctx, rt):
+    """Llama-3.2-vision style gated cross-attention layer."""
+    h = apply_norm(p["norm1"], x, cfg.norm_kind)
+    xc = cache.get("cross") if cache is not None else None
+    out, new_cross = _cross_attention(p["xattn"], h, cfg, ctx=ctx,
+                                      cache=xc, mode=mode)
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * out
+    h = apply_norm(p["norm2"], x, cfg.norm_kind)
+    y, moe_aux = _apply_ffn(p["ffn"], h, cfg, rt, mode)
+    x = x + jnp.tanh(p["gate_ffn"]).astype(x.dtype) * y
+    new_cache = {"cross": new_cross} if cache is not None else None
+    return x, new_cache, moe_aux
+
+
+# ------------------------------------------------------- block: rglru ------
+
+def init_rglru_block(key, cfg):
+    kg = KeyGen(key)
+    D = cfg.d_model
+    lru = cfg.d_model            # Griffin: lru_width == d_model
+    pdt = cfg.param_dtype_jnp
+    return {
+        "norm1": init_norm(kg(), D, pdt, cfg.norm_kind),
+        "wy": dense_init(kg(), D, lru, pdt),
+        "wgate": dense_init(kg(), D, lru, pdt),
+        "conv": rec_lib.init_conv1d(kg(), lru, cfg.conv_width, pdt),
+        "lru": rec_lib.init_rglru(kg(), lru, pdt),
+        "wout": dense_init(kg(), lru, D, pdt, scale=lru ** -0.5),
+        "norm2": init_norm(kg(), D, pdt, cfg.norm_kind),
+        "ffn": _init_ffn(kg(), cfg),
+    }
+
+
+def apply_rglru_block(p, x, cfg, *, mode, cache, rt):
+    h = apply_norm(p["norm1"], x, cfg.norm_kind)
+    y = h @ p["wy"].astype(h.dtype)
+    gate = gelu(h @ p["wgate"].astype(h.dtype))
+    conv_state = cache.get("conv") if cache is not None else None
+    if mode == "decode":
+        yc, new_conv = rec_lib.conv1d_causal(p["conv"], y, conv_state)
+        y_t, new_h = rec_lib.rglru_step(p["lru"], yc[:, 0], cache["h"],
+                                        c=cfg.rglru_c)
+        y = y_t[:, None, :]
+    else:
+        yc, new_conv = rec_lib.conv1d_causal(p["conv"], y, None)
+        y, new_h = rec_lib.rglru_scan(p["lru"], yc, c=cfg.rglru_c)
+    out = (y * gate) @ p["wout"].astype(x.dtype)
+    x = x + out
+    h2 = apply_norm(p["norm2"], x, cfg.norm_kind)
+    z, moe_aux = _apply_ffn(p["ffn"], h2, cfg, rt, mode)
+    x = x + z
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": new_h, "conv": new_conv}
+    return x, new_cache, moe_aux
+
+
+# ------------------------------------------------- blocks: mlstm / slstm ---
+
+def init_mlstm_block(key, cfg):
+    kg = KeyGen(key)
+    D = cfg.d_model
+    d_in = 2 * D                                   # xLSTM proj_factor = 2
+    pdt = cfg.param_dtype_jnp
+    return {
+        "norm": init_norm(kg(), D, pdt, cfg.norm_kind),
+        "wup": dense_init(kg(), D, 2 * d_in, pdt),   # [x_m, z]
+        "conv": rec_lib.init_conv1d(kg(), d_in, cfg.conv_width, pdt),
+        "cell": rec_lib.init_mlstm_cell(kg(), d_in, cfg.n_heads, pdt),
+        "wdown": dense_init(kg(), d_in, D, pdt, scale=d_in ** -0.5),
+    }
+
+
+def apply_mlstm_block(p, x, cfg, *, mode, cache, rt):
+    h = apply_norm(p["norm"], x, cfg.norm_kind)
+    up = h @ p["wup"].astype(h.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_state = cache.get("conv") if cache is not None else None
+    if mode == "decode":
+        c, new_conv = rec_lib.conv1d_causal(p["conv"], xm, conv_state)
+        c = silu(c)
+        y, new_state = rec_lib.mlstm_step(
+            p["cell"], c[:, 0], cfg.n_heads,
+            (cache["C"], cache["n"], cache["m"]))
+        y = y[:, None, :]
+    else:
+        c, new_conv = rec_lib.conv1d_causal(p["conv"], xm, None)
+        c = silu(c)
+        y, new_state = rec_lib.mlstm_chunked(p["cell"], c, cfg.n_heads,
+                                             chunk=cfg.mlstm_chunk)
+    out = (y * silu(z)) @ p["wdown"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        C, n, m = new_state
+        new_cache = {"C": C, "n": n, "m": m, "conv": new_conv}
+    return x + out, new_cache, jnp.zeros((), jnp.float32)
+
+
+def init_slstm_block(key, cfg):
+    kg = KeyGen(key)
+    D = cfg.d_model
+    pdt = cfg.param_dtype_jnp
+    f = (4 * D) // 3
+    return {
+        "norm": init_norm(kg(), D, pdt, cfg.norm_kind),
+        "conv": rec_lib.init_conv1d(kg(), D, cfg.conv_width, pdt),
+        "cell": rec_lib.init_slstm_cell(kg(), D, cfg.n_heads, pdt),
+        "norm2": init_norm(kg(), D, pdt, cfg.norm_kind),
+        "ffn_gate": dense_init(kg(), D, f, pdt),
+        "ffn_up": dense_init(kg(), D, f, pdt),
+        "ffn_down": dense_init(kg(), f, D, pdt, scale=f ** -0.5),
+    }
+
+
+def apply_slstm_block(p, x, cfg, *, mode, cache, rt):
+    h = apply_norm(p["norm"], x, cfg.norm_kind)
+    conv_state = cache.get("conv") if cache is not None else None
+    c, new_conv = rec_lib.conv1d_causal(
+        p["conv"], h, conv_state if mode == "decode" else None)
+    c = silu(c)
+    state = ((cache["c"], cache["n"], cache["h"], cache["m"])
+             if (cache is not None and mode == "decode") else None)
+    if mode == "decode":
+        y, new_state = rec_lib.slstm_step(p["cell"], c[:, 0], cfg.n_heads, state)
+        y = y[:, None, :]
+    else:
+        y, new_state = rec_lib.slstm_scan(p["cell"], c, cfg.n_heads, None)
+    x = x + y
+    h2 = apply_norm(p["norm2"], x, cfg.norm_kind)
+    ff = gelu(h2 @ p["ffn_gate"].astype(x.dtype)) * (h2 @ p["ffn_up"].astype(x.dtype))
+    x = x + ff @ p["ffn_down"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        cc, nn, hh, mm = new_state
+        new_cache = {"c": cc, "n": nn, "h": hh, "m": mm, "conv": new_conv}
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------------ dispatch -----
+
+def init_block(key, cfg, kind: str):
+    if kind in ("attn", "local_attn", "attn_cross", "enc_attn"):
+        return init_attn_block(key, cfg, kind=kind)
+    if kind == "xattn":
+        return init_xattn_block(key, cfg)
+    if kind == "rglru":
+        return init_rglru_block(key, cfg)
+    if kind == "mlstm":
+        return init_mlstm_block(key, cfg)
+    if kind == "slstm":
+        return init_slstm_block(key, cfg)
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def apply_block(p, x, cfg, kind: str, *, mode="train", cache=None, pos=0,
+                ctx=None, rt=NULL_RT):
+    if kind in ("attn", "local_attn", "attn_cross", "enc_attn"):
+        return apply_attn_block(p, x, cfg, kind=kind, mode=mode, cache=cache,
+                                pos=pos, ctx=ctx, rt=rt)
+    if kind == "xattn":
+        return apply_xattn_block(p, x, cfg, mode=mode, cache=cache, ctx=ctx,
+                                 rt=rt)
+    if kind == "rglru":
+        return apply_rglru_block(p, x, cfg, mode=mode, cache=cache, rt=rt)
+    if kind == "mlstm":
+        return apply_mlstm_block(p, x, cfg, mode=mode, cache=cache, rt=rt)
+    if kind == "slstm":
+        return apply_slstm_block(p, x, cfg, mode=mode, cache=cache, rt=rt)
+    raise ValueError(kind)
+
+
+# ----------------------------------------------------------- cache init ----
+
+def init_block_cache(cfg, kind: str, batch: int, kv_len: int, enc_len: int = 0):
+    KH, hd = cfg.n_kv, cfg.head_dim
+    cdt = cfg.dtype_jnp
+    if kind in ("attn", "local_attn", "attn_cross", "enc_attn"):
+        W = min(cfg.window, kv_len) if kind == "local_attn" and cfg.window \
+            else kv_len
+        c = {"self": {"k": jnp.zeros((batch, W, KH, hd), cdt),
+                      "v": jnp.zeros((batch, W, KH, hd), cdt)}}
+        if kind == "attn_cross":
+            c["cross"] = {"ek": jnp.zeros((batch, enc_len, KH, hd), cdt),
+                          "ev": jnp.zeros((batch, enc_len, KH, hd), cdt)}
+        return c
+    if kind == "xattn":
+        return {"cross": {"ek": jnp.zeros((batch, enc_len, KH, hd), cdt),
+                          "ev": jnp.zeros((batch, enc_len, KH, hd), cdt)}}
+    if kind == "rglru":
+        lru = cfg.d_model
+        return {"h": jnp.zeros((batch, lru), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, lru), cdt)}
+    if kind == "mlstm":
+        d_in = 2 * cfg.d_model
+        H = cfg.n_heads
+        dh = d_in // H
+        return {"C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, H, dh), jnp.float32),
+                "m": jnp.full((batch, H), -1e30, jnp.float32),
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in), cdt)}
+    if kind == "slstm":
+        H = cfg.n_heads
+        dh = cfg.d_model // H
+        z = jnp.zeros((batch, H, dh), jnp.float32)
+        return {"c": z, "n": z + 1e-6, "h": z, "m": z - 1e30,
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_model), cdt)}
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------- stacks ------
+
+def _layer_kinds(pattern, n_layers):
+    period = len(pattern)
+    n_groups = n_layers // period
+    tail = tuple(pattern[i] for i in range(n_layers - n_groups * period))
+    return period, n_groups, tail
+
+
+def init_stack(key, cfg, pattern, n_layers):
+    """Stacked-by-group params: {"groups": {"p0": stacked, ...}, "tail": [...]}"""
+    period, n_groups, tail = _layer_kinds(pattern, n_layers)
+    kg = KeyGen(key)
+    groups = None
+    if n_groups > 0:
+        per_pos = []
+        for pos in range(period):
+            layers = [init_block(kg(), cfg, pattern[pos])
+                      for _ in range(n_groups)]
+            per_pos.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layers))
+        groups = {f"p{i}": per_pos[i] for i in range(period)}
+    tail_params = [init_block(kg(), cfg, kind) for kind in tail]
+    return {"groups": groups, "tail": tail_params}
+
+
+def init_stack_cache(cfg, pattern, n_layers, batch, kv_len, enc_len=0):
+    period, n_groups, tail = _layer_kinds(pattern, n_layers)
+    groups = None
+    if n_groups > 0:
+        groups = {}
+        for pos in range(period):
+            one = init_block_cache(cfg, pattern[pos], batch, kv_len, enc_len)
+            groups[f"p{pos}"] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), one)
+    tail_caches = [init_block_cache(cfg, kind, batch, kv_len, enc_len)
+                   for kind in tail]
+    return {"groups": groups, "tail": tail_caches}
+
+
+def apply_stack(params, x, cfg, pattern, n_layers, *, mode="train",
+                caches=None, pos=0, ctx=None, rt=NULL_RT):
+    """Returns (x, new_caches, aux_sum)."""
+    period, n_groups, tail = _layer_kinds(pattern, n_layers)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {"groups": None, "tail": []} if caches is not None else None
+
+    if n_groups > 0:
+        def body(carry, xs):
+            x, aux = carry
+            gparams, gcaches = xs
+            new_gcaches = {} if gcaches is not None else None
+            for i in range(period):
+                c = gcaches[f"p{i}"] if gcaches is not None else None
+                x, nc, a = apply_block(gparams[f"p{i}"], x, cfg, pattern[i],
+                                       mode=mode, cache=c, pos=pos, ctx=ctx,
+                                       rt=rt)
+                aux = aux + a
+                if new_gcaches is not None:
+                    new_gcaches[f"p{i}"] = nc
+            return (x, aux), new_gcaches
+
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_saveable
+                      if cfg.remat_policy == "dots" else None)
+            body = jax.checkpoint(body, policy=policy)
+
+        gcaches = caches["groups"] if caches is not None else None
+        (x, aux_total), new_g = jax.lax.scan(
+            body, (x, aux_total),
+            (params["groups"], gcaches) if gcaches is not None
+            else (params["groups"], None))
+        if new_caches is not None:
+            new_caches["groups"] = new_g
+
+    for t, kind in enumerate(tail):
+        c = caches["tail"][t] if caches is not None else None
+        x, nc, a = apply_block(params["tail"][t], x, cfg, kind, mode=mode,
+                               cache=c, pos=pos, ctx=ctx, rt=rt)
+        aux_total = aux_total + a
+        if new_caches is not None:
+            new_caches["tail"].append(nc)
+    return x, new_caches, aux_total

@@ -1,0 +1,323 @@
+"""HLO inspection: collective byte counts and wire-cost modelling.
+
+``cost_analysis()`` gives per-device flops and HBM bytes but NOT collective
+traffic — we parse the SPMD-partitioned HLO text and sum operand bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, then convert to per-chip wire bytes with the standard
+ring-algorithm factors (matching the paper's §2.3 cost model):
+
+    all-gather(out n, group g):      (g-1)/g · n
+    reduce-scatter(in n, group g):   (g-1)/g · n      (n = input size)
+    all-reduce(n, group g):        2·(g-1)/g · n
+    all-to-all(n, group g):          (g-1)/g · n
+    collective-permute(n):           n
+
+Shapes in the partitioned module are already per-device.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<outshape>\([^)]*\)|[\w\[\],{}\s]+?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(",
+    re.M)
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\s*[,)]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))       # [n_groups, group_size]
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{ ")
+        if first:
+            return len([t for t in first.split(",") if t.strip() != ""])
+    return 2
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=lambda: defaultdict(int))
+    bytes_moved: dict = field(default_factory=lambda: defaultdict(float))
+    wire_bytes: dict = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    def table(self) -> str:
+        rows = [f"{op:20s} n={self.counts[op]:3d} "
+                f"bytes={self.bytes_moved[op]/1e6:10.2f}MB "
+                f"wire={self.wire_bytes[op]/1e6:10.2f}MB"
+                for op in sorted(self.counts)]
+        return "\n".join(rows)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        out_bytes = _shape_bytes(m.group("outshape"))
+        g = _group_size(line)
+        st.counts[op] += 1
+        if op == "all-gather":
+            n = out_bytes                         # output is the full panel
+            wire = (g - 1) / g * n
+        elif op == "reduce-scatter":
+            n = out_bytes * g                     # input = g × output
+            wire = (g - 1) / g * n
+        elif op == "all-reduce":
+            n = out_bytes
+            wire = 2 * (g - 1) / g * n
+        elif op == "all-to-all":
+            n = out_bytes
+            wire = (g - 1) / g * n
+        else:                                     # collective-permute
+            n = out_bytes
+            wire = n
+        st.bytes_moved[op] += n
+        st.wire_bytes[op] += wire
+    return st
+
+
+def scan_trip_counts(hlo_text: str) -> list[int]:
+    """Trip counts of while loops (scan over layer groups / kv chunks):
+    collectives inside a loop body execute trip_count times.  XLA's HLO
+    text marks loop induction via known_trip_count."""
+    return [int(x) for x in
+            re.findall(r"known_trip_count=\{n=(\d+)\}", hlo_text)]
+
+
+def split_computations(hlo_text: str) -> dict[str, str]:
+    comps: dict[str, str] = {}
+    cur_name = None
+    cur_lines: list[str] = []
+    comp_re = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{")
+    for line in hlo_text.splitlines():
+        m = comp_re.match(line)
+        if m:
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = m.group(1)
+            cur_lines = [line]
+        else:
+            cur_lines.append(line)
+    if cur_name is not None:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps
+
+
+_CALL_RE = re.compile(r"(?:calls=|body=|condition=|branch_computations=\{|"
+                      r"to_apply=)%?([\w.\-]+)")
+
+
+def computation_weights(comps: dict[str, str]) -> dict[str, int]:
+    """Execution multiplicity per computation: product of while-loop trip
+    counts along the call chain (scan bodies execute trip_count times but
+    appear once in the module text — and once in XLA's cost_analysis)."""
+    body_trips: dict[str, int] = {}
+    trip_re = re.compile(
+        r'known_trip_count["\']?\s*[:=]\s*\{\s*"?n"?\s*[:=]\s*"?(\d+)"?')
+    for text in comps.values():
+        for line in text.splitlines():
+            m = re.search(r"while\(.*?\).*?body=%?([\w.\-]+)", line)
+            if not m:
+                continue
+            body = m.group(1)
+            t = trip_re.search(line)
+            body_trips[body] = int(t.group(1)) if t \
+                else body_trips.get(body, 1)
+
+    weights = {name: 1 for name in comps}
+    for _ in range(50):
+        changed = False
+        for name, text in comps.items():
+            w = weights.get(name, 1)
+            for m in _CALL_RE.finditer(text):
+                callee = m.group(1)
+                if callee in comps:
+                    nw = w * body_trips.get(callee, 1)
+                    if weights.get(callee, 1) < nw:
+                        weights[callee] = nw
+                        changed = True
+        if not changed:
+            break
+    return weights
+
+
+def collective_stats_weighted(hlo_text: str) -> CollectiveStats:
+    """Collective stats with scan/while bodies weighted by trip count."""
+    comps = split_computations(hlo_text)
+    weights = computation_weights(comps)
+    total = CollectiveStats()
+    for name, text in comps.items():
+        st = collective_stats(text)
+        w = weights.get(name, 1)
+        for op in st.counts:
+            total.counts[op] += st.counts[op] * w
+            total.bytes_moved[op] += st.bytes_moved[op] * w
+            total.wire_bytes[op] += st.wire_bytes[op] * w
+    return total
+
+
+# ----------------------------------------------------- weighted op costs --
+
+_OP_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<out>\([^=]*?\)|[\w\[\],{}]+?)\s+"
+    r"(?P<op>[\w\-]+)\((?P<args>[^)]*)\)")
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "iota",
+    "partition-id", "replica-id", "bitcast-convert", "async-start",
+    "async-done", "opt-barrier", "broadcast", "reshape",
+}
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*((?:\([^)]*\))|[\w\[\],]+)")
+_ARG_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _dims(dim_str: str):
+    return [int(d) for d in dim_str.split(",") if d] or [1]
+
+
+def _shape_nbytes_one(shape_str: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def weighted_op_costs(hlo_text: str) -> dict:
+    """Trip-weighted flops (dot ops) and HBM bytes from the optimized,
+    SPMD-partitioned module text.
+
+    Why not compiled.cost_analysis(): XLA counts every computation ONCE,
+    so anything under lax.scan/while (layer stacks, kv-chunk loops, mLSTM
+    chunk loops) is undercounted by its trip count.  Here every op line is
+    weighted by the product of enclosing trip counts.  Flops counts dot
+    ops (2·|out|·K with K resolved from the lhs operand's definition);
+    bytes counts each real op's operand+output sizes — for the post-fusion
+    module those are the tensors that actually cross HBM.
+    """
+    comps = split_computations(hlo_text)
+    weights = computation_weights(comps)
+    # Fusion bodies execute in registers/VMEM: their internal ops do real
+    # FLOPs but no HBM traffic — the fusion op line (operands + output)
+    # carries the traffic.  Collect every computation called by a fusion op
+    # (plus reducer/scatter helper computations) and exclude from bytes.
+    no_bytes_comps: set[str] = set()
+    for text in comps.values():
+        for line in text.splitlines():
+            m = _OP_LINE_RE.match(line)
+            if m and m.group("op") in ("fusion", "reduce", "reduce-window",
+                                       "scatter", "sort", "map"):
+                for cm in _CALL_RE.finditer(line):
+                    no_bytes_comps.add(cm.group(1))
+    flops = 0.0
+    bytes_ = 0.0
+    dot_count = 0
+
+    def op_nbytes(shape_str: str, w: int) -> float:
+        """Bytes for one operand/output, loop-aware: inside a body executing
+        w times, a tensor whose leading dim == w is a scan-stacked buffer
+        (xs/ys/residuals) touched one slice per iteration — count size/w,
+        matching the real per-iteration HBM traffic of the dynamic-slice /
+        dynamic-update-slice pair."""
+        total = 0.0
+        for dt, dims in _SHAPE_RE.findall(shape_str):
+            if dt not in _DTYPE_BYTES:
+                continue
+            dd = _dims(dims)
+            n = 1
+            for d in dd:
+                n *= d
+            sz = n * _DTYPE_BYTES[dt]
+            if w > 1 and dd and dd[0] == w:
+                sz /= w
+            total += sz
+        return total
+
+    for name, text in comps.items():
+        w = weights.get(name, 1)
+        count_bytes = name not in no_bytes_comps
+        lines = text.splitlines()
+        # name -> shape string (params from the header, ops from defs)
+        shapes: dict[str, str] = {}
+        hdr = lines[0] if lines else ""
+        if "(" in hdr:
+            inner = hdr[hdr.find("(") + 1: hdr.rfind("->")]
+            for pname, pshape in _PARAM_RE.findall(inner):
+                shapes[pname] = pshape
+        parsed = []
+        for line in lines:
+            m = _OP_LINE_RE.match(line)
+            if not m:
+                continue
+            shapes[m.group("name")] = m.group("out")
+            parsed.append((m, line))
+        for m, line in parsed:
+            op = m.group("op")
+            out_b = op_nbytes(m.group("out"), w)
+            arg_names = _ARG_RE.findall(m.group("args"))
+            if op == "dot":
+                dot_count += 1
+                k = 1
+                cm = _DOT_CONTRACT_RE.search(line)
+                lhs_shape = shapes.get(arg_names[0], "") if arg_names else ""
+                lhs_sh = _SHAPE_RE.findall(lhs_shape)
+                if cm and lhs_sh:
+                    lhs_dims = _dims(lhs_sh[0][1])
+                    for ci in _dims(cm.group(1)):
+                        if ci < len(lhs_dims):
+                            k *= lhs_dims[ci]
+                out_n = 1
+                osh = _SHAPE_RE.findall(m.group("out"))
+                if osh:
+                    for d in _dims(osh[0][1]):
+                        out_n *= d
+                flops += w * 2.0 * out_n * k
+            if op in _SKIP_BYTES_OPS or not count_bytes:
+                continue
+            b = out_b + sum(op_nbytes(shapes.get(a, ""), w)
+                            for a in arg_names)
+            bytes_ += w * b
+    return {"dot_flops": flops, "bytes": bytes_, "dot_count": dot_count}

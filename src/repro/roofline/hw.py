@@ -1,0 +1,45 @@
+"""Target-hardware constants (TPU v5e) for the roofline analysis."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Chip:
+    name: str = "tpu-v5e"
+    peak_bf16_flops: float = 197e12      # FLOP/s per chip (MXU)
+    hbm_bytes: float = 16e9              # capacity
+    hbm_bw: float = 819e9                # B/s
+    ici_link_bw: float = 50e9            # B/s per link, per direction
+    # v5e 2D torus: 4 usable ICI links per chip (2 axes × 2 directions).
+    ici_links: int = 4
+    # inter-pod (DCN) — order-of-magnitude for the "pod" axis of the
+    # multi-pod mesh; per-chip share of the pod's DCN bandwidth.
+    dcn_bw_per_chip: float = 6.25e9      # ~50 Gb/s/chip
+
+    @property
+    def ici_bw_total(self) -> float:
+        return self.ici_link_bw * self.ici_links
+
+
+V5E = Chip()
+
+
+def roofline_times(flops: float, hbm_bytes: float, ici_bytes: float,
+                   chip: Chip = V5E, dcn_bytes: float = 0.0) -> dict:
+    """Per-chip three-term roofline (seconds). Inputs are per-chip values
+    from the SPMD-partitioned module."""
+    t_compute = flops / chip.peak_bf16_flops
+    t_memory = hbm_bytes / chip.hbm_bw
+    t_coll = ici_bytes / chip.ici_bw_total + dcn_bytes / chip.dcn_bw_per_chip
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms.update({
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "roofline_fraction_compute": t_compute / bound if bound else 0.0,
+    })
+    return terms

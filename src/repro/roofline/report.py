@@ -1,0 +1,167 @@
+"""Roofline report: aggregates the dry-run JSONs into the EXPERIMENTS.md
+tables (40-cell baseline + NMF cells), adds MODEL_FLOPS = 6·N·D (dense) /
+6·N_active·D (MoE) and the useful-compute ratio.
+
+  PYTHONPATH=src python -m repro.roofline.report            # print tables
+  PYTHONPATH=src python -m repro.roofline.report --write    # update file
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cb
+from repro.roofline.hw import V5E
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+def param_counts(cfg) -> tuple[int, int]:
+    """(total_params, active_params) excluding embedding/unembedding."""
+    from repro.models import lm
+    spec = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(spec)[0]:
+        ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if "embed" in ps or "unembed" in ps:
+            continue
+        total += n
+        if "/moe/w" in ps:          # routed experts: only top_k of E active
+            active += n * cfg.moe.top_k / max(cfg.moe.n_experts, 1)
+        else:
+            active += n
+    return int(total), int(active)
+
+
+def model_flops(cfg, shape) -> float:
+    """Global MODEL_FLOPS for one step of this cell (standard 6ND / 2ND
+    conventions; attention not included — the ratio column absorbs it)."""
+    _, n_active = param_counts(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch          # decode: one token
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    for fn in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        if rec.get("mesh") == mesh:
+            cells.append(rec)
+    return cells
+
+
+def fmt_table(mesh: str = "single") -> str:
+    rows = []
+    header = ("| arch | shape | status | compute s | memory s | collective s"
+              " | dominant | MODEL_GF/chip | HLO_GF/chip | useful | HBM fit |"
+              " note |")
+    sep = "|" + "---|" * 12
+    rows.append(header)
+    rows.append(sep)
+    for rec in load_cells(mesh):
+        arch, shape_name = rec["arch"], rec["shape"]
+        if arch.startswith("nmf_"):
+            continue
+        if rec["status"] == "skip":
+            rows.append(f"| {arch} | {shape_name} | SKIP | — | — | — | — |"
+                        f" — | — | — | — | sub-quadratic-only shape |")
+            continue
+        if rec["status"] != "ok":
+            rows.append(f"| {arch} | {shape_name} | FAIL | — | — | — | — |"
+                        f" — | — | — | — | {rec.get('error','')[:60]} |")
+            continue
+        cfg = cb.get_config(arch)
+        shape = cb.SHAPES[shape_name]
+        mf = model_flops(cfg, shape) / rec["n_chips"]
+        hf = rec["flops_per_chip"]
+        roof = rec["roofline"]
+        mem = rec.get("memory", {})
+        resident = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+                    + mem.get("output_bytes", 0) - mem.get("alias_bytes", 0))
+        fit = "YES" if resident <= V5E.hbm_bytes else \
+            f"NO ({resident/1e9:.0f}GB)"
+        rows.append(
+            f"| {arch} | {shape_name} | OK "
+            f"| {roof['compute_s']:.4f} | {roof['memory_s']:.4f} "
+            f"| {roof['collective_s']:.4f} | {roof['dominant'].replace('_s','')} "
+            f"| {mf/1e9:.1f} | {hf/1e9:.1f} | {min(mf/max(hf,1e-9),9.99):.2f} "
+            f"| {fit} |  |")
+    return "\n".join(rows)
+
+
+def nmf_table() -> str:
+    rows = ["| workload | grid | algo | compute s | memory s | collective s |"
+            " dominant | αβγ-model words | HLO wire bytes |",
+            "|" + "---|" * 9]
+    from repro.core import costmodel
+    for fn in sorted(glob.glob(os.path.join(RESULTS_DIR, "nmf_*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        if rec["status"] != "ok":
+            rows.append(f"| {rec['arch']} | {rec['mesh']} | — | — | — | — |"
+                        f" FAIL | — | — |")
+            continue
+        roof = rec["roofline"]
+        # parse m/n/k/algo back out of the shape tag
+        tag = rec["shape"]
+        parts = dict(p[:1] == "m" and ("m", p[1:]) or
+                     (p[0], p[1:]) for p in tag.split("_")[:3])
+        algo = tag.split("_")[-1]
+        m, n, k = (int(parts.get(x, "0")) for x in ("m", "n", "k"))
+        p = rec["n_chips"]
+        pr, pc = costmodel.optimal_grid(m, n, p)
+        model = costmodel.mpifaun_cost(m, n, k, pr, pc, algo=algo)
+        rows.append(
+            f"| {rec['arch']} ({m}×{n}, k={k}) | {pr}×{pc} | {algo} "
+            f"| {roof['compute_s']:.5f} | {roof['memory_s']:.5f} "
+            f"| {roof['collective_s']:.5f} | {roof['dominant'].replace('_s','')} "
+            f"| {model.words:.3e} | {rec['collective_bytes_per_chip']:.3e} |")
+    return "\n".join(rows)
+
+
+def summary():
+    cells = [r for r in load_cells("single") if not r["arch"].startswith("nmf")]
+    ok = [r for r in cells if r["status"] == "ok"]
+    print(f"cells: {len(cells)} ({len(ok)} ok, "
+          f"{sum(r['status'] == 'skip' for r in cells)} skip, "
+          f"{sum(r['status'] == 'fail' for r in cells)} fail)")
+    return cells
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args(argv)
+    summary()
+    t = fmt_table(args.mesh)
+    n = nmf_table()
+    print(t)
+    print()
+    print(n)
+    if args.write:
+        out = os.path.join(RESULTS_DIR, "..", "roofline_tables.md")
+        with open(out, "w") as f:
+            f.write("## Roofline baseline (single-pod 16×16, per chip)\n\n")
+            f.write(t + "\n\n## NMF workloads (paper dry-run cells)\n\n")
+            f.write(n + "\n")
+        print("wrote", os.path.abspath(out))
+
+
+if __name__ == "__main__":
+    main()

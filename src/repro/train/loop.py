@@ -1,0 +1,167 @@
+"""Host-side training loop: checkpoint/restart, straggler watchdog, elastic
+re-meshing.  Runs anywhere (CPU smoke scale to multi-pod), the same loop the
+examples and fault-tolerance tests drive.
+
+Fault-tolerance model (1000+-node view, adapted to this container):
+  * state durability — async atomic checkpoints every ``ckpt_every`` steps;
+    restart resumes bit-exactly (tested) because the data pipeline is a pure
+    function of (seed, step) and optimizer state is checkpointed;
+  * node failure — on real pods the runtime raises on a dead peer; the loop
+    catches, re-discovers devices, rebuilds the mesh (elastic), restores the
+    last checkpoint and continues (here exercised by simulated device-set
+    changes in tests);
+  * stragglers — a per-step watchdog thread flags steps exceeding
+    ``straggler_factor`` × the rolling median; the hook logs/records (on real
+    clusters: triggers hot-spare swap); tested with injected delays.
+"""
+
+from __future__ import annotations
+
+import logging
+import statistics
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt_lib
+
+log = logging.getLogger("repro.train")
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_last: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    straggler_min_history: int = 5
+    max_failures: int = 3
+
+
+class StragglerWatchdog:
+    """Flags steps that exceed straggler_factor × rolling median wall time."""
+
+    def __init__(self, factor: float, min_history: int,
+                 on_straggler: Callable[[int, float, float], None] | None = None):
+        self.factor = factor
+        self.min_history = min_history
+        self.history: list[float] = []
+        self.events: list[tuple[int, float, float]] = []
+        self._on = on_straggler
+        self._timer: threading.Timer | None = None
+
+    def median(self) -> float | None:
+        if len(self.history) < self.min_history:
+            return None
+        return statistics.median(self.history[-50:])
+
+    def step_started(self, step: int):
+        med = self.median()
+        if med is not None:
+            deadline = self.factor * med
+
+            def fire():
+                self.events.append((step, deadline, med))
+                if self._on:
+                    self._on(step, deadline, med)
+                log.warning("straggler: step %d exceeded %.3fs (median %.3fs)",
+                            step, deadline, med)
+
+            self._timer = threading.Timer(deadline, fire)
+            self._timer.daemon = True
+            self._timer.start()
+
+    def step_finished(self, dur: float):
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        self.history.append(dur)
+
+
+def train(state, train_step, batch_fn, loop_cfg: LoopConfig, *,
+          checkpointer: ckpt_lib.AsyncCheckpointer | None = None,
+          on_metrics: Callable[[int, dict], None] | None = None,
+          inject_failure_at: int | None = None):
+    """Run until total_steps; returns (state, metrics_history).
+
+    ``inject_failure_at`` raises a synthetic RuntimeError once at that step
+    (fault-tolerance tests): the loop restores from the last checkpoint and
+    continues, and the final state must be bit-identical to an uninterrupted
+    run."""
+    cp = checkpointer or ckpt_lib.AsyncCheckpointer(loop_cfg.ckpt_dir,
+                                                    loop_cfg.keep_last)
+    watchdog = StragglerWatchdog(loop_cfg.straggler_factor,
+                                 loop_cfg.straggler_min_history)
+    history: list[dict] = []
+    failures = 0
+    injected = False
+
+    step = int(jax.device_get(state["step"]))
+    while step < loop_cfg.total_steps:
+        try:
+            if inject_failure_at is not None and step == inject_failure_at \
+                    and not injected:
+                injected = True
+                raise RuntimeError("synthetic node failure")
+            batch = batch_fn(step)
+            watchdog.step_started(step)
+            t0 = time.time()
+            state, metrics = train_step(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dur = time.time() - t0
+            watchdog.step_finished(dur)
+            step += 1
+            m = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+            m["step"] = step
+            m["sec"] = dur
+            history.append(m)
+            if on_metrics:
+                on_metrics(step, m)
+            if step % loop_cfg.log_every == 0:
+                log.info("step %d loss %.4f (%.3fs)", step, m["loss"], dur)
+            if step % loop_cfg.ckpt_every == 0 or step == loop_cfg.total_steps:
+                cp.save(state, step)
+        except Exception as e:  # noqa: BLE001 — the fault-tolerance boundary
+            failures += 1
+            log.warning("step %d failed (%s); restore attempt %d", step, e,
+                        failures)
+            if failures > loop_cfg.max_failures:
+                raise
+            cp.wait()
+            restored, rstep = ckpt_lib.restore(loop_cfg.ckpt_dir, state)
+            if restored is None:
+                log.warning("no checkpoint yet; restarting from current state")
+            else:
+                state = restored
+                step = rstep
+    cp.wait()
+    return state, history
+
+
+# ------------------------------------------------------------------ elastic
+
+def largest_mesh_shape(n_devices: int, prefer_model: int = 1):
+    """(data, model) grid for an arbitrary device count (elastic re-mesh)."""
+    import math
+    model = math.gcd(prefer_model, n_devices) if prefer_model > 1 else 1
+    return (n_devices // model, model)
+
+
+def elastic_resume(template_state, ckpt_dir: str, devices, *,
+                   prefer_model: int = 1, make_shardings=None):
+    """Rebuild a mesh over the surviving device set and restore the latest
+    checkpoint onto it.  Checkpoints are mesh-agnostic (host npz), so any
+    new topology works as long as shapes divide."""
+    from repro.util.compat import make_mesh
+    d, m = largest_mesh_shape(len(devices), prefer_model)
+    mesh = make_mesh((d, m), ("data", "model"), devices=devices[: d * m])
+    shardings = make_shardings(mesh) if make_shardings else None
+    state, step = ckpt_lib.restore(ckpt_dir, template_state,
+                                   shardings=shardings)
+    return state, step, mesh

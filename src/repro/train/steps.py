@@ -1,0 +1,151 @@
+"""Train/serve step factories — the single source of truth for what the
+dry-run lowers and what examples/tests execute.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function: fwd+bwd (remat per layer group), global-norm clip, AdamW or
+Adafactor update.  Under a mesh, params/optimizer follow the FSDP×TP rules
+in distributed/sharding.py and activations get batch constraints; the MoE
+layers switch to shard_map expert parallelism via models.Runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shard_rules
+from repro.models import lm
+from repro.models.transformer import NULL_RT, Runtime
+from repro.optim.optimizers import OptConfig, apply_updates, init_opt_state
+
+
+def make_runtime(mesh, *, seq_parallel: bool = False) -> Runtime:
+    if mesh is None:
+        return NULL_RT
+    return Runtime(mesh=mesh,
+                   constraint_fn=shard_rules.make_constraint_fn(
+                       mesh, seq_parallel=seq_parallel))
+
+
+def init_train_state(cfg: ModelConfig, opt_cfg: OptConfig, key):
+    params = lm.init_params(cfg, key)
+    return {"params": params,
+            "opt": init_opt_state(opt_cfg.kind, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_specs(cfg: ModelConfig, opt_cfg: OptConfig):
+    """abstract state (ShapeDtypeStructs) without allocating anything."""
+    return jax.eval_shape(
+        lambda: init_train_state(cfg, opt_cfg, jax.random.PRNGKey(0)))
+
+
+def state_shardings(state_spec, mesh):
+    """Params by rule; optimizer moments inherit their param's spec (same
+    shapes); scalars replicated."""
+    pshard = shard_rules.param_shardings(state_spec["params"], mesh)
+
+    def opt_leaf(path, leaf):
+        # match m/v/vr/vc back to the param tree where shapes align
+        spec = shard_rules.param_pspec(path, leaf, mesh)
+        return NamedSharding(mesh, spec)
+
+    oshard = jax.tree_util.tree_map_with_path(opt_leaf, state_spec["opt"])
+    return {"params": pshard, "opt": oshard,
+            "step": NamedSharding(mesh, P())}
+
+
+def batch_shardings(batch_spec, mesh):
+    def leaf(l):
+        return NamedSharding(
+            mesh, shard_rules.batch_pspec(mesh, l.ndim,
+                                          batch_dim_size=l.shape[0]))
+    return jax.tree.map(leaf, batch_spec)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, *, rt=NULL_RT,
+                    microbatches: int = 1):
+    """fwd+bwd+update.  ``microbatches`` > 1 enables gradient accumulation:
+    the global batch is split along dim 0 and run through a lax.scan, so
+    live activation memory scales with the microbatch — the standard
+    fit-a-70B-step-in-HBM lever (§Perf iteration 1).  Numerics: the mean of
+    per-microbatch grads equals the full-batch grad (equal-size splits)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, cfg, batch, rt=rt),
+            has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_step(carry, mbatch):
+                loss_a, grads_a = carry
+                loss, metrics, grads = grads_of(params, mbatch)
+                grads = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    grads_a, grads)
+                return (loss_a + loss / microbatches, grads), metrics
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (loss, grads), metrics_all = jax.lax.scan(
+                acc_step, (jnp.zeros(()), zero), mb)
+            metrics = jax.tree.map(lambda m: m[-1], metrics_all)
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        new_params, new_opt, gnorm = apply_updates(
+            opt_cfg, grads, state["opt"], params)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        out_metrics = {"loss": loss, "nll": metrics["nll"],
+                       "aux": metrics["aux"], "grad_norm": gnorm}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, kv_len: int, *, rt=NULL_RT):
+    def prefill_step(params, batch):
+        logits, caches = lm.prefill(params, cfg, batch, kv_len, rt=rt)
+        # return only last-position logits (what serving samples from)
+        return logits[:, -1, :], caches
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, rt=NULL_RT, greedy: bool = True):
+    """One decode step for a running batch: (params, caches, tokens, pos) ->
+    (next_tokens, caches)."""
+    def serve_step(params, caches, tokens, pos):
+        logits, caches = lm.decode_step(params, cfg, caches, tokens, pos,
+                                        rt=rt)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], caches
+    return serve_step
+
+
+# --------------------------------------------------------------- jit glue --
+
+def jitted_train_step(cfg, opt_cfg, mesh, *, seq_parallel=False,
+                      donate=True):
+    rt = make_runtime(mesh, seq_parallel=seq_parallel)
+    step = make_train_step(cfg, opt_cfg, rt=rt)
+    spec = train_state_specs(cfg, opt_cfg)
+    ssh = state_shardings(spec, mesh)
+    return functools.partial(
+        jax.jit(step,
+                in_shardings=(ssh, None),
+                out_shardings=(ssh, None),
+                donate_argnums=(0,) if donate else ())), ssh

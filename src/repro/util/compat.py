@@ -1,0 +1,30 @@
+"""Small compatibility shims across jax versions (0.6 – 0.8+)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """shard_map moved to jax.shard_map and check_rep→check_vma in 0.8."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check)
+        except TypeError:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as sm  # type: ignore
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=check)
+
+
+def make_mesh(shape, axis_names, *, devices=None):
+    """jax.make_mesh with the pre-0.9 Auto axis-type behaviour, warning-free."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axis_names,
+                             axis_types=(AxisType.Auto,) * len(axis_names),
+                             devices=devices)
+    except TypeError:
+        return jax.make_mesh(shape, axis_names, devices=devices)

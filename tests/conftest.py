@@ -1,0 +1,10 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+# (the dry-run sets its own 512-device flag in its own process).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,84 @@
+"""BPP solver: KKT optimality (property-based) + agreement with the
+unconstrained solution when it is feasible."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bpp import solve_bpp
+
+
+def _kkt_residuals(G, R, X):
+    Y = X @ G.T - R
+    comp = jnp.abs(X * Y)
+    return (float(jnp.min(X)), float(jnp.min(Y)), float(jnp.max(comp)))
+
+
+def test_kkt_basic():
+    key = jax.random.PRNGKey(0)
+    C = jax.random.normal(key, (200, 12))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (200, 64))
+    G, R = C.T @ C, (C.T @ B).T
+    X = solve_bpp(G, R)
+    xmin, ymin, comp = _kkt_residuals(G, R, X)
+    assert xmin >= -1e-6
+    assert ymin >= -1e-3
+    assert comp < 1e-4 * float(jnp.max(jnp.abs(R)) + 1)
+
+
+def test_interior_solution_matches_lstsq():
+    """If the unconstrained solution is positive, BPP must return it."""
+    key = jax.random.PRNGKey(3)
+    k = 6
+    Q = jax.random.normal(key, (40, k))
+    G = Q.T @ Q + jnp.eye(k)
+    x_true = jax.random.uniform(jax.random.fold_in(key, 1), (5, k)) + 0.5
+    R = x_true @ G.T
+    X = solve_bpp(G, R)
+    np.testing.assert_allclose(np.asarray(X), np.asarray(x_true),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_zero_rhs():
+    G = jnp.eye(4)
+    X = solve_bpp(G, jnp.zeros((3, 4)))
+    assert float(jnp.max(jnp.abs(X))) == 0.0
+
+
+def test_all_negative_rhs_gives_zero():
+    G = jnp.eye(4)
+    R = -jnp.ones((3, 4))
+    X = solve_bpp(G, R)          # y = -r >= 0 at x=0: already optimal
+    assert float(jnp.max(jnp.abs(X))) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(1, 12), st.integers(0, 10 ** 6))
+def test_kkt_property(k, r, seed):
+    key = jax.random.PRNGKey(seed)
+    C = jax.random.normal(key, (3 * k, k))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (3 * k, r)) * 3.0
+    G, R = C.T @ C, (C.T @ B).T
+    X = solve_bpp(G, R)
+    scale = float(jnp.max(jnp.abs(R))) + 1.0
+    xmin, ymin, comp = _kkt_residuals(G, R, X)
+    assert xmin >= -1e-5 * scale
+    assert ymin >= -5e-3 * scale
+    assert comp < 5e-3 * scale
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_bpp_objective_not_worse_than_projection(seed):
+    """BPP's objective must beat (or match) the clipped least squares."""
+    key = jax.random.PRNGKey(seed)
+    k = 8
+    C = jax.random.normal(key, (32, k))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (32, 1))
+    G, R = C.T @ C, (C.T @ b).T
+    X = solve_bpp(G, R)
+    naive = jnp.maximum(jnp.linalg.lstsq(C, b)[0].T, 0.0)
+    f = lambda x: float(jnp.sum((C @ x.T - b) ** 2))
+    assert f(X) <= f(naive) + 1e-4 * f(naive)

@@ -1,0 +1,25 @@
+"""Drives tests/distributed_checks.py in one subprocess with 8 fake host
+devices (XLA locks the device count at first jax init, so multi-device
+tests cannot run in the main pytest process)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+@pytest.mark.timeout(1200)
+def test_distributed_checks():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "distributed_checks.py")],
+        capture_output=True, text=True, env=env, timeout=1150)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distributed checks failed (see output)"
+    assert "0 failures" in proc.stdout

@@ -1,0 +1,107 @@
+"""Per-kernel allclose vs the pure-jnp oracles, sweeping shapes and dtypes
+(interpret mode on CPU; the same asserts compile on TPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+SHAPES = [(64, 48, 8), (96, 128, 16), (100, 70, 10), (128, 64, 50),
+          (32, 256, 4)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(shape, dt, salt):
+    return jax.random.uniform(jax.random.fold_in(KEY, salt), shape,
+                              jnp.float32).astype(dt)
+
+
+def _tol(dt):
+    return 1e-5 if dt == jnp.float32 else 2e-2
+
+
+def _assert_close(got, want, dt):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    scale = np.abs(want).max() + 1e-9
+    np.testing.assert_allclose(got / scale, want / scale, atol=_tol(dt))
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_gram(m, n, k, dt):
+    X = _rand((m, k), dt, 1)
+    _assert_close(ops.gram(X), ref.gram(X), dt)
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_ts_matmul(m, n, k, dt):
+    A = _rand((m, n), dt, 2)
+    B = _rand((n, k), dt, 3)
+    _assert_close(ops.ts_matmul(A, B), ref.ts_matmul(A, B), dt)
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_ts_matmul_t(m, n, k, dt):
+    A = _rand((m, n), dt, 4)
+    B = _rand((m, k), dt, 5)
+    _assert_close(ops.ts_matmul_t(A, B), ref.ts_matmul_t(A, B), dt)
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_mu_update(m, n, k, dt):
+    X = _rand((m, k), dt, 6)
+    G = ref.gram(_rand((30, k), dt, 7)).astype(dt)
+    R = _rand((m, k), dt, 8)
+    _assert_close(ops.mu_update(X, G, R), ref.mu_update(X, G, R), dt)
+
+
+@pytest.mark.parametrize("m,n,k", SHAPES)
+@pytest.mark.parametrize("dt", DTYPES)
+def test_hals_sweep(m, n, k, dt):
+    X = _rand((m, k), dt, 9)
+    G = ref.gram(_rand((30, k), dt, 10)).astype(dt)
+    R = _rand((m, k), dt, 11)
+    _assert_close(ops.hals_sweep(X, G, R), ref.hals_sweep(X, G, R), dt)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 96), st.integers(1, 96), st.integers(1, 24),
+       st.integers(0, 10 ** 6))
+def test_ts_matmul_property(m, n, k, seed):
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (m, n))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
+    _assert_close(ops.ts_matmul(A, B), A @ B, jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 80), st.integers(1, 20), st.integers(0, 10 ** 6))
+def test_gram_property(m, k, seed):
+    X = jax.random.normal(jax.random.PRNGKey(seed), (m, k))
+    G = ops.gram(X)
+    _assert_close(G, X.T @ X, jnp.float32)
+    np.testing.assert_allclose(np.asarray(G), np.asarray(G).T, atol=1e-5)
+
+
+def test_hals_sweep_is_sequential():
+    """The sweep must use updated columns for later columns (BCD order) —
+    compare against an (incorrect) Jacobi-style simultaneous update."""
+    X = _rand((40, 6), jnp.float32, 12)
+    G = ref.gram(_rand((30, 6), jnp.float32, 13))
+    R = _rand((40, 6), jnp.float32, 14)
+    seq = np.asarray(ops.hals_sweep(X, G, R))
+    jacobi = np.maximum(
+        np.asarray(X) + (np.asarray(R) - np.asarray(X) @ np.asarray(G))
+        / np.diag(np.asarray(G)), 0.0)
+    assert not np.allclose(seq, jacobi, atol=1e-5)
+    np.testing.assert_allclose(seq, np.asarray(ref.hals_sweep(X, G, R)),
+                               atol=1e-5)

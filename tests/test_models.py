@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and finiteness (the full configs are exercised
+only via the dry-run, per the assignment)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as cb
+from repro.models import lm
+from repro.optim.optimizers import OptConfig
+from repro.train import steps as steps_lib
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    key = jax.random.fold_in(KEY, 1)
+    b = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+         "labels": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.is_encdec:
+        b["enc_frames"] = 0.1 * jax.random.normal(key, (B, S, cfg.d_model))
+    if cfg.frontend == "image_patches":
+        b["img_embeds"] = 0.1 * jax.random.normal(
+            key, (B, cfg.num_image_tokens, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", cb.ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = cb.get_reduced_config(arch)
+    params = lm.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    logits, _, aux = lm.forward(params, cfg, batch)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", cb.ARCH_IDS)
+def test_train_step_descends(arch):
+    cfg = cb.get_reduced_config(arch)
+    opt = OptConfig(kind="adamw", lr=3e-3, warmup_steps=1, total_steps=20,
+                    weight_decay=0.0)
+    state = steps_lib.init_train_state(cfg, opt, KEY)
+    step = jax.jit(steps_lib.make_train_step(cfg, opt))
+    batch = _batch(cfg)
+    losses = []
+    for _ in range(5):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+        assert np.isfinite(losses[-1])
+        assert np.isfinite(float(m["grad_norm"]))
+    assert losses[-1] < losses[0], losses    # overfits one batch
+
+
+@pytest.mark.parametrize("arch", ["qwen2_72b", "llama4_maverick"])
+def test_adafactor_variant(arch):
+    cfg = cb.get_reduced_config(arch)
+    opt = OptConfig(kind="adafactor", lr=1e-2, warmup_steps=1,
+                    total_steps=20, weight_decay=0.0)
+    state = steps_lib.init_train_state(cfg, opt, KEY)
+    step = jax.jit(steps_lib.make_train_step(cfg, opt))
+    batch = _batch(cfg)
+    losses = []
+    for _ in range(5):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0]
+
+
+def test_full_configs_match_assignment():
+    """Exact published dims from the assignment table."""
+    spec = {
+        "whisper_base": dict(n_layers=6, d_model=512, n_heads=8, n_kv=8,
+                             d_ff=2048, vocab=51865),
+        "smollm_135m": dict(n_layers=30, d_model=576, n_heads=9, n_kv=3,
+                            d_ff=1536, vocab=49152),
+        "granite_20b": dict(n_layers=52, d_model=6144, n_heads=48, n_kv=1,
+                            d_ff=24576, vocab=49152),
+        "qwen2_72b": dict(n_layers=80, d_model=8192, n_heads=64, n_kv=8,
+                          d_ff=29568, vocab=152064),
+        "yi_34b": dict(n_layers=60, d_model=7168, n_heads=56, n_kv=8,
+                       d_ff=20480, vocab=64000),
+        "llama32_vision_90b": dict(n_layers=100, d_model=8192, n_heads=64,
+                                   n_kv=8, d_ff=28672, vocab=128256),
+        "xlstm_125m": dict(n_layers=12, d_model=768, n_heads=4, n_kv=4,
+                           d_ff=0, vocab=50304),
+        "llama4_maverick": dict(n_layers=48, d_model=5120, n_heads=40,
+                                n_kv=8, d_ff=8192, vocab=202048),
+        "dbrx_132b": dict(n_layers=40, d_model=6144, n_heads=48, n_kv=8,
+                          d_ff=10752, vocab=100352),
+        "recurrentgemma_9b": dict(n_layers=38, d_model=4096, n_heads=16,
+                                  n_kv=1, d_ff=12288, vocab=256000),
+    }
+    for arch, want in spec.items():
+        cfg = cb.get_config(arch)
+        for k, v in want.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    assert cb.get_config("llama4_maverick").moe.n_experts == 128
+    assert cb.get_config("llama4_maverick").moe.top_k == 1
+    assert cb.get_config("dbrx_132b").moe.n_experts == 16
+    assert cb.get_config("dbrx_132b").moe.top_k == 4
+    assert cb.get_config("recurrentgemma_9b").window == 2048
+
+
+def test_alias_lookup():
+    assert cb.get_config("qwen2-72b").name == "qwen2-72b"
+    assert cb.get_config("llama4-maverick-400b-a17b").moe.n_experts == 128
+
+
+def test_long_context_eligibility():
+    for arch in cb.ARCH_IDS:
+        cfg = cb.get_config(arch)
+        runnable, reason = cb.cell_is_runnable(cfg, cb.SHAPES["long_500k"])
+        if arch in ("xlstm_125m", "recurrentgemma_9b"):
+            assert runnable, arch
+        else:
+            assert not runnable and reason, arch
+
+
+def test_input_specs_cover_all_cells():
+    for arch in cb.ARCH_IDS:
+        cfg = cb.get_config(arch)
+        for shape in cb.SHAPES.values():
+            specs = lm.input_specs(cfg, shape)
+            assert "tokens" in specs
+            if shape.kind == "decode":
+                assert "caches" in specs and "pos" in specs
+            leaves = jax.tree.leaves(specs)
+            assert all(hasattr(l, "shape") for l in leaves)
+
+
+def test_causal_skip_matches_baseline():
+    """§Perf lever: statically-unrolled causal chunk skipping must be
+    numerically identical to the scan-all-then-mask baseline."""
+    from repro.models import attention as attn_lib
+    key = jax.random.PRNGKey(3)
+    B, S, H, KH, hd = 2, 128, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KH, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KH, hd))
+    base = attn_lib.blockwise_attention(q, k, v, causal=True, q_chunk=32,
+                                        kv_chunk=32)
+    skip = attn_lib.blockwise_attention(q, k, v, causal=True, q_chunk=32,
+                                        kv_chunk=32, causal_skip=True)
+    assert float(jnp.max(jnp.abs(base - skip))) < 1e-5
+    g1 = jax.grad(lambda q: jnp.sum(attn_lib.blockwise_attention(
+        q, k, v, causal=True, q_chunk=32, kv_chunk=32) ** 2))(q)
+    g2 = jax.grad(lambda q: jnp.sum(attn_lib.blockwise_attention(
+        q, k, v, causal=True, q_chunk=32, kv_chunk=32,
+        causal_skip=True) ** 2))(q)
+    assert float(jnp.max(jnp.abs(g1 - g2))) < 1e-4

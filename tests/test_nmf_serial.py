@@ -1,0 +1,79 @@
+"""Serial AU-NMF: monotone descent, error ordering, sparse input, error
+computation identities."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aunmf
+from repro.core.error import relative_error, sq_error_from_products, sq_frobenius
+from repro.data.pipeline import lowrank_matrix
+
+KEY = jax.random.PRNGKey(0)
+A = lowrank_matrix(KEY, 120, 90, 8, noise=0.01)
+
+
+@pytest.mark.parametrize("algo", ["mu", "hals", "bpp"])
+def test_monotone_descent(algo):
+    res = aunmf.fit(A, 8, algo=algo, iters=40, key=KEY)
+    r = np.asarray(res.rel_errors)
+    assert np.all(np.isfinite(r))
+    assert np.all(np.diff(r) <= 1e-5), f"{algo} not monotone: {r}"
+
+
+def test_factors_nonnegative():
+    for algo in ["mu", "hals", "bpp"]:
+        res = aunmf.fit(A, 6, algo=algo, iters=10, key=KEY)
+        assert float(jnp.min(res.W)) >= 0.0
+        assert float(jnp.min(res.H)) >= 0.0
+
+
+def test_error_ordering_matches_paper():
+    """Paper §6.2: ABPP <= HALS <= MU on relative error (same seed/iters)."""
+    errs = {a: float(aunmf.fit(A, 8, algo=a, iters=40, key=KEY)
+                     .rel_errors[-1]) for a in ["mu", "hals", "bpp"]}
+    assert errs["bpp"] <= errs["hals"] + 1e-3, errs
+    assert errs["hals"] <= errs["mu"] + 1e-3, errs
+
+
+def test_exact_lowrank_recovery():
+    A0 = lowrank_matrix(jax.random.fold_in(KEY, 5), 80, 60, 4, noise=0.0)
+    res = aunmf.fit(A0, 4, algo="bpp", iters=120, key=KEY)
+    assert float(res.rel_errors[-1]) < 2e-2
+
+
+def test_sparse_bcoo_matches_dense():
+    from jax.experimental import sparse as jsparse
+    Ad = jnp.where(jax.random.bernoulli(KEY, 0.3, A.shape), A, 0.0)
+    As = jsparse.BCOO.fromdense(Ad)
+    rd = aunmf.fit(Ad, 6, algo="mu", iters=8, key=KEY)
+    rs = aunmf.fit(As, 6, algo="mu", iters=8, key=KEY)
+    np.testing.assert_allclose(np.asarray(rd.W), np.asarray(rs.W), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(rd.rel_errors),
+                               np.asarray(rs.rel_errors), atol=1e-5)
+
+
+def test_trace_trick_error_identity():
+    key = jax.random.fold_in(KEY, 9)
+    W = jax.random.uniform(key, (50, 5))
+    H = jax.random.uniform(jax.random.fold_in(key, 1), (5, 40))
+    direct = float(jnp.linalg.norm(A[:50, :40] - W @ H)
+                   / jnp.linalg.norm(A[:50, :40]))
+    tricked = float(relative_error(A[:50, :40], W, H))
+    assert abs(direct - tricked) < 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 6))
+def test_error_from_products_property(seed, k):
+    key = jax.random.PRNGKey(seed)
+    m, n = 30, 25
+    Am = jax.random.uniform(key, (m, n))
+    W = jax.random.uniform(jax.random.fold_in(key, 1), (m, k))
+    H = jax.random.uniform(jax.random.fold_in(key, 2), (k, n))
+    sq = sq_error_from_products(sq_frobenius(Am), W.T @ Am, H, W.T @ W,
+                                H @ H.T)
+    direct = float(jnp.sum((Am - W @ H) ** 2))
+    assert abs(float(sq) - direct) < 1e-2 * max(direct, 1.0)
