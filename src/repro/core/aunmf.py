@@ -1,4 +1,4 @@
-"""Serial AU-NMF driver (paper Algorithm 1) — the single-device oracle.
+"""Serial AU-NMF (paper Algorithm 1) — the single-device oracle.
 
 This is the reference implementation every parallel path (core/faun.py,
 core/naive.py, GSPMD variant) is tested against for *bit-level* agreement
@@ -9,19 +9,21 @@ to fp tolerance.
 Also supports sparse A as a ``jax.experimental.sparse.BCOO`` matrix — the
 four matrix products are the only places A appears, so sparsity is contained
 here (as in the paper, where only the local SpMM kernels change).
+
+``fit`` is a thin compatibility wrapper over ``core.engine.NMFSolver`` with
+``schedule="serial"``; the iteration body (``aunmf_step``) and the factor
+initialisers live here and are what the engine composes.
 """
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import algorithms
-from repro.core.error import sq_frobenius, sq_error_from_products
+from repro.core.error import sq_error_from_products
 
 
 @dataclass
@@ -39,34 +41,6 @@ def init_h(key: jax.Array, n: int, k: int, dtype=jnp.float32) -> jax.Array:
     return jax.random.uniform(key, (k, n), dtype=dtype)
 
 
-def _matmuls_w(A, H):
-    """HHᵀ and AHᵀ (dense or BCOO A)."""
-    HHt = H @ H.T
-    AHt = A @ H.T
-    return HHt, AHt
-
-
-def _matmuls_h(A, W):
-    """WᵀW and WᵀA.  For BCOO A compute (AᵀW)ᵀ to keep A un-transposed."""
-    WtW = W.T @ W
-    if isinstance(A, jax.Array):
-        WtA = W.T @ A
-    else:  # BCOO: (Aᵀ W)ᵀ via transposed matvec path
-        WtA = (A.T @ W).T
-    return WtW, WtA
-
-
-def aunmf_step(A, W, H, update_w, update_h, normA_sq):
-    """One full AU-NMF iteration; returns (W, H, sq_error)."""
-    HHt, AHt = _matmuls_w(A, H)
-    W = update_w(HHt, AHt, W)
-    WtW, WtA = _matmuls_h(A, W)
-    Ht = update_h(WtW, WtA.T, H.T)
-    H = Ht.T
-    sq = sq_error_from_products(normA_sq, WtA, H, WtW, H @ H.T)
-    return W, H, sq
-
-
 def init_w(key: jax.Array, m: int, k: int, algo: str, dtype=jnp.float32):
     """W needs no init for HALS/BPP (first update ignores it additively /
     re-solves); MU is multiplicative so W must start positive (paper's code
@@ -76,46 +50,38 @@ def init_w(key: jax.Array, m: int, k: int, algo: str, dtype=jnp.float32):
     return jnp.zeros((m, k), dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("algo", "iters"))
-def _fit_dense(A, W0, H0, *, algo: str, iters: int):
-    update_w, update_h = algorithms.get_update_fns(algo)
-    normA_sq = sq_frobenius(A)
+def aunmf_step(A, W, H, update_w, update_h, normA_sq, *,
+               mm: Callable | None = None, mm_t: Callable | None = None):
+    """One full AU-NMF iteration; returns (W, H, sq_error).
 
-    def body(carry, _):
-        W, H = carry
-        W, H, sq = aunmf_step(A, W, H, update_w, update_h, normA_sq)
-        rel = jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq)
-        return (W, H), rel
-
-    (W, H), rels = jax.lax.scan(body, (W0, H0), None, length=iters)
-    return W, H, rels
+    ``mm(A, B) -> A @ B`` and ``mm_t(A, B) -> Aᵀ @ B`` are the local-matmul
+    backend hooks (None = plain XLA, with the BCOO-aware default for sparse
+    A: (AᵀW)ᵀ keeps A un-transposed).
+    """
+    HHt = H @ H.T
+    AHt = mm(A, H.T) if mm is not None else A @ H.T
+    W = update_w(HHt, AHt, W)
+    WtW = W.T @ W
+    if mm_t is not None:
+        WtA = mm_t(A, W).T
+    elif isinstance(A, jax.Array):
+        WtA = W.T @ A
+    else:  # BCOO: (Aᵀ W)ᵀ via transposed matvec path
+        WtA = (A.T @ W).T
+    Ht = update_h(WtW, WtA.T, H.T)
+    H = Ht.T
+    sq = sq_error_from_products(normA_sq, WtA, H, WtW, H @ H.T)
+    return W, H, sq
 
 
 def fit(A, k: int, *, algo: str = "bpp", iters: int = 30,
         key: jax.Array | None = None, H0: jax.Array | None = None,
         W0: jax.Array | None = None) -> NMFResult:
     """Run AU-NMF for a fixed number of iterations (the paper's stopping
-    criterion for all benchmarks)."""
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    dtype = getattr(A, "dtype", jnp.float32)
-    if H0 is None:
-        H0 = init_h(key, A.shape[1], k, dtype=dtype)
-    if W0 is None:
-        W0 = init_w(jax.random.fold_in(key, 1), A.shape[0], k, algo, dtype=dtype)
-    if isinstance(A, jax.Array):
-        W, H, rels = _fit_dense(A, W0, H0, algo=algo, iters=iters)
-    else:
-        # Sparse (BCOO): python loop — jit per step (scan over BCOO closure
-        # constants is fine too, but keep it simple and allocation-friendly).
-        update_w, update_h = algorithms.get_update_fns(algo)
-        normA_sq = jnp.sum(A.data.astype(jnp.float32) ** 2)
-        W, H = W0, H0
-        step = jax.jit(functools.partial(
-            aunmf_step, update_w=update_w, update_h=update_h, normA_sq=normA_sq))
-        rels = []
-        for _ in range(iters):
-            W, H, sq = step(A, W, H)
-            rels.append(jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq))
-        rels = jnp.stack(rels)
-    return NMFResult(W=W, H=H, rel_errors=rels, algo=algo, iters=iters)
+    criterion for all benchmarks).  Dense arrays use the dense backend; BCOO
+    input routes through the sparse backend unchanged."""
+    from repro.core.engine import NMFSolver
+    backend = "dense" if isinstance(A, jax.Array) else "sparse"
+    solver = NMFSolver(k, algo=algo, schedule="serial", backend=backend,
+                       max_iters=iters)
+    return solver.fit(A, key=key, H0=H0, W0=W0)

@@ -1,0 +1,152 @@
+"""Block-local sparse storage for the distributed-sparse NMF path.
+
+The paper's invariant is that the data matrix A is **never communicated** —
+only k-width factor panels cross the wire.  For sparse A on a pr × pc
+processor grid we therefore store each grid block A_ij as block-local COO
+triplets, padded to the max per-block nnz so the three ``(gr, gc, nnz_max)``
+arrays shard cleanly over the mesh: every device holds exactly its own
+block's triplets and nothing else.  Padding entries are ``(row=0, col=0,
+val=0)`` and contribute nothing to the scatter-add SpMM, so they are safe by
+construction (same trick as the Pallas kernels' zero padding).
+
+The local SpMM kernels below are the ONLY sparse-aware component — exactly
+how PL-NMF (arXiv:1904.07935) and DID (arXiv:1802.08938) contain sparsity —
+so every schedule/collective in core/faun.py runs unchanged on top of them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockCOO:
+    """A (gr, gc)-blocked sparse matrix as padded block-local COO triplets.
+
+    vals/rows/cols are (gr, gc, nnz_max); rows/cols are int32 indices
+    *within* the block.  ``shape`` is the global (m, n); ``block_shape`` is
+    (m/gr, n/gc); ``nnz`` the true (pre-padding) nonzero count.
+    """
+
+    vals: Any
+    rows: Any
+    cols: Any
+    shape: tuple[int, int]
+    block_shape: tuple[int, int]
+    nnz: int
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return (self.shape[0] // self.block_shape[0],
+                self.shape[1] // self.block_shape[1])
+
+    def tree_flatten(self):
+        return ((self.vals, self.rows, self.cols),
+                (self.shape, self.block_shape, self.nnz))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        vals, rows, cols = children
+        shape, block_shape, nnz = aux
+        return cls(vals, rows, cols, shape, block_shape, nnz)
+
+    def todense(self) -> np.ndarray:
+        """Host-side densification (tests / small problems only)."""
+        gr, gc = self.grid
+        mb, nb = self.block_shape
+        out = np.zeros(self.shape, dtype=np.asarray(self.vals).dtype)
+        V = np.asarray(self.vals)
+        R = np.asarray(self.rows)
+        C = np.asarray(self.cols)
+        for i in range(gr):
+            for j in range(gc):
+                # += so duplicate (padding) indices accumulate like the SpMM
+                np.add.at(out[i * mb:(i + 1) * mb, j * nb:(j + 1) * nb],
+                          (R[i, j], C[i, j]), V[i, j])
+        return out
+
+
+def from_bcoo(A, gr: int, gc: int) -> BlockCOO:
+    """Blockify a ``jax.experimental.sparse.BCOO`` matrix for a gr×gc grid."""
+    m, n = A.shape
+    if m % gr or n % gc:
+        raise ValueError(f"A of shape {A.shape} does not tile a "
+                         f"{gr}×{gc} grid")
+    mb, nb = m // gr, n // gc
+    idx = np.asarray(A.indices)
+    vals = np.asarray(A.data)
+    # BCOO can carry padding rows pointing at (0, 0) with value 0 — keep
+    # them; they are harmless under scatter-add, same as our own padding.
+    flat = (idx[:, 0] // mb) * gc + (idx[:, 1] // nb)
+    order = np.argsort(flat, kind="stable")
+    flat_s = flat[order]
+    counts = np.bincount(flat_s, minlength=gr * gc)
+    nnz_max = max(int(counts.max()) if counts.size else 0, 1)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    slot = np.arange(flat_s.size) - starts[flat_s]
+
+    V = np.zeros((gr * gc, nnz_max), dtype=vals.dtype)
+    R = np.zeros((gr * gc, nnz_max), dtype=np.int32)
+    C = np.zeros((gr * gc, nnz_max), dtype=np.int32)
+    V[flat_s, slot] = vals[order]
+    R[flat_s, slot] = idx[order, 0] % mb
+    C[flat_s, slot] = idx[order, 1] % nb
+
+    return BlockCOO(
+        vals=jnp.asarray(V.reshape(gr, gc, nnz_max)),
+        rows=jnp.asarray(R.reshape(gr, gc, nnz_max)),
+        cols=jnp.asarray(C.reshape(gr, gc, nnz_max)),
+        shape=(m, n), block_shape=(mb, nb), nnz=int(vals.size))
+
+
+def blockify(A, gr: int, gc: int) -> BlockCOO:
+    """BlockCOO from dense, BCOO, or an already-blocked BlockCOO."""
+    if isinstance(A, BlockCOO):
+        if A.grid != (gr, gc):
+            raise ValueError(f"BlockCOO blocked for {A.grid}, need {(gr, gc)}")
+        return A
+    if isinstance(A, jax.Array):
+        from jax.experimental import sparse as jsparse
+        A = jsparse.BCOO.fromdense(A)
+    return from_bcoo(A, gr, gc)
+
+
+def sq_norm(A: BlockCOO) -> jax.Array:
+    """||A||_F² in fp32 (padding values are exact zeros)."""
+    v = A.vals.astype(jnp.float32)
+    return jnp.sum(v * v)
+
+
+# ---------------------------------------------------------------------------
+# Local SpMM kernels — the faun_iteration local_mm/local_mm_t hooks.
+# Run inside shard_map on the device-local block (leaves are (1, 1, nnz)).
+# ---------------------------------------------------------------------------
+
+def _local_triplets(blk: BlockCOO):
+    return (blk.vals.reshape(-1), blk.rows.reshape(-1), blk.cols.reshape(-1))
+
+
+def local_spmm(blk: BlockCOO, B: jax.Array) -> jax.Array:
+    """A_blk @ B via scatter-add: (m_blk, n_blk) sparse × (n_blk, k)."""
+    v, r, c = _local_triplets(blk)
+    out = jnp.zeros((blk.block_shape[0], B.shape[-1]), jnp.float32)
+    return out.at[r].add(v.astype(jnp.float32)[:, None]
+                         * B[c].astype(jnp.float32))
+
+
+def local_spmm_t(blk: BlockCOO, B: jax.Array) -> jax.Array:
+    """A_blkᵀ @ B without transposing storage: scatter into columns."""
+    v, r, c = _local_triplets(blk)
+    out = jnp.zeros((blk.block_shape[1], B.shape[-1]), jnp.float32)
+    return out.at[c].add(v.astype(jnp.float32)[:, None]
+                         * B[r].astype(jnp.float32))

@@ -71,6 +71,40 @@ class IterCost:
                 + mach.alpha * self.messages)
 
 
+def serial_cost(m: int, n: int, k: int, *, algo: str = "bpp",
+                dense: bool = True, nnz: float = 0.0,
+                bpp_iters: float = 1.0) -> IterCost:
+    """Single-device baseline (p = 1): all flops, no communication."""
+    mm_flops = 4.0 * m * n * k if dense else 4.0 * nnz * k
+    gram_flops = (m + n) * k * k
+    flops = mm_flops + gram_flops + luc_flops(algo, m, n, k,
+                                              bpp_iters=bpp_iters)
+    mem = (m * n if dense else nnz) + (m + n) * k
+    return IterCost(flops, 0.0, 0.0, mem)
+
+
+def schedule_cost(schedule: str, m: int, n: int, k: int, *, pr: int = 1,
+                  pc: int = 1, algo: str = "bpp", dense: bool = True,
+                  nnz: float = 0.0, bpp_iters: float = 1.0) -> IterCost:
+    """One entry point for every engine schedule, threading nnz through.
+
+    ``gspmd`` is modelled with the FAUN formulas — its *optimal* schedule —
+    so the measured-HLO gap (see core/gspmd.py: 121× more wire bytes) reads
+    directly as the auto-partitioner's overhead versus this prediction.
+    """
+    schedule = schedule.lower()
+    if schedule == "serial":
+        return serial_cost(m, n, k, algo=algo, dense=dense, nnz=nnz,
+                           bpp_iters=bpp_iters)
+    if schedule in ("faun", "gspmd"):
+        return mpifaun_cost(m, n, k, pr, pc, algo=algo, dense=dense, nnz=nnz,
+                            bpp_iters=bpp_iters)
+    if schedule == "naive":
+        return naive_cost(m, n, k, pr * pc, algo=algo, dense=dense, nnz=nnz,
+                          bpp_iters=bpp_iters)
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
 def mpifaun_cost(m: int, n: int, k: int, pr: int, pc: int, *,
                  algo: str = "bpp", dense: bool = True, nnz: float = 0.0,
                  bpp_iters: float = 1.0) -> IterCost:

@@ -1,0 +1,526 @@
+"""Unified AU-NMF solver engine: one driver lifecycle, pluggable schedules.
+
+Before this module the four drivers (core/aunmf.py, core/faun.py,
+core/naive.py, core/gspmd.py) each reimplemented factor init, device
+placement, the ``lax.scan`` loop, error tracking, and result packing.
+``NMFSolver`` owns that lifecycle once and composes two plug points:
+
+* **schedule** — who computes which block of the four matrix products and
+  which collectives move the k-width panels:
+
+    - ``serial``  single-device oracle (paper Algorithm 1)
+    - ``faun``    MPI-FAUN on a pr×pc grid (Algorithm 3, shard_map)
+    - ``naive``   Naive-Parallel-AUNMF baseline (Algorithm 2, 1-D mesh)
+    - ``gspmd``   global-view program, XLA's partitioner picks collectives
+
+* **backend** — how the local A-multiplies are computed:
+
+    - ``dense``   plain XLA GEMMs
+    - ``pallas``  the kernels/ops.py Pallas kernels
+    - ``sparse``  block-local COO SpMM (core/blocksparse.py); A's blocks
+                  never cross the wire, per the paper's invariant
+
+Support matrix (✓ = implemented):
+
+    schedule \\ backend   dense   pallas   sparse
+    serial                 ✓       ✓        ✓  (BCOO)
+    faun                   ✓       ✓        ✓  (BlockCOO)
+    naive                  ✓       —        —
+    gspmd                  ✓       —        —
+
+On top of the unified loop every schedule gets the same stopping-criterion
+subsystem: fixed iterations (the paper's benchmark protocol), relative-error
+tolerance, and stall detection — adaptive stopping compiles to a
+``lax.while_loop`` so distributed runs halt early without host round-trips.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import algorithms, blocksparse
+from repro.core.aunmf import NMFResult, aunmf_step, init_h, init_w
+from repro.core.error import sq_frobenius
+from repro.util.compat import make_mesh
+
+SCHEDULES = ("serial", "faun", "naive", "gspmd")
+BACKENDS = ("dense", "pallas", "sparse")
+
+
+def _is_bcoo(A) -> bool:
+    return type(A).__name__ == "BCOO"
+
+
+# ---------------------------------------------------------------------------
+# Stopping criteria
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class StoppingCriterion:
+    """When to halt the alternating updates.
+
+    ``max_iters`` always bounds the loop (the paper's fixed-iteration
+    protocol).  ``tol`` halts once the relative error drops below it;
+    ``stall_iters`` halts after that many consecutive iterations without an
+    improvement larger than ``stall_tol``.  Any combination composes.
+    """
+
+    max_iters: int = 30
+    tol: float | None = None
+    stall_iters: int = 0
+    stall_tol: float = 1e-6
+
+    @property
+    def adaptive(self) -> bool:
+        return self.tol is not None or self.stall_iters > 0
+
+
+# ---------------------------------------------------------------------------
+# Schedules.  Each is an iteration body + a layout spec; the engine owns the
+# loop.  The step contract is step(Arep, W, Ht, normA_sq) -> (W, Ht, sq_err)
+# over (m,k) W and (n,k) Ht (transposed H), however Arep is represented.
+# ---------------------------------------------------------------------------
+
+class _Schedule:
+    """Shared schedule surface: the engine calls prepare/build_step/collect;
+    lower_step uses abstract_args/arg_shardings; the run cache uses
+    cache_key (must capture everything build_step's closure depends on)."""
+
+    name: str
+
+    def collect(self, W, Ht):
+        return W, Ht.T
+
+    def _dense_abstract_args(self, m, n, dtype):
+        k = self.s.k
+        return (jax.ShapeDtypeStruct((m, n), dtype),
+                jax.ShapeDtypeStruct((m, k), dtype),
+                jax.ShapeDtypeStruct((n, k), dtype),
+                jax.ShapeDtypeStruct((), jnp.float32))
+
+    def _require_dense(self, A):
+        if not isinstance(A, jax.Array):
+            raise ValueError(
+                f"{self.name} schedule is dense-only; got "
+                f"{type(A).__name__} — use schedule='faun' with "
+                f"backend='sparse' for sparse input")
+        return A
+
+
+class _GridSchedule(_Schedule):
+    """Schedules laid out on a FaunGrid (paper Fig. 2 shardings)."""
+
+    def _spec_A(self):
+        return self.grid.spec_A()
+
+    @property
+    def p(self) -> int:
+        return self.grid.p
+
+    def grid_shape(self) -> tuple[int, int]:
+        return (self.grid.pr, self.grid.pc)
+
+    def arg_shardings(self):
+        grid = self.grid
+        in_sh = (grid.sharding(self._spec_A()), grid.sharding(grid.spec_W()),
+                 grid.sharding(grid.spec_Ht()), None)
+        out_sh = (grid.sharding(grid.spec_W()), grid.sharding(grid.spec_Ht()),
+                  None)
+        return in_sh, out_sh
+
+
+class _SerialSchedule(_Schedule):
+    name = "serial"
+
+    def __init__(self, solver: "NMFSolver"):
+        self.s = solver
+
+    @property
+    def p(self) -> int:
+        return 1
+
+    def grid_shape(self) -> tuple[int, int]:
+        return (1, 1)
+
+    def cache_key(self):
+        return (self.name, self.s.algo, self.s.backend)
+
+    def prepare(self, A, W0, H0):
+        if self.s.backend == "sparse" and isinstance(A, jax.Array):
+            from jax.experimental import sparse as jsparse
+            A = jsparse.BCOO.fromdense(A)
+        if _is_bcoo(A):
+            normA_sq = jnp.sum(A.data.astype(jnp.float32) ** 2)
+        else:
+            normA_sq = sq_frobenius(A)
+        return A, W0, H0.T, normA_sq
+
+    def build_step(self) -> Callable:
+        update_w, update_h = algorithms.get_update_fns(self.s.algo)
+        mm = mm_t = None
+        if self.s.backend == "pallas":
+            from repro.kernels import ops as kops
+            mm, mm_t = kops.ts_matmul, kops.ts_matmul_t
+
+        def step(A, W, Ht, normA_sq):
+            W, H, sq = aunmf_step(A, W, Ht.T, update_w, update_h, normA_sq,
+                                  mm=mm, mm_t=mm_t)
+            return W, H.T, sq
+
+        return step
+
+    def abstract_args(self, m, n, dtype, nnz):
+        if self.s.backend == "sparse":
+            raise ValueError(
+                "serial sparse lowering is unsupported (BCOO cannot carry "
+                "abstract shapes); lower the distributed sparse path "
+                "instead: NMFSolver(schedule='faun', backend='sparse')")
+        return self._dense_abstract_args(m, n, dtype)
+
+    def arg_shardings(self):
+        return None
+
+
+class _FaunSchedule(_GridSchedule):
+    name = "faun"
+
+    def __init__(self, solver: "NMFSolver", grid):
+        from repro.core.faun import FaunGrid, make_faun_mesh
+        if grid is None:
+            grid = make_faun_mesh(*_square_grid(jax.device_count()))
+        assert isinstance(grid, FaunGrid), grid
+        self.s, self.grid = solver, grid
+
+    def cache_key(self):
+        return (self.name, self.s.algo, self.s.backend, self.s.panel_dtype,
+                self.grid)
+
+    def _spec_A(self):
+        return (self.grid.spec_A_sparse() if self.s.backend == "sparse"
+                else self.grid.spec_A())
+
+    def prepare(self, A, W0, H0):
+        grid = self.grid
+        if self.s.backend == "sparse":
+            A = blocksparse.blockify(A, grid.pr, grid.pc)
+            normA_sq = blocksparse.sq_norm(A)
+        else:
+            if not isinstance(A, jax.Array):
+                raise ValueError("faun: dense/pallas backends need a dense "
+                                 "A; pass backend='sparse' for BCOO input")
+            normA_sq = sq_frobenius(A)
+        Arep = jax.device_put(A, grid.sharding(self._spec_A()))
+        W = jax.device_put(W0, grid.sharding(grid.spec_W()))
+        Ht = jax.device_put(H0.T, grid.sharding(grid.spec_Ht()))
+        return Arep, W, Ht, normA_sq
+
+    def build_step(self) -> Callable:
+        from repro.core.faun import build_faun_step
+        return build_faun_step(self.grid, algo=self.s.algo,
+                               backend=self.s.backend,
+                               panel_dtype=self.s.panel_dtype)
+
+    def abstract_args(self, m, n, dtype, nnz):
+        k, grid = self.s.k, self.grid
+        if self.s.backend == "sparse":
+            gr, gc = grid.pr, grid.pc
+            nnz = int(nnz) if nnz else max(m * n // 100, 1)
+            nnz_max = max(-(-nnz // (gr * gc)), 1)
+            Aabs = blocksparse.BlockCOO(
+                vals=jax.ShapeDtypeStruct((gr, gc, nnz_max), dtype),
+                rows=jax.ShapeDtypeStruct((gr, gc, nnz_max), jnp.int32),
+                cols=jax.ShapeDtypeStruct((gr, gc, nnz_max), jnp.int32),
+                shape=(m, n), block_shape=(m // gr, n // gc), nnz=nnz)
+        else:
+            Aabs = jax.ShapeDtypeStruct((m, n), dtype)
+        return (Aabs,
+                jax.ShapeDtypeStruct((m, k), dtype),
+                jax.ShapeDtypeStruct((n, k), dtype),
+                jax.ShapeDtypeStruct((), jnp.float32))
+
+
+class _NaiveSchedule(_Schedule):
+    name = "naive"
+
+    def __init__(self, solver: "NMFSolver", mesh, axis: str):
+        if solver.backend != "dense":
+            raise ValueError("naive schedule supports only the dense backend "
+                             "(it exists as the paper's communication-"
+                             "inefficient dense baseline)")
+        if mesh is None:
+            mesh = make_mesh((jax.device_count(),), (axis,))
+        self.s, self.mesh, self.axis = solver, mesh, axis
+
+    @property
+    def p(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    def grid_shape(self) -> tuple[int, int]:
+        return (self.p, 1)
+
+    def cache_key(self):
+        return (self.name, self.s.algo, self.mesh, self.axis)
+
+    def prepare(self, A, W0, H0):
+        self._require_dense(A)
+        sh = lambda spec: NamedSharding(self.mesh, spec)
+        ax = self.axis
+        Arow = jax.device_put(A, sh(P(ax, None)))
+        Acol = jax.device_put(A, sh(P(None, ax)))   # the duplicate copy
+        W = jax.device_put(W0, sh(P(ax, None)))
+        Ht = jax.device_put(H0.T, sh(P(ax, None)))
+        return (Arow, Acol), W, Ht, sq_frobenius(A)
+
+    def build_step(self) -> Callable:
+        from repro.core.naive import build_naive_step
+        base = build_naive_step(self.mesh, algo=self.s.algo, axis=self.axis)
+
+        def step(Arep, W, Ht, normA_sq):
+            return base(Arep[0], Arep[1], W, Ht, normA_sq)
+
+        return step
+
+    def abstract_args(self, m, n, dtype, nnz):
+        _, W, Ht, norm = self._dense_abstract_args(m, n, dtype)
+        Aabs = jax.ShapeDtypeStruct((m, n), dtype)
+        return ((Aabs, Aabs), W, Ht, norm)
+
+    def arg_shardings(self):
+        sh = lambda spec: NamedSharding(self.mesh, spec)
+        ax = self.axis
+        in_sh = ((sh(P(ax, None)), sh(P(None, ax))), sh(P(ax, None)),
+                 sh(P(ax, None)), None)
+        out_sh = (sh(P(ax, None)), sh(P(ax, None)), None)
+        return in_sh, out_sh
+
+
+class _GspmdSchedule(_GridSchedule):
+    name = "gspmd"
+
+    def __init__(self, solver: "NMFSolver", grid):
+        from repro.core.faun import FaunGrid, make_faun_mesh
+        if solver.backend != "dense":
+            raise ValueError("gspmd schedule supports only the dense backend "
+                             "(XLA owns the local compute)")
+        if grid is None:
+            grid = make_faun_mesh(*_square_grid(jax.device_count()))
+        assert isinstance(grid, FaunGrid), grid
+        self.s, self.grid = solver, grid
+
+    def cache_key(self):
+        return (self.name, self.s.algo, self.grid)
+
+    def prepare(self, A, W0, H0):
+        self._require_dense(A)
+        grid = self.grid
+        normA_sq = sq_frobenius(A)
+        Arep = jax.device_put(A, grid.sharding(grid.spec_A()))
+        W = jax.device_put(W0, grid.sharding(grid.spec_W()))
+        Ht = jax.device_put(H0.T, grid.sharding(grid.spec_Ht()))
+        return Arep, W, Ht, normA_sq
+
+    def build_step(self) -> Callable:
+        from repro.core.gspmd import gspmd_iteration
+        return functools.partial(gspmd_iteration, algo=self.s.algo)
+
+    def abstract_args(self, m, n, dtype, nnz):
+        return self._dense_abstract_args(m, n, dtype)
+
+
+def _square_grid(p: int) -> tuple[int, int]:
+    pr = max(d for d in range(1, p + 1) if p % d == 0 and d * d <= p)
+    return pr, p // pr
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+class NMFSolver:
+    """One driver lifecycle for every AU-NMF schedule × local-matmul backend.
+
+    >>> solver = NMFSolver(k=16, algo="bpp", schedule="faun", grid=grid,
+    ...                    max_iters=200, tol=1e-4)
+    >>> result = solver.fit(A)          # A: dense, BCOO, or BlockCOO
+
+    The legacy entry points (``aunmf.fit``, ``faun.fit``, ``naive.fit``,
+    ``gspmd.fit``) are thin wrappers over this class.
+    """
+
+    def __init__(self, k: int, *, algo: str = "bpp", schedule: str = "serial",
+                 backend: str = "dense", grid=None, mesh: Mesh | None = None,
+                 axis: str = "p", max_iters: int = 30,
+                 tol: float | None = None, stall_iters: int = 0,
+                 stall_tol: float = 1e-6, panel_dtype=None,
+                 donate: bool = False):
+        if schedule not in SCHEDULES:
+            raise ValueError(f"unknown schedule {schedule!r}; "
+                             f"choose from {SCHEDULES}")
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"choose from {BACKENDS}")
+        algorithms.get_update_fns(algo)      # validate early
+        self.k, self.algo, self.backend = k, algo, backend
+        self.panel_dtype, self.donate = panel_dtype, donate
+        self.stopping = StoppingCriterion(max_iters=max_iters, tol=tol,
+                                          stall_iters=stall_iters,
+                                          stall_tol=stall_tol)
+        if schedule == "serial":
+            self._schedule = _SerialSchedule(self)
+        elif schedule == "faun":
+            self._schedule = _FaunSchedule(self, grid)
+        elif schedule == "naive":
+            self._schedule = _NaiveSchedule(self, mesh, axis)
+        else:
+            self._schedule = _GspmdSchedule(self, grid)
+
+    @property
+    def schedule(self) -> str:
+        return self._schedule.name
+
+    # -- driver lifecycle ---------------------------------------------------
+
+    def fit(self, A, *, key: jax.Array | None = None,
+            H0: jax.Array | None = None,
+            W0: jax.Array | None = None) -> NMFResult:
+        m, n = A.shape
+        dtype = getattr(A, "dtype", jnp.float32)
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        if H0 is None:
+            H0 = init_h(key, n, self.k, dtype=dtype)
+        if W0 is None:
+            W0 = init_w(jax.random.fold_in(key, 1), m, self.k, self.algo,
+                        dtype=dtype)
+
+        Arep, W, Ht, normA_sq = self._schedule.prepare(A, W0, H0)
+        crit = self.stopping
+        run = _cached_run(self._schedule, crit, self.donate)
+        if crit.adaptive:
+            W, Ht, rels, i = run(Arep, W, Ht, normA_sq)
+            iters_run = int(i)
+            rels = rels[:iters_run]
+        else:
+            W, Ht, rels = run(Arep, W, Ht, normA_sq, crit.max_iters)
+            iters_run = crit.max_iters
+        W, H = self._schedule.collect(W, Ht)
+        return NMFResult(
+            W=W, H=H, rel_errors=rels, algo=self.algo, iters=iters_run,
+            extras={"schedule": self.schedule, "backend": self.backend,
+                    "stopped_early": iters_run < crit.max_iters})
+
+    # -- AOT lowering (dry-run / roofline) ----------------------------------
+
+    def lower_step(self, m: int, n: int, *, dtype=jnp.float32,
+                   nnz: int | None = None):
+        """AOT-lower one iteration for HLO accounting, without data."""
+        step = self._schedule.build_step()
+        args = self._schedule.abstract_args(m, n, dtype, nnz)
+        shardings = self._schedule.arg_shardings()
+        if shardings is None:
+            jstep = jax.jit(step)
+        else:
+            in_sh, out_sh = shardings
+            jstep = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        return jstep.lower(*args)
+
+    # -- cost-model integration ---------------------------------------------
+
+    def predict_cost(self, m: int, n: int, *, nnz: float = 0.0,
+                     bpp_iters: float = 1.0):
+        """α-β-γ per-iteration cost prediction for this solver's schedule,
+        threading nnz through when the backend is sparse."""
+        from repro.core import costmodel
+        pr, pc = self._schedule.grid_shape()
+        return costmodel.schedule_cost(
+            self.schedule, m, n, self.k, pr=pr, pc=pc, algo=self.algo,
+            dense=self.backend != "sparse", nnz=nnz, bpp_iters=bpp_iters)
+
+
+# ---------------------------------------------------------------------------
+# The two loop drivers.  Fixed-iteration runs compile to the same lax.scan
+# the legacy drivers used (bit-compatible); adaptive stopping compiles to a
+# lax.while_loop so early halting needs no host round-trip per iteration.
+#
+# The jitted closures are cached per (schedule config, criterion, donate):
+# rebuilding them on every fit() would retrace and recompile each call,
+# where the legacy drivers' module-level jit cached across calls.
+# ---------------------------------------------------------------------------
+
+_RUN_CACHE: dict = {}
+_RUN_CACHE_MAX = 128
+
+
+def _cached_run(schedule, crit: StoppingCriterion, donate: bool):
+    key = (schedule.cache_key(), crit if crit.adaptive else None, donate)
+    try:
+        run = _RUN_CACHE.get(key)
+    except TypeError:           # unhashable layout object — build uncached
+        return _build_run(schedule.build_step(), crit, donate)
+    if run is None:
+        if len(_RUN_CACHE) >= _RUN_CACHE_MAX:
+            _RUN_CACHE.clear()
+        run = _build_run(schedule.build_step(), crit, donate)
+        _RUN_CACHE[key] = run
+    return run
+
+
+def _build_run(step, crit: StoppingCriterion, donate: bool):
+    return (_adaptive_run(step, crit, donate) if crit.adaptive
+            else _fixed_run(step, donate))
+
+
+def _fixed_run(step, donate: bool):
+    @functools.partial(jax.jit, static_argnames=("iters",),
+                       donate_argnums=(1, 2) if donate else ())
+    def run(Arep, W, Ht, normA_sq, iters: int):
+        def body(carry, _):
+            W, Ht = carry
+            W, Ht, sq = step(Arep, W, Ht, normA_sq)
+            rel = jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq)
+            return (W, Ht), rel
+
+        (W, Ht), rels = lax.scan(body, (W, Ht), None, length=iters)
+        return W, Ht, rels
+
+    return run
+
+
+def _adaptive_run(step, crit: StoppingCriterion, donate: bool):
+    max_iters, tol = crit.max_iters, crit.tol
+    stall_n, stall_tol = crit.stall_iters, crit.stall_tol
+
+    @functools.partial(jax.jit, donate_argnums=(1, 2) if donate else ())
+    def run(Arep, W, Ht, normA_sq):
+        def cond(state):
+            _, _, _, i, _, _, done = state
+            return (i < max_iters) & jnp.logical_not(done)
+
+        def body(state):
+            W, Ht, rels, i, best, stall, _ = state
+            W, Ht, sq = step(Arep, W, Ht, normA_sq)
+            rel = jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq)
+            rels = lax.dynamic_update_index_in_dim(rels, rel, i, 0)
+            improved = rel < best - stall_tol
+            stall = jnp.where(improved, 0, stall + 1)
+            done = jnp.asarray(False)
+            if tol is not None:
+                done = done | (rel <= tol)
+            if stall_n:
+                done = done | (stall >= stall_n)
+            return (W, Ht, rels, i + 1, jnp.minimum(best, rel), stall, done)
+
+        state = (W, Ht, jnp.full((max_iters,), jnp.nan, jnp.float32),
+                 jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, jnp.float32),
+                 jnp.asarray(0, jnp.int32), jnp.asarray(False))
+        W, Ht, rels, i, _, _, _ = lax.while_loop(cond, body, state)
+        return W, Ht, rels, i
+
+    return run

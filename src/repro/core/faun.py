@@ -40,7 +40,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import algorithms
-from repro.core.aunmf import NMFResult, init_h, init_w
+from repro.core.aunmf import NMFResult
 from repro.util.compat import shard_map
 
 
@@ -189,6 +189,12 @@ class FaunGrid:
         return P(self.row_axes if len(self.row_axes) > 1 else self.row_axes[0],
                  self.col_axis)
 
+    def spec_A_sparse(self) -> P:
+        """Layout for BlockCOO leaves (gr, gc, nnz): grid dims sharded, the
+        per-block triplet dim replicated (each device holds its own block)."""
+        return P(self.row_axes if len(self.row_axes) > 1 else self.row_axes[0],
+                 self.col_axis, None)
+
     def spec_W(self) -> P:
         return P(tuple(self.row_axes) + (self.col_axis,), None)
 
@@ -207,17 +213,33 @@ def make_faun_mesh(pr: int, pc: int, *, devices=None) -> FaunGrid:
     return FaunGrid(mesh=mesh)
 
 
-def build_faun_step(grid: FaunGrid, *, algo: str, use_pallas: bool = False,
-                    panel_dtype=None):
+def build_faun_step(grid: FaunGrid, *, algo: str, backend: str | None = None,
+                    use_pallas: bool = False, panel_dtype=None):
     """Returns step(A, W, Ht, normA_sq) -> (W, Ht, sq_err) as a shard_mapped,
-    jit-compatible callable over *global* arrays."""
+    jit-compatible callable over *global* arrays.
+
+    ``backend`` selects the local-matmul implementation: "dense" (XLA),
+    "pallas" (kernels/ops.py), or "sparse" (BlockCOO scatter-add SpMM —
+    A then enters as a core.blocksparse.BlockCOO and never crosses the
+    wire).  ``use_pallas=True`` is the legacy spelling of backend="pallas".
+    """
+    if backend is None:
+        backend = "pallas" if use_pallas else "dense"
     local_mm = local_mm_t = local_gram = None
-    if use_pallas:
+    if backend == "pallas":
         from repro.kernels import ops as kops
         local_mm = kops.ts_matmul
         local_mm_t = kops.ts_matmul_t
         local_gram = kops.gram
+    elif backend == "sparse":
+        from repro.core import blocksparse
+        if panel_dtype is not None:
+            raise ValueError("low-precision panels are not supported on the "
+                             "sparse backend (scatter-add SpMM is fp32)")
+        local_mm = blocksparse.local_spmm
+        local_mm_t = blocksparse.local_spmm_t
 
+    spec_A = grid.spec_A_sparse() if backend == "sparse" else grid.spec_A()
     body = functools.partial(
         faun_iteration, row_axes=grid.row_axes, col_axis=grid.col_axis,
         algo=algo, local_mm=local_mm, local_mm_t=local_mm_t,
@@ -225,7 +247,7 @@ def build_faun_step(grid: FaunGrid, *, algo: str, use_pallas: bool = False,
 
     return shard_map(
         body, mesh=grid.mesh,
-        in_specs=(grid.spec_A(), grid.spec_W(), grid.spec_Ht(), P()),
+        in_specs=(spec_A, grid.spec_W(), grid.spec_Ht(), P()),
         out_specs=(grid.spec_W(), grid.spec_Ht(), P()),
     )
 
@@ -235,51 +257,31 @@ def fit(A, k: int, *, grid: FaunGrid, algo: str = "bpp", iters: int = 30,
         W0: jax.Array | None = None, use_pallas: bool = False,
         panel_dtype=None, donate: bool = True) -> NMFResult:
     """Distributed AU-NMF.  Bit-compatible with core.aunmf.fit given the same
-    (W0, H0) up to collective reduction-order rounding."""
-    m, n = A.shape
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    if H0 is None:
-        H0 = init_h(key, n, k, dtype=A.dtype)
-    if W0 is None:
-        W0 = init_w(jax.random.fold_in(key, 1), m, k, algo, dtype=A.dtype)
+    (W0, H0) up to collective reduction-order rounding.
 
-    A = jax.device_put(A, grid.sharding(grid.spec_A()))
-    W = jax.device_put(W0, grid.sharding(grid.spec_W()))
-    Ht = jax.device_put(H0.T, grid.sharding(grid.spec_Ht()))
-
-    step = build_faun_step(grid, algo=algo, use_pallas=use_pallas,
-                           panel_dtype=panel_dtype)
-    normA_sq = jnp.sum(A.astype(jnp.float32) ** 2)  # once, like the paper
-
-    @functools.partial(jax.jit, static_argnames=("iters",),
-                       donate_argnums=(1, 2) if donate else ())
-    def run(A, W, Ht, normA_sq, iters: int):
-        def body(carry, _):
-            W, Ht = carry
-            W, Ht, sq = step(A, W, Ht, normA_sq)
-            rel = jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq)
-            return (W, Ht), rel
-
-        (W, Ht), rels = lax.scan(body, (W, Ht), None, length=iters)
-        return W, Ht, rels
-
-    W, Ht, rels = run(A, W, Ht, normA_sq, iters)
-    return NMFResult(W=W, H=Ht.T, rel_errors=rels, algo=algo, iters=iters)
+    Thin wrapper over ``core.engine.NMFSolver(schedule="faun")``; sparse
+    input (BCOO / BlockCOO) routes through the block-local SpMM backend.
+    """
+    from repro.core.engine import NMFSolver
+    if use_pallas:
+        backend = "pallas"
+    elif isinstance(A, jax.Array):
+        backend = "dense"
+    else:
+        backend = "sparse"
+    solver = NMFSolver(k, algo=algo, schedule="faun", backend=backend,
+                       grid=grid, max_iters=iters, panel_dtype=panel_dtype,
+                       donate=donate)
+    return solver.fit(A, key=key, H0=H0, W0=W0)
 
 
 def lower_step(grid: FaunGrid, m: int, n: int, k: int, *, algo: str = "bpp",
-               dtype=jnp.float32, use_pallas: bool = False, panel_dtype=None):
+               dtype=jnp.float32, use_pallas: bool = False, panel_dtype=None,
+               backend: str | None = None, nnz: int | None = None):
     """AOT-lower one FAUN iteration for dry-run / roofline analysis."""
-    step = build_faun_step(grid, algo=algo, use_pallas=use_pallas,
-                           panel_dtype=panel_dtype)
-    jstep = jax.jit(step, in_shardings=(
-        grid.sharding(grid.spec_A()), grid.sharding(grid.spec_W()),
-        grid.sharding(grid.spec_Ht()), None),
-        out_shardings=(grid.sharding(grid.spec_W()),
-                       grid.sharding(grid.spec_Ht()), None))
-    args = (jax.ShapeDtypeStruct((m, n), dtype),
-            jax.ShapeDtypeStruct((m, k), dtype),
-            jax.ShapeDtypeStruct((n, k), dtype),
-            jax.ShapeDtypeStruct((), jnp.float32))
-    return jstep.lower(*args)
+    from repro.core.engine import NMFSolver
+    if backend is None:
+        backend = "pallas" if use_pallas else "dense"
+    solver = NMFSolver(k, algo=algo, schedule="faun", backend=backend,
+                       grid=grid, panel_dtype=panel_dtype)
+    return solver.lower_step(m, n, dtype=dtype, nnz=nnz)

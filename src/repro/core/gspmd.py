@@ -16,13 +16,12 @@ empirical justification of the paper's contribution this repo produces.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.core import algorithms
-from repro.core.error import sq_error_from_products, sq_frobenius
+from repro.core.aunmf import NMFResult
+from repro.core.error import sq_error_from_products
 from repro.core.faun import FaunGrid
 
 
@@ -40,18 +39,21 @@ def gspmd_iteration(A, W, Ht, normA_sq, *, algo: str):
     return W, Ht, sq
 
 
+def fit(A, k: int, *, grid: FaunGrid, algo: str = "bpp", iters: int = 30,
+        key: jax.Array | None = None, H0: jax.Array | None = None,
+        W0: jax.Array | None = None) -> NMFResult:
+    """Run the GSPMD-auto variant end to end (XLA picks the collectives).
+    Thin wrapper over ``core.engine.NMFSolver(schedule="gspmd")``."""
+    from repro.core.engine import NMFSolver
+    solver = NMFSolver(k, algo=algo, schedule="gspmd", grid=grid,
+                       max_iters=iters)
+    return solver.fit(A, key=key, H0=H0, W0=W0)
+
+
 def lower_step(grid: FaunGrid, m: int, n: int, k: int, *, algo: str = "mu",
                dtype=jnp.float32):
     """Lower one GSPMD-auto iteration with the paper's data layouts as
     in/out shardings (same layouts as faun.lower_step, no shard_map)."""
-    step = functools.partial(gspmd_iteration, algo=algo)
-    jstep = jax.jit(step, in_shardings=(
-        grid.sharding(grid.spec_A()), grid.sharding(grid.spec_W()),
-        grid.sharding(grid.spec_Ht()), None),
-        out_shardings=(grid.sharding(grid.spec_W()),
-                       grid.sharding(grid.spec_Ht()), None))
-    args = (jax.ShapeDtypeStruct((m, n), dtype),
-            jax.ShapeDtypeStruct((m, k), dtype),
-            jax.ShapeDtypeStruct((n, k), dtype),
-            jax.ShapeDtypeStruct((), jnp.float32))
-    return jstep.lower(*args)
+    from repro.core.engine import NMFSolver
+    solver = NMFSolver(k, algo=algo, schedule="gspmd", grid=grid)
+    return solver.lower_step(m, n, dtype=dtype)

@@ -20,10 +20,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import algorithms
-from repro.core.aunmf import NMFResult, init_h, init_w
+from repro.core.aunmf import NMFResult
 from repro.util.compat import shard_map
 
 
@@ -73,49 +73,16 @@ def build_naive_step(mesh: Mesh, *, algo: str, axis: str = "p"):
 def fit(A, k: int, *, mesh: Mesh, algo: str = "bpp", iters: int = 30,
         key: jax.Array | None = None, H0: jax.Array | None = None,
         W0: jax.Array | None = None, axis: str = "p") -> NMFResult:
-    m, n = A.shape
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    if H0 is None:
-        H0 = init_h(key, n, k, dtype=A.dtype)
-    if W0 is None:
-        W0 = init_w(jax.random.fold_in(key, 1), m, k, algo, dtype=A.dtype)
-
-    sh = lambda spec: NamedSharding(mesh, spec)
-    Arow = jax.device_put(A, sh(P(axis, None)))
-    Acol = jax.device_put(A, sh(P(None, axis)))   # the duplicate copy
-    W = jax.device_put(W0, sh(P(axis, None)))
-    Ht = jax.device_put(H0.T, sh(P(axis, None)))
-
-    step = build_naive_step(mesh, algo=algo, axis=axis)
-    normA_sq = jnp.sum(A.astype(jnp.float32) ** 2)
-
-    @functools.partial(jax.jit, static_argnames=("iters",))
-    def run(Arow, Acol, W, Ht, normA_sq, iters: int):
-        def body(carry, _):
-            W, Ht = carry
-            W, Ht, sq = step(Arow, Acol, W, Ht, normA_sq)
-            rel = jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq)
-            return (W, Ht), rel
-
-        (W, Ht), rels = lax.scan(body, (W, Ht), None, length=iters)
-        return W, Ht, rels
-
-    W, Ht, rels = run(Arow, Acol, W, Ht, normA_sq, iters)
-    return NMFResult(W=W, H=Ht.T, rel_errors=rels, algo=algo, iters=iters)
+    """Thin wrapper over ``core.engine.NMFSolver(schedule="naive")``."""
+    from repro.core.engine import NMFSolver
+    solver = NMFSolver(k, algo=algo, schedule="naive", mesh=mesh, axis=axis,
+                       max_iters=iters)
+    return solver.fit(A, key=key, H0=H0, W0=W0)
 
 
 def lower_step(mesh: Mesh, m: int, n: int, k: int, *, algo: str = "bpp",
                dtype=jnp.float32, axis: str = "p"):
-    step = build_naive_step(mesh, algo=algo, axis=axis)
-    sh = lambda spec: NamedSharding(mesh, spec)
-    jstep = jax.jit(step, in_shardings=(
-        sh(P(axis, None)), sh(P(None, axis)), sh(P(axis, None)),
-        sh(P(axis, None)), None),
-        out_shardings=(sh(P(axis, None)), sh(P(axis, None)), None))
-    args = (jax.ShapeDtypeStruct((m, n), dtype),
-            jax.ShapeDtypeStruct((m, n), dtype),
-            jax.ShapeDtypeStruct((m, k), dtype),
-            jax.ShapeDtypeStruct((n, k), dtype),
-            jax.ShapeDtypeStruct((), jnp.float32))
-    return jstep.lower(*args)
+    """AOT-lower one Naive iteration for HLO accounting."""
+    from repro.core.engine import NMFSolver
+    solver = NMFSolver(k, algo=algo, schedule="naive", mesh=mesh, axis=axis)
+    return solver.lower_step(m, n, dtype=dtype)

@@ -89,12 +89,27 @@ def lowrank_matrix(key, m, n, k, *, noise: float = 0.0, dtype=jnp.float32):
 
 
 def erdos_renyi_matrix(key, m, n, density: float, dtype=jnp.float32):
-    """Paper §6.1.1 sparse synthetic (dense storage with zero mask here —
-    the distributed path is dense; flops accounting uses nnz)."""
+    """Paper §6.1.1 sparse synthetic, DENSE storage (zero-masked values).
+
+    This is the benchmark variant for comparing dense-path flops on a
+    sparsity-structured matrix.  For true sparse storage — the paper's
+    actual sparse workload — use :func:`erdos_renyi_bcoo`, which feeds the
+    sparse backend of ``core.engine.NMFSolver`` directly.
+    """
     k1, k2 = jax.random.split(key)
     mask = jax.random.bernoulli(k1, density, (m, n))
     vals = jax.random.uniform(k2, (m, n), dtype)
     return jnp.where(mask, vals, 0.0)
+
+
+def erdos_renyi_bcoo(key, m, n, density: float, dtype=jnp.float32):
+    """True sparse storage variant of :func:`erdos_renyi_matrix`: the same
+    entries for the same key, as a ``jax.experimental.sparse.BCOO``.  Use
+    with ``NMFSolver(backend="sparse")`` (serial BCOO path, or blockified
+    for the distributed faun schedule)."""
+    from jax.experimental import sparse as jsparse
+    return jsparse.BCOO.fromdense(erdos_renyi_matrix(key, m, n, density,
+                                                     dtype))
 
 
 def video_like_matrix(key, m, n, *, rank: int = 20, motion: float = 0.05,

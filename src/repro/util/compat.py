@@ -26,5 +26,5 @@ def make_mesh(shape, axis_names, *, devices=None):
         return jax.make_mesh(shape, axis_names,
                              axis_types=(AxisType.Auto,) * len(axis_names),
                              devices=devices)
-    except TypeError:
+    except (ImportError, TypeError):
         return jax.make_mesh(shape, axis_names, devices=devices)

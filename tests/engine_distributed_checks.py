@@ -1,0 +1,163 @@
+"""Multi-device engine checks, run in ONE subprocess with 8 fake host
+devices (tests/test_engine.py drives this).  Prints "PASS <name>" per
+check; exits nonzero on any failure.
+
+Covers the acceptance criteria of the engine refactor:
+  * every schedule (serial/faun/naive/gspmd) through NMFSolver agrees with
+    the serial oracle;
+  * the distributed-sparse path (faun × BlockCOO) matches serial sparse to
+    1e-4 relative error on a 2×2 grid with the same H0;
+  * the sparse lowering moves only k-width panels — NO all-gather of A;
+  * tolerance-based stopping halts early on every schedule.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import sparse as jsparse
+
+from repro.core import aunmf, faun
+from repro.core.engine import NMFSolver
+from repro.roofline.hlo import collective_stats
+from repro.util.compat import make_mesh
+
+FAILURES = []
+
+
+def check(name):
+    def deco(fn):
+        try:
+            fn()
+            print(f"PASS {name}", flush=True)
+        except Exception:
+            FAILURES.append(name)
+            print(f"FAIL {name}", flush=True)
+            traceback.print_exc()
+    return deco
+
+
+KEY = jax.random.PRNGKey(7)
+M, N, K = 96, 64, 6
+A = (jax.random.uniform(KEY, (M, K))
+     @ jax.random.uniform(jax.random.fold_in(KEY, 2), (K, N))
+     + 0.01 * jax.random.uniform(jax.random.fold_in(KEY, 3), (M, N)))
+A_SP = jsparse.BCOO.fromdense(
+    jnp.where(jax.random.bernoulli(KEY, 0.25, (M, N)), A, 0.0))
+
+
+@check("every_schedule_matches_serial")
+def _():
+    ref = NMFSolver(K, algo="bpp", max_iters=8).fit(A, key=KEY)
+    grid = faun.make_faun_mesh(4, 2)
+    mesh = make_mesh((8,), ("p",))
+    for kwargs in [dict(schedule="faun", grid=grid),
+                   dict(schedule="faun", grid=grid, backend="pallas"),
+                   dict(schedule="naive", mesh=mesh),
+                   dict(schedule="gspmd", grid=grid)]:
+        res = NMFSolver(K, algo="bpp", max_iters=8, **kwargs).fit(A, key=KEY)
+        np.testing.assert_allclose(np.asarray(ref.W), np.asarray(res.W),
+                                   atol=5e-4, err_msg=str(kwargs))
+        np.testing.assert_allclose(np.asarray(ref.rel_errors),
+                                   np.asarray(res.rel_errors), atol=1e-4,
+                                   err_msg=str(kwargs))
+
+
+@check("distributed_sparse_matches_serial_sparse")
+def _():
+    H0 = aunmf.init_h(KEY, N, K)
+    for algo in ["mu", "hals", "bpp"]:
+        ref = NMFSolver(K, algo=algo, backend="sparse",
+                        max_iters=10).fit(A_SP, key=KEY, H0=H0)
+        grid = faun.make_faun_mesh(2, 2)
+        dist = NMFSolver(K, algo=algo, schedule="faun", backend="sparse",
+                         grid=grid, max_iters=10).fit(A_SP, key=KEY, H0=H0)
+        scale = float(jnp.max(jnp.abs(ref.W)))
+        err = float(jnp.max(jnp.abs(ref.W - dist.W))) / scale
+        assert err < 1e-4, (algo, err)
+        np.testing.assert_allclose(np.asarray(ref.rel_errors),
+                                   np.asarray(dist.rel_errors), atol=1e-4)
+
+
+@check("sparse_lowering_never_gathers_A")
+def _():
+    grid = faun.make_faun_mesh(2, 2)
+    solver = NMFSolver(K, algo="mu", schedule="faun", backend="sparse",
+                       grid=grid)
+    txt = solver.lower_step(M, N, nnz=int(A_SP.nse)).compile().as_text()
+    st = collective_stats(txt)
+    # the paper's six collectives, nothing else moving data
+    assert st.counts["all-gather"] == 2, st.counts          # panel gathers
+    assert st.counts["reduce-scatter"] == 2, st.counts
+    assert st.counts["all-to-all"] == 0, st.counts
+    # all-gather traffic bounded by the k-width panels; far below any A block
+    panel_bytes = (M + N) * K * 4
+    a_block_bytes = int(A_SP.nse) * 4
+    assert st.wire_bytes["all-gather"] <= panel_bytes, st.wire_bytes
+    assert st.wire_bytes["all-gather"] < a_block_bytes, (
+        st.wire_bytes, a_block_bytes)
+
+
+@check("sparse_multipod_grid")
+def _():
+    mesh3 = make_mesh((2, 2, 2), ("pod", "pr", "pc"))
+    grid3 = faun.FaunGrid(mesh=mesh3, row_axes=("pod", "pr"), col_axis="pc")
+    ref = NMFSolver(K, algo="mu", backend="sparse", max_iters=8) \
+        .fit(A_SP, key=KEY)
+    dist = NMFSolver(K, algo="mu", schedule="faun", backend="sparse",
+                     grid=grid3, max_iters=8).fit(A_SP, key=KEY)
+    np.testing.assert_allclose(np.asarray(ref.W), np.asarray(dist.W),
+                               atol=5e-4)
+
+
+@check("tolerance_stopping_all_schedules")
+def _():
+    grid = faun.make_faun_mesh(2, 2)
+    mesh = make_mesh((8,), ("p",))
+    for kwargs in [dict(schedule="serial"),
+                   dict(schedule="faun", grid=grid),
+                   dict(schedule="faun", grid=grid, backend="sparse"),
+                   dict(schedule="naive", mesh=mesh),
+                   dict(schedule="gspmd", grid=grid)]:
+        # the zero-masked sparse problem converges to ~0.74, not 1e-2 —
+        # pick a tolerance each problem actually reaches
+        sparse = kwargs.get("backend") == "sparse"
+        Ain, tol = (A_SP, 0.75) if sparse else (A, 1e-2)
+        res = NMFSolver(K, algo="bpp", max_iters=100, tol=tol,
+                        **kwargs).fit(Ain, key=KEY)
+        assert res.extras["stopped_early"], kwargs
+        assert res.iters < 100, kwargs
+        assert float(res.rel_errors[-1]) <= tol, kwargs
+
+
+@check("legacy_wrappers_round_trip")
+def _():
+    from repro.core import gspmd, naive
+    grid = faun.make_faun_mesh(4, 2)
+    mesh = make_mesh((8,), ("p",))
+    ref = aunmf.fit(A, K, algo="mu", iters=6, key=KEY)
+    for res in [faun.fit(A, K, grid=grid, algo="mu", iters=6, key=KEY),
+                naive.fit(A, K, mesh=mesh, algo="mu", iters=6, key=KEY),
+                gspmd.fit(A, K, grid=grid, algo="mu", iters=6, key=KEY)]:
+        np.testing.assert_allclose(np.asarray(ref.W), np.asarray(res.W),
+                                   atol=5e-4)
+
+
+@check("faun_sparse_fit_accepts_bcoo_via_wrapper")
+def _():
+    grid = faun.make_faun_mesh(2, 2)
+    res = faun.fit(A_SP, K, grid=grid, algo="mu", iters=6, key=KEY)
+    ref = aunmf.fit(A_SP, K, algo="mu", iters=6, key=KEY)
+    np.testing.assert_allclose(np.asarray(ref.W), np.asarray(res.W),
+                               atol=5e-4)
+
+
+if __name__ == "__main__":
+    print(f"\n{len(FAILURES)} failures: {FAILURES}")
+    sys.exit(1 if FAILURES else 0)

@@ -12,6 +12,7 @@ HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")
 
 
+@pytest.mark.slow
 @pytest.mark.timeout(1200)
 def test_distributed_checks():
     env = dict(os.environ)

@@ -1,0 +1,221 @@
+"""core.engine.NMFSolver: serial parity with the legacy drivers, sparse
+backends, stopping criteria, BlockCOO storage, and cost-model threading.
+
+Single-device smoke tier here; the multi-device engine checks run in a
+subprocess (engine_distributed_checks.py) and are marked ``slow``, so
+``pytest -m "not slow"`` finishes in minutes.
+"""
+
+import functools
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import sparse as jsparse
+
+from repro.core import aunmf, blocksparse, costmodel
+from repro.core.engine import NMFSolver, StoppingCriterion
+from repro.data.pipeline import erdos_renyi_bcoo, erdos_renyi_matrix, \
+    lowrank_matrix
+
+KEY = jax.random.PRNGKey(0)
+A = lowrank_matrix(KEY, 120, 90, 8, noise=0.01)
+
+HERE = os.path.dirname(__file__)
+
+
+# ----------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("algo", ["mu", "hals", "bpp"])
+def test_serial_engine_bitmatches_reference_loop(algo):
+    """NMFSolver(schedule="serial") must reproduce a hand-rolled python loop
+    over aunmf_step bit-for-bit (the old aunmf.fit behaviour)."""
+    from repro.core import algorithms
+    from repro.core.error import sq_frobenius
+
+    k, iters = 8, 10
+    H0 = aunmf.init_h(KEY, A.shape[1], k)
+    W0 = aunmf.init_w(jax.random.fold_in(KEY, 1), A.shape[0], k, algo)
+
+    update_w, update_h = algorithms.get_update_fns(algo)
+    normA_sq = sq_frobenius(A)
+    step = jax.jit(functools.partial(aunmf.aunmf_step, update_w=update_w,
+                                     update_h=update_h, normA_sq=normA_sq))
+    W, H = W0, jnp.asarray(H0)
+    for _ in range(iters):
+        W, H, _ = step(A, W, H)
+
+    res = NMFSolver(k, algo=algo, max_iters=iters).fit(A, key=KEY)
+    np.testing.assert_array_equal(np.asarray(res.W), np.asarray(W))
+    np.testing.assert_array_equal(np.asarray(res.H), np.asarray(H))
+
+
+def test_legacy_fit_is_engine_wrapper():
+    res = aunmf.fit(A, 6, algo="bpp", iters=8, key=KEY)
+    eng = NMFSolver(6, algo="bpp", max_iters=8).fit(A, key=KEY)
+    np.testing.assert_array_equal(np.asarray(res.W), np.asarray(eng.W))
+    assert eng.extras["schedule"] == "serial"
+    assert eng.extras["backend"] == "dense"
+
+
+def test_serial_pallas_backend_matches_dense():
+    dense = NMFSolver(6, algo="mu", max_iters=8).fit(A, key=KEY)
+    pallas = NMFSolver(6, algo="mu", backend="pallas", max_iters=8) \
+        .fit(A, key=KEY)
+    np.testing.assert_allclose(np.asarray(dense.W), np.asarray(pallas.W),
+                               atol=2e-4)
+
+
+def test_serial_sparse_backend_matches_dense():
+    Ad = erdos_renyi_matrix(KEY, 96, 72, 0.25)
+    As = jsparse.BCOO.fromdense(Ad)
+    dense = NMFSolver(6, algo="mu", max_iters=8).fit(Ad, key=KEY)
+    sp = NMFSolver(6, algo="mu", backend="sparse", max_iters=8) \
+        .fit(As, key=KEY)
+    np.testing.assert_allclose(np.asarray(dense.W), np.asarray(sp.W),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(dense.rel_errors),
+                               np.asarray(sp.rel_errors), atol=1e-5)
+
+
+def test_sparse_backend_densifies_dense_input():
+    """backend="sparse" accepts a dense array and converts internally."""
+    Ad = erdos_renyi_matrix(KEY, 64, 48, 0.2)
+    r1 = NMFSolver(4, algo="mu", backend="sparse", max_iters=5).fit(Ad,
+                                                                    key=KEY)
+    r2 = NMFSolver(4, algo="mu", max_iters=5).fit(Ad, key=KEY)
+    np.testing.assert_allclose(np.asarray(r1.W), np.asarray(r2.W), atol=2e-4)
+
+
+# ------------------------------------------------------------ stopping
+
+def test_tolerance_stops_before_max_iters():
+    A0 = lowrank_matrix(jax.random.fold_in(KEY, 5), 80, 60, 4, noise=0.0)
+    res = NMFSolver(8, algo="bpp", max_iters=300, tol=1e-4).fit(A0, key=KEY)
+    assert res.extras["stopped_early"]
+    assert res.iters < 300
+    assert res.rel_errors.shape == (res.iters,)
+    assert float(res.rel_errors[-1]) <= 1e-4
+
+
+def test_stall_detection_stops():
+    A0 = lowrank_matrix(jax.random.fold_in(KEY, 5), 80, 60, 4, noise=0.0)
+    res = NMFSolver(8, algo="bpp", max_iters=300, stall_iters=5,
+                    stall_tol=1e-7).fit(A0, key=KEY)
+    assert res.extras["stopped_early"]
+    assert res.iters < 300
+
+
+def test_fixed_iteration_run_matches_adaptive_prefix():
+    """With an unreachable tol the adaptive loop runs all max_iters and must
+    agree with the scan-based fixed loop."""
+    fixed = NMFSolver(6, algo="mu", max_iters=10).fit(A, key=KEY)
+    adaptive = NMFSolver(6, algo="mu", max_iters=10, tol=1e-12).fit(A,
+                                                                    key=KEY)
+    assert adaptive.iters == 10
+    np.testing.assert_allclose(np.asarray(fixed.rel_errors),
+                               np.asarray(adaptive.rel_errors), atol=1e-6)
+
+
+def test_stopping_criterion_flags():
+    assert not StoppingCriterion().adaptive
+    assert StoppingCriterion(tol=1e-3).adaptive
+    assert StoppingCriterion(stall_iters=2).adaptive
+
+
+# ------------------------------------------------------------ blocksparse
+
+def test_blockcoo_roundtrip():
+    Ad = erdos_renyi_matrix(KEY, 48, 36, 0.3)
+    blk = blocksparse.blockify(Ad, 2, 2)
+    assert blk.grid == (2, 2)
+    np.testing.assert_allclose(blk.todense(), np.asarray(Ad), atol=0)
+
+
+def test_blockcoo_local_spmm():
+    Ad = erdos_renyi_matrix(KEY, 40, 30, 0.3)
+    blk = blocksparse.blockify(Ad, 1, 1)
+    B = jax.random.normal(jax.random.fold_in(KEY, 1), (30, 5))
+    C = jax.random.normal(jax.random.fold_in(KEY, 2), (40, 5))
+    np.testing.assert_allclose(
+        np.asarray(blocksparse.local_spmm(blk, B)), np.asarray(Ad @ B),
+        atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(blocksparse.local_spmm_t(blk, C)), np.asarray(Ad.T @ C),
+        atol=1e-4)
+
+
+def test_blockcoo_rejects_bad_grid():
+    Ad = erdos_renyi_matrix(KEY, 40, 30, 0.3)
+    with pytest.raises(ValueError):
+        blocksparse.blockify(Ad, 3, 2)       # 40 % 3 != 0
+
+
+def test_erdos_renyi_bcoo_matches_dense_variant():
+    Ad = erdos_renyi_matrix(KEY, 64, 48, 0.1)
+    As = erdos_renyi_bcoo(KEY, 64, 48, 0.1)
+    np.testing.assert_allclose(np.asarray(As.todense()), np.asarray(Ad),
+                               atol=0)
+
+
+# ------------------------------------------------------------- cost model
+
+def test_schedule_cost_threads_nnz():
+    m, n, k, nnz = 100_000, 80_000, 32, 10_000_000
+    dense = costmodel.schedule_cost("faun", m, n, k, pr=8, pc=8)
+    sp = costmodel.schedule_cost("faun", m, n, k, pr=8, pc=8, dense=False,
+                                 nnz=nnz)
+    assert sp.flops < dense.flops
+    assert sp.memory_words < dense.memory_words
+    assert sp.words == dense.words      # panels are dense either way
+    serial = costmodel.schedule_cost("serial", m, n, k)
+    assert serial.words == 0 and serial.messages == 0
+    naive = costmodel.schedule_cost("naive", m, n, k, pr=64)
+    assert naive.words > dense.words    # full-factor gathers
+
+
+def test_solver_predict_cost():
+    s = NMFSolver(16, algo="mu")
+    c = s.predict_cost(10_000, 8_000)
+    assert c.flops > 0 and c.words == 0
+
+
+# ----------------------------------------------------------- validation
+
+def test_bad_schedule_and_backend_rejected():
+    with pytest.raises(ValueError):
+        NMFSolver(4, schedule="mpi")
+    with pytest.raises(ValueError):
+        NMFSolver(4, backend="cusparse")
+    with pytest.raises(ValueError):
+        NMFSolver(4, schedule="naive", backend="sparse")
+    with pytest.raises(ValueError):
+        NMFSolver(4, schedule="gspmd", backend="pallas")
+
+
+def test_serial_lower_step_smoke():
+    low = NMFSolver(4, algo="mu").lower_step(32, 24)
+    assert "dot" in low.as_text()
+
+
+# ------------------------------------------------- multi-device (slow tier)
+
+@pytest.mark.slow
+@pytest.mark.timeout(1200)
+def test_engine_distributed_checks():
+    """Runs engine_distributed_checks.py in one subprocess with 8 fake host
+    devices (same harness as test_distributed.py)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "engine_distributed_checks.py")],
+        capture_output=True, text=True, env=env, timeout=1150)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "engine distributed checks failed"
+    assert "0 failures" in proc.stdout
