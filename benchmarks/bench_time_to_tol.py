@@ -1,0 +1,92 @@
+"""Time-to-tolerance protocol, per algorithm × backend (ROADMAP open item).
+
+The paper reports fixed-iteration timings only (its §6 protocol), which
+hides the convergence-speed differences Fig. 4 shows.  With the engine's
+compiled stopping criteria we can report the fairer metric: wall time until
+the relative error first drops below a target.
+
+Protocol (CPU-scaled):
+  1. per dataset, establish the error floor with the serial dense BPP
+     reference at FLOOR_ITERS iterations;
+  2. target tol = floor × (1 + MARGIN);
+  3. for every algorithm × backend, run ``NMFSolver(tol=target)`` (adaptive
+     lax.while_loop — no host round-trips) and report wall seconds, the
+     iteration count at the stop, and whether the target was reached.
+
+Backends run the identical schedule, and A is pre-converted to each
+backend's representation outside the timed region, so the deltas isolate
+the local compute: dense XLA vs Pallas kernels (interpret mode off-TPU —
+compare on TPU for real numbers) vs sparse scatter-add SpMM.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import blocksparse
+from repro.core.engine import NMFSolver
+from repro.data.pipeline import erdos_renyi_matrix, video_like_matrix
+
+K = 12
+FLOOR_ITERS = 40
+MAX_ITERS = 120
+MARGIN = 0.02
+
+DATASETS = {
+    "video_like": lambda: video_like_matrix(jax.random.PRNGKey(1), 512, 160,
+                                            rank=16),
+    "webbase_like": lambda: erdos_renyi_matrix(jax.random.PRNGKey(3), 384,
+                                               256, 0.02),
+}
+
+ALGOS = ["mu", "hals", "bpp"]
+BACKENDS = ["dense", "pallas", "sparse"]
+
+
+def _fit_timed(solver, A, key):
+    res = solver.fit(A, key=key)          # warm-up: compile + converge once
+    jax.block_until_ready(res.W)
+    t0 = time.time()
+    res = solver.fit(A, key=key)
+    jax.block_until_ready(res.W)
+    return res, time.time() - t0
+
+
+def main(emit):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for name, gen in DATASETS.items():
+        A = gen()
+        floor_res = NMFSolver(K, algo="bpp", max_iters=FLOOR_ITERS) \
+            .fit(A, key=key)
+        floor = float(np.asarray(floor_res.rel_errors)[-1])
+        target = floor * (1.0 + MARGIN)
+        emit(f"ttol_{name}_target", 0.0, f"tol={target:.5f}")
+        # convert once per backend OUTSIDE the timed fits
+        A_for = {b: A for b in BACKENDS}
+        A_for["sparse"] = blocksparse.blockify(A, 1, 1)
+        for algo in ALGOS:
+            for backend in BACKENDS:
+                solver = NMFSolver(K, algo=algo, backend=backend,
+                                   max_iters=MAX_ITERS, tol=target)
+                res, dt = _fit_timed(solver, A_for[backend], key)
+                final = float(np.asarray(res.rel_errors)[-1])
+                reached = final <= target
+                rows.append((name, algo, backend, dt, res.iters, reached,
+                             final))
+                emit(f"ttol_{name}_{algo}_{backend}", dt * 1e6,
+                     f"iters={res.iters};reached={reached};"
+                     f"rel_err={final:.5f}")
+    import os
+    out = os.path.join(os.path.dirname(__file__), "results",
+                       "time_to_tol.csv")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write("dataset,algo,backend,seconds,iters,reached,rel_err\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+
+
+if __name__ == "__main__":
+    main(lambda name, us, derived="": print(f"{name},{us:.2f},{derived}"))

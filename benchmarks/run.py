@@ -9,8 +9,8 @@ import sys
 import time
 
 from benchmarks import (bench_cost_table, bench_datasets, bench_error_curves,
-                        bench_grid_sweep, bench_k_sweep,
-                        bench_strong_scaling)
+                        bench_grid_sweep, bench_k_sweep, bench_strong_scaling,
+                        bench_time_to_tol)
 
 BENCHES = {
     "fig4_error_curves": bench_error_curves.main,
@@ -19,6 +19,7 @@ BENCHES = {
     "fig7_grid_sweep": bench_grid_sweep.main,
     "table1_datasets": bench_datasets.main,
     "table3_cost": bench_cost_table.main,
+    "ttol_time_to_tol": bench_time_to_tol.main,
 }
 
 

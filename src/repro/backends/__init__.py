@@ -1,0 +1,19 @@
+"""Local-compute backends for the AU-NMF engine (see base.py for the
+``LocalOps`` contract and registry).  Importing this package registers the
+three built-ins: ``dense``, ``pallas``, ``sparse``."""
+
+from repro.backends.base import (BackendSpec, LocalOps, available_backends,
+                                 get_backend, infer_backend,
+                                 register_backend)
+from repro.backends.dense import DenseOps
+from repro.backends.pallas import PallasOps
+from repro.backends.sparse import SparseOps
+
+register_backend("dense", DenseOps)
+register_backend("pallas", PallasOps)
+register_backend("sparse", SparseOps)
+
+__all__ = [
+    "BackendSpec", "LocalOps", "DenseOps", "PallasOps", "SparseOps",
+    "available_backends", "get_backend", "infer_backend", "register_backend",
+]

@@ -1,0 +1,29 @@
+"""Dense backend: plain XLA GEMMs with fp32 accumulation.
+
+``mm_t`` contracts A's *row* dimension (dot_general, not ``A.T @ B``) so the
+H-step never materialises Aᵀ; with fp32 ``preferred_element_type`` the same
+three ops serve the low-precision panel path (bf16 in, fp32 accumulate on
+the MXU) — XLA canonicalises the fp32 case to the same dots as ``@``, so the
+serial engine stays bit-compatible with the legacy driver.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.backends.base import LocalOps
+
+
+class DenseOps(LocalOps):
+    name = "dense"
+
+    def mm(self, A, B):
+        return lax.dot_general(A, B,
+                               dimension_numbers=(((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+    def mm_t(self, A, B):
+        return lax.dot_general(A, B,
+                               dimension_numbers=(((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)

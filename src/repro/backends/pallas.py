@@ -1,0 +1,28 @@
+"""Pallas backend: the hand-written TPU kernels of repro.kernels.
+
+Streams A through VMEM once per product (kernels/ts_matmul.py) and keeps the
+k×k Gram accumulator VMEM-resident (kernels/gram.py).  The kernels accept
+bf16 inputs and accumulate fp32, so low-precision factor panels work; on CPU
+the ops.py wrappers fall back to interpret mode automatically.
+"""
+
+from __future__ import annotations
+
+from repro.backends.base import LocalOps
+
+
+class PallasOps(LocalOps):
+    name = "pallas"
+    partitionable = False    # pallas_call is opaque to the auto-partitioner
+
+    def mm(self, A, B):
+        from repro.kernels import ops as kops
+        return kops.ts_matmul(A, B)
+
+    def mm_t(self, A, B):
+        from repro.kernels import ops as kops
+        return kops.ts_matmul_t(A, B)
+
+    def gram(self, X):
+        from repro.kernels import ops as kops
+        return kops.gram(X)

@@ -1,0 +1,142 @@
+"""Sparse backend: block-local COO SpMM — A's nonzeros never cross the wire.
+
+Canonical representation is ``core.blocksparse.BlockCOO`` (a 1×1 grid for
+serial execution, the processor grid for distributed schedules), so the same
+``mm``/``mm_t`` serve every schedule: inside shard_map they see the local
+block's triplets; in a global-view (gspmd) program they see the whole matrix
+as one nnz-sharded block and XLA's partitioner keeps the triplets local.
+
+Two SpMM lowerings, selected by ``spmm_impl``:
+
+    "scatter"  jnp scatter-add (XLA scatter) — the CPU/GPU path
+    "pallas"   kernels/spmm.py, the MXU-tiled TPU kernel
+    "auto"     pallas on TPU, scatter elsewhere (default)
+
+Factor panels stay dense, so ``gram`` is inherited dense fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.base import LocalOps
+from repro.core import blocksparse
+
+
+def _is_bcoo(A) -> bool:
+    return type(A).__name__ == "BCOO"
+
+
+class SparseOps(LocalOps):
+    name = "sparse"
+    supports_panel_dtype = False     # scatter-add SpMM accumulates fp32 only
+    block_leaf_ndim = 3              # BlockCOO leaves are (gr, gc, nnz)
+
+    def __init__(self, spmm_impl: str = "auto"):
+        if spmm_impl not in ("auto", "scatter", "pallas"):
+            raise ValueError(f"spmm_impl must be auto|scatter|pallas, "
+                             f"got {spmm_impl!r}")
+        self.spmm_impl = spmm_impl
+
+    def cache_key(self):
+        return super().cache_key() + (self.spmm_impl,)
+
+    def global_view_ops(self) -> "SparseOps":
+        """Under the gspmd auto-partitioner only the XLA scatter-add is
+        partitionable (a pallas_call would pin the nnz-sharded triplets to
+        one device), so force impl="scatter" for global-view programs."""
+        if self.spmm_impl == "scatter":
+            return self
+        return SparseOps(spmm_impl="scatter")
+
+    def _impl(self) -> str:
+        if self.spmm_impl == "auto":
+            return "pallas" if jax.default_backend() == "tpu" else "scatter"
+        return self.spmm_impl
+
+    # -- products -----------------------------------------------------------
+
+    def mm(self, A, B):
+        if isinstance(A, blocksparse.BlockCOO):
+            return blocksparse.local_spmm(A, B, impl=self._impl())
+        if _is_bcoo(A):
+            return A @ B
+        raise ValueError(f"sparse mm needs BlockCOO/BCOO, got "
+                         f"{type(A).__name__}")
+
+    def mm_t(self, A, B):
+        if isinstance(A, blocksparse.BlockCOO):
+            return blocksparse.local_spmm_t(A, B, impl=self._impl())
+        if _is_bcoo(A):
+            return A.T @ B
+        raise ValueError(f"sparse mm_t needs BlockCOO/BCOO, got "
+                         f"{type(A).__name__}")
+
+    # -- representation -----------------------------------------------------
+
+    def prepare(self, A):
+        """Serial canonical form: the whole matrix as one 1×1 block, so the
+        serial path shares the distributed SpMM code and AOT-lowers."""
+        return blocksparse.blockify(A, 1, 1)
+
+    def blockify(self, A, gr: int, gc: int):
+        return blocksparse.blockify(A, gr, gc)
+
+    def pre_blockify(self, A):
+        """Run the expensive dense→COO conversion once; blockify then packs
+        each layout straight from the BCOO triplets."""
+        if isinstance(A, blocksparse.BlockCOO) or _is_bcoo(A):
+            return A
+        from jax.experimental import sparse as jsparse
+        return jsparse.BCOO.fromdense(self._require_dense(A))
+
+    def pad_global(self, A, p: int):
+        return blocksparse.pad_nnz(A, p)
+
+    def abstract_global_A(self, m: int, n: int, dtype, nnz: int | None,
+                          p: int):
+        Aabs = self.abstract_A(m, n, dtype, nnz, 1, 1)
+        gr, gc, nnz_max = Aabs.vals.shape
+        nnz_pad = nnz_max + (-nnz_max) % p
+        sds = lambda dt: jax.ShapeDtypeStruct((gr, gc, nnz_pad), dt)
+        return blocksparse.BlockCOO(
+            vals=sds(dtype), rows=sds(jnp.int32), cols=sds(jnp.int32),
+            shape=Aabs.shape, block_shape=Aabs.block_shape, nnz=Aabs.nnz)
+
+    def norm_sq(self, A) -> jax.Array:
+        if isinstance(A, blocksparse.BlockCOO):
+            return blocksparse.sq_norm(A)
+        if _is_bcoo(A):
+            d = A.data.astype(jnp.float32)
+            return jnp.sum(d * d)
+        from repro.core.error import sq_frobenius
+        return sq_frobenius(A)
+
+    def abstract_A(self, m: int, n: int, dtype, nnz: int | None,
+                   gr: int, gc: int):
+        nnz = int(nnz) if nnz else max(m * n // 100, 1)
+        nnz_max = max(-(-nnz // (gr * gc)), 1)
+        return blocksparse.BlockCOO(
+            vals=jax.ShapeDtypeStruct((gr, gc, nnz_max), dtype),
+            rows=jax.ShapeDtypeStruct((gr, gc, nnz_max), jnp.int32),
+            cols=jax.ShapeDtypeStruct((gr, gc, nnz_max), jnp.int32),
+            shape=(m, n), block_shape=(m // gr, n // gc), nnz=nnz)
+
+    def spec_A(self, grid):
+        return grid.spec_A_sparse()
+
+    def cast_block(self, A, dtype):
+        raise ValueError("low-precision panels are not supported on the "
+                         "sparse backend (scatter-add SpMM is fp32)")
+
+    # -- cost model ---------------------------------------------------------
+
+    def mm_flops(self, m: float, n: float, k: float,
+                 nnz: float = 0.0) -> float:
+        """2·nnz·k per product, two products per iteration."""
+        return 4.0 * nnz * k
+
+    def storage_words(self, m: float, n: float, nnz: float = 0.0) -> float:
+        """COO triplets: value + row + col per nonzero."""
+        return 3.0 * nnz

@@ -6,9 +6,11 @@ given the same initial H: the parallel schedules reorganise the same
 floating-point matrix products, and with matched reduction orders they agree
 to fp tolerance.
 
-Also supports sparse A as a ``jax.experimental.sparse.BCOO`` matrix — the
-four matrix products are the only places A appears, so sparsity is contained
-here (as in the paper, where only the local SpMM kernels change).
+The data matrix appears only inside the three local products (A·Hᵀ, AᵀW,
+and the factor Grams), which ``aunmf_step`` takes as hooks — the engine
+fills them from a ``repro.backends.LocalOps`` backend (dense XLA, Pallas
+kernels, or sparse SpMM), so sparsity and kernel choice are contained in
+that layer, exactly as in the paper where only the local SpMM changes.
 
 ``fit`` is a thin compatibility wrapper over ``core.engine.NMFSolver`` with
 ``schedule="serial"``; the iteration body (``aunmf_step``) and the factor
@@ -51,17 +53,20 @@ def init_w(key: jax.Array, m: int, k: int, algo: str, dtype=jnp.float32):
 
 
 def aunmf_step(A, W, H, update_w, update_h, normA_sq, *,
-               mm: Callable | None = None, mm_t: Callable | None = None):
+               mm: Callable | None = None, mm_t: Callable | None = None,
+               gram: Callable | None = None):
     """One full AU-NMF iteration; returns (W, H, sq_error).
 
-    ``mm(A, B) -> A @ B`` and ``mm_t(A, B) -> Aᵀ @ B`` are the local-matmul
-    backend hooks (None = plain XLA, with the BCOO-aware default for sparse
-    A: (AᵀW)ᵀ keeps A un-transposed).
+    ``mm``/``mm_t``/``gram`` are the ``repro.backends.LocalOps`` local
+    products (``mm(A, B) -> A @ B``, ``mm_t(A, B) -> Aᵀ @ B``,
+    ``gram(X) -> XᵀX``); the engine always supplies them from the selected
+    backend.  None falls back to plain XLA (with the BCOO-aware default for
+    sparse A: (AᵀW)ᵀ keeps A un-transposed) for direct callers.
     """
-    HHt = H @ H.T
+    HHt = gram(H.T) if gram is not None else H @ H.T
     AHt = mm(A, H.T) if mm is not None else A @ H.T
     W = update_w(HHt, AHt, W)
-    WtW = W.T @ W
+    WtW = gram(W) if gram is not None else W.T @ W
     if mm_t is not None:
         WtA = mm_t(A, W).T
     elif isinstance(A, jax.Array):
@@ -70,7 +75,8 @@ def aunmf_step(A, W, H, update_w, update_h, normA_sq, *,
         WtA = (A.T @ W).T
     Ht = update_h(WtW, WtA.T, H.T)
     H = Ht.T
-    sq = sq_error_from_products(normA_sq, WtA, H, WtW, H @ H.T)
+    HHt_new = gram(H.T) if gram is not None else H @ H.T
+    sq = sq_error_from_products(normA_sq, WtA, H, WtW, HHt_new)
     return W, H, sq
 
 
@@ -80,8 +86,8 @@ def fit(A, k: int, *, algo: str = "bpp", iters: int = 30,
     """Run AU-NMF for a fixed number of iterations (the paper's stopping
     criterion for all benchmarks).  Dense arrays use the dense backend; BCOO
     input routes through the sparse backend unchanged."""
+    from repro.backends import infer_backend
     from repro.core.engine import NMFSolver
-    backend = "dense" if isinstance(A, jax.Array) else "sparse"
-    solver = NMFSolver(k, algo=algo, schedule="serial", backend=backend,
-                       max_iters=iters)
+    solver = NMFSolver(k, algo=algo, schedule="serial",
+                       backend=infer_backend(A), max_iters=iters)
     return solver.fit(A, key=key, H0=H0, W0=W0)

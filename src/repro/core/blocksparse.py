@@ -9,9 +9,15 @@ block's triplets and nothing else.  Padding entries are ``(row=0, col=0,
 val=0)`` and contribute nothing to the scatter-add SpMM, so they are safe by
 construction (same trick as the Pallas kernels' zero padding).
 
-The local SpMM kernels below are the ONLY sparse-aware component — exactly
-how PL-NMF (arXiv:1904.07935) and DID (arXiv:1802.08938) contain sparsity —
-so every schedule/collective in core/faun.py runs unchanged on top of them.
+The local SpMM kernels below are the ONLY sparse-aware compute — exactly
+how PL-NMF (arXiv:1904.07935) and DID (arXiv:1802.08938) contain sparsity.
+They back ``repro.backends.SparseOps``, the sparse ``LocalOps``
+implementation, so every schedule in core/engine.py (serial, faun, naive,
+gspmd) runs unchanged on top of them: the serial path uses a 1×1 grid, faun
+the pr×pc grid, naive a row-blocked (p, 1) plus a column-blocked (1, p)
+copy, and gspmd one nnz-sharded 1×1 block under the auto-partitioner.  On
+TPU the scatter-add lowers to the Pallas kernel (kernels/spmm.py) via
+``impl="pallas"``.
 """
 
 from __future__ import annotations
@@ -76,18 +82,16 @@ class BlockCOO:
         return out
 
 
-def from_bcoo(A, gr: int, gc: int) -> BlockCOO:
-    """Blockify a ``jax.experimental.sparse.BCOO`` matrix for a gr×gc grid."""
-    m, n = A.shape
+def _pack_triplets(vals, rows, cols, m: int, n: int, gr: int, gc: int,
+                   nnz: int) -> BlockCOO:
+    """Pack host-side global COO triplets into the padded per-block layout.
+    Zero-valued entries (BCOO padding, zeros that survived a cast) are kept
+    — they are no-ops under scatter-add, same as our own padding."""
     if m % gr or n % gc:
-        raise ValueError(f"A of shape {A.shape} does not tile a "
+        raise ValueError(f"A of shape {(m, n)} does not tile a "
                          f"{gr}×{gc} grid")
     mb, nb = m // gr, n // gc
-    idx = np.asarray(A.indices)
-    vals = np.asarray(A.data)
-    # BCOO can carry padding rows pointing at (0, 0) with value 0 — keep
-    # them; they are harmless under scatter-add, same as our own padding.
-    flat = (idx[:, 0] // mb) * gc + (idx[:, 1] // nb)
+    flat = (rows // mb) * gc + (cols // nb)
     order = np.argsort(flat, kind="stable")
     flat_s = flat[order]
     counts = np.bincount(flat_s, minlength=gr * gc)
@@ -99,22 +103,48 @@ def from_bcoo(A, gr: int, gc: int) -> BlockCOO:
     R = np.zeros((gr * gc, nnz_max), dtype=np.int32)
     C = np.zeros((gr * gc, nnz_max), dtype=np.int32)
     V[flat_s, slot] = vals[order]
-    R[flat_s, slot] = idx[order, 0] % mb
-    C[flat_s, slot] = idx[order, 1] % nb
+    R[flat_s, slot] = rows[order] % mb
+    C[flat_s, slot] = cols[order] % nb
 
     return BlockCOO(
         vals=jnp.asarray(V.reshape(gr, gc, nnz_max)),
         rows=jnp.asarray(R.reshape(gr, gc, nnz_max)),
         cols=jnp.asarray(C.reshape(gr, gc, nnz_max)),
-        shape=(m, n), block_shape=(mb, nb), nnz=int(vals.size))
+        shape=(m, n), block_shape=(mb, nb), nnz=nnz)
+
+
+def from_bcoo(A, gr: int, gc: int) -> BlockCOO:
+    """Blockify a ``jax.experimental.sparse.BCOO`` matrix for a gr×gc grid."""
+    idx = np.asarray(A.indices)
+    vals = np.asarray(A.data)
+    return _pack_triplets(vals, idx[:, 0], idx[:, 1], A.shape[0], A.shape[1],
+                          gr, gc, nnz=int(vals.size))
+
+
+def _global_triplets(blk: BlockCOO):
+    """Host-side flat global-index triplets of a BlockCOO."""
+    gr, gc = blk.grid
+    mb, nb = blk.block_shape
+    V = np.asarray(blk.vals)
+    bi = np.arange(gr, dtype=np.int64)[:, None, None]
+    bj = np.arange(gc, dtype=np.int64)[None, :, None]
+    rows = (np.asarray(blk.rows, np.int64) + bi * mb).reshape(-1)
+    cols = (np.asarray(blk.cols, np.int64) + bj * nb).reshape(-1)
+    return V.reshape(-1), rows, cols
 
 
 def blockify(A, gr: int, gc: int) -> BlockCOO:
-    """BlockCOO from dense, BCOO, or an already-blocked BlockCOO."""
+    """BlockCOO from dense, BCOO, or a BlockCOO (re-blocked if its grid
+    differs — the data is converted once and repacked per layout, e.g. the
+    naive schedule's row- and column-blocked copies)."""
     if isinstance(A, BlockCOO):
-        if A.grid != (gr, gc):
-            raise ValueError(f"BlockCOO blocked for {A.grid}, need {(gr, gc)}")
-        return A
+        if A.grid == (gr, gc):
+            return A
+        vals, rows, cols = _global_triplets(A)
+        return _pack_triplets(vals, rows, cols, A.shape[0], A.shape[1],
+                              gr, gc, nnz=A.nnz)
+    if isinstance(A, np.ndarray):
+        A = jnp.asarray(A)
     if isinstance(A, jax.Array):
         from jax.experimental import sparse as jsparse
         A = jsparse.BCOO.fromdense(A)
@@ -127,26 +157,54 @@ def sq_norm(A: BlockCOO) -> jax.Array:
     return jnp.sum(v * v)
 
 
+def pad_nnz(blk: BlockCOO, multiple: int) -> BlockCOO:
+    """Pad each block's triplet dim to a multiple (zero no-op entries), so
+    the nnz dimension can be sharded evenly — the gspmd sparse layout."""
+    nnz_max = blk.vals.shape[-1]
+    pad = (-nnz_max) % multiple
+    if pad == 0:
+        return blk
+    widths = ((0, 0), (0, 0), (0, pad))
+    return BlockCOO(vals=jnp.pad(blk.vals, widths),
+                    rows=jnp.pad(blk.rows, widths),
+                    cols=jnp.pad(blk.cols, widths),
+                    shape=blk.shape, block_shape=blk.block_shape, nnz=blk.nnz)
+
+
 # ---------------------------------------------------------------------------
-# Local SpMM kernels — the faun_iteration local_mm/local_mm_t hooks.
-# Run inside shard_map on the device-local block (leaves are (1, 1, nnz)).
+# Local SpMM kernels — what repro.backends.SparseOps.mm/mm_t lower to.
+# Run inside shard_map on the device-local block (leaves are (1, 1, nnz)),
+# or on the whole matrix for the serial (1×1 grid) and gspmd (global-view,
+# nnz-sharded) paths.
 # ---------------------------------------------------------------------------
 
 def _local_triplets(blk: BlockCOO):
     return (blk.vals.reshape(-1), blk.rows.reshape(-1), blk.cols.reshape(-1))
 
 
-def local_spmm(blk: BlockCOO, B: jax.Array) -> jax.Array:
-    """A_blk @ B via scatter-add: (m_blk, n_blk) sparse × (n_blk, k)."""
+def local_spmm(blk: BlockCOO, B: jax.Array, *,
+               impl: str = "scatter") -> jax.Array:
+    """A_blk @ B: (m_blk, n_blk) sparse × (n_blk, k) -> (m_blk, k) fp32.
+
+    impl="scatter" is the XLA scatter-add (CPU/GPU); impl="pallas" lowers to
+    the MXU-tiled kernel in kernels/spmm.py (interpret mode off-TPU).
+    """
     v, r, c = _local_triplets(blk)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.spmm(v, r, c, B, blk.block_shape[0])
     out = jnp.zeros((blk.block_shape[0], B.shape[-1]), jnp.float32)
     return out.at[r].add(v.astype(jnp.float32)[:, None]
                          * B[c].astype(jnp.float32))
 
 
-def local_spmm_t(blk: BlockCOO, B: jax.Array) -> jax.Array:
+def local_spmm_t(blk: BlockCOO, B: jax.Array, *,
+                 impl: str = "scatter") -> jax.Array:
     """A_blkᵀ @ B without transposing storage: scatter into columns."""
     v, r, c = _local_triplets(blk)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.spmm_t(v, r, c, B, blk.block_shape[1])
     out = jnp.zeros((blk.block_shape[1], B.shape[-1]), jnp.float32)
     return out.at[c].add(v.astype(jnp.float32)[:, None]
                          * B[r].astype(jnp.float32))

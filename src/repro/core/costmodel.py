@@ -71,22 +71,37 @@ class IterCost:
                 + mach.alpha * self.messages)
 
 
+def _resolve_ops(backend, dense: bool):
+    """Map the (backend, legacy ``dense`` flag) pair to a LocalOps instance,
+    whose mm_flops/storage_words parameterise the formulas below."""
+    from repro.backends import get_backend
+    if backend is not None:
+        return get_backend(backend)
+    return get_backend("dense" if dense else "sparse")
+
+
 def serial_cost(m: int, n: int, k: int, *, algo: str = "bpp",
                 dense: bool = True, nnz: float = 0.0,
-                bpp_iters: float = 1.0) -> IterCost:
+                bpp_iters: float = 1.0, backend=None) -> IterCost:
     """Single-device baseline (p = 1): all flops, no communication."""
-    mm_flops = 4.0 * m * n * k if dense else 4.0 * nnz * k
+    ops = _resolve_ops(backend, dense)
     gram_flops = (m + n) * k * k
-    flops = mm_flops + gram_flops + luc_flops(algo, m, n, k,
-                                              bpp_iters=bpp_iters)
-    mem = (m * n if dense else nnz) + (m + n) * k
+    flops = ops.mm_flops(m, n, k, nnz=nnz) + gram_flops \
+        + luc_flops(algo, m, n, k, bpp_iters=bpp_iters)
+    mem = ops.storage_words(m, n, nnz=nnz) + (m + n) * k
     return IterCost(flops, 0.0, 0.0, mem)
 
 
 def schedule_cost(schedule: str, m: int, n: int, k: int, *, pr: int = 1,
                   pc: int = 1, algo: str = "bpp", dense: bool = True,
-                  nnz: float = 0.0, bpp_iters: float = 1.0) -> IterCost:
+                  nnz: float = 0.0, bpp_iters: float = 1.0,
+                  backend=None) -> IterCost:
     """One entry point for every engine schedule, threading nnz through.
+
+    ``backend`` is a ``repro.backends`` name or LocalOps instance; its
+    ``mm_flops`` (dense 4·m·n·k vs sparse 4·nnz·k per iteration) and
+    ``storage_words`` keep the prediction honest per backend.  The legacy
+    ``dense=False`` spelling maps to the sparse backend.
 
     ``gspmd`` is modelled with the FAUN formulas — its *optimal* schedule —
     so the measured-HLO gap (see core/gspmd.py: 121× more wire bytes) reads
@@ -95,22 +110,23 @@ def schedule_cost(schedule: str, m: int, n: int, k: int, *, pr: int = 1,
     schedule = schedule.lower()
     if schedule == "serial":
         return serial_cost(m, n, k, algo=algo, dense=dense, nnz=nnz,
-                           bpp_iters=bpp_iters)
+                           bpp_iters=bpp_iters, backend=backend)
     if schedule in ("faun", "gspmd"):
         return mpifaun_cost(m, n, k, pr, pc, algo=algo, dense=dense, nnz=nnz,
-                            bpp_iters=bpp_iters)
+                            bpp_iters=bpp_iters, backend=backend)
     if schedule == "naive":
         return naive_cost(m, n, k, pr * pc, algo=algo, dense=dense, nnz=nnz,
-                          bpp_iters=bpp_iters)
+                          bpp_iters=bpp_iters, backend=backend)
     raise ValueError(f"unknown schedule {schedule!r}")
 
 
 def mpifaun_cost(m: int, n: int, k: int, pr: int, pc: int, *,
                  algo: str = "bpp", dense: bool = True, nnz: float = 0.0,
-                 bpp_iters: float = 1.0) -> IterCost:
+                 bpp_iters: float = 1.0, backend=None) -> IterCost:
     """Per-iteration cost of Algorithm 3 (paper §5.2.1–5.2.3)."""
+    ops = _resolve_ops(backend, dense)
     p = pr * pc
-    mm_flops = 4.0 * m * n * k / p if dense else 4.0 * (nnz / p) * k
+    mm_flops = ops.mm_flops(m, n, k, nnz=nnz) / p
     gram_flops = (m + n) * k * k / p
     flops = mm_flops + gram_flops + luc_flops(algo, m / p, n / p, k,
                                               bpp_iters=bpp_iters)
@@ -118,22 +134,23 @@ def mpifaun_cost(m: int, n: int, k: int, pr: int, pc: int, *,
     words = (2 * 2 * k * k * (p - 1) / p
              + 2 * ((pr - 1) * n * k / p + (pc - 1) * m * k / p))
     messages = 6 * math.log2(max(p, 2))
-    mem = (m * n / p if dense else nnz / p) + (m + n) * k / p \
+    mem = ops.storage_words(m, n, nnz=nnz) / p + (m + n) * k / p \
         + 2 * m * k / pr + 2 * n * k / pc
     return IterCost(flops, words, messages, mem)
 
 
 def naive_cost(m: int, n: int, k: int, p: int, *, algo: str = "bpp",
                dense: bool = True, nnz: float = 0.0,
-               bpp_iters: float = 1.0) -> IterCost:
+               bpp_iters: float = 1.0, backend=None) -> IterCost:
     """Per-iteration cost of Algorithm 2 (paper §5.1.1–5.1.3)."""
-    mm_flops = 4.0 * m * n * k / p if dense else 4.0 * (nnz / p) * k
+    ops = _resolve_ops(backend, dense)
+    mm_flops = ops.mm_flops(m, n, k, nnz=nnz) / p
     gram_flops = (m + n) * k * k          # redundant on every processor
     flops = mm_flops + gram_flops + luc_flops(algo, m / p, n / p, k,
                                               bpp_iters=bpp_iters)
     words = (m + n) * k * (p - 1) / p     # two full-factor all-gathers
     messages = 2 * math.log2(max(p, 2))
-    mem = (2.0 * m * n / p if dense else 2.0 * nnz / p) + (m + n) * k
+    mem = 2.0 * ops.storage_words(m, n, nnz=nnz) / p + (m + n) * k
     return IterCost(flops, words, messages, mem)
 
 

@@ -1,4 +1,5 @@
-"""Unified AU-NMF solver engine: one driver lifecycle, pluggable schedules.
+"""Unified AU-NMF solver engine: one driver lifecycle, pluggable schedules
+over a pluggable local-compute layer.
 
 Before this module the four drivers (core/aunmf.py, core/faun.py,
 core/naive.py, core/gspmd.py) each reimplemented factor init, device
@@ -13,20 +14,31 @@ placement, the ``lax.scan`` loop, error tracking, and result packing.
     - ``naive``   Naive-Parallel-AUNMF baseline (Algorithm 2, 1-D mesh)
     - ``gspmd``   global-view program, XLA's partitioner picks collectives
 
-* **backend** — how the local A-multiplies are computed:
+* **backend** — a ``repro.backends.LocalOps`` implementation of the purely
+  local products (A·Hᵀ, AᵀW, XᵀX) and of A's storage representation:
 
-    - ``dense``   plain XLA GEMMs
-    - ``pallas``  the kernels/ops.py Pallas kernels
-    - ``sparse``  block-local COO SpMM (core/blocksparse.py); A's blocks
-                  never cross the wire, per the paper's invariant
+    - ``dense``   plain XLA GEMMs (repro.backends.DenseOps)
+    - ``pallas``  the repro.kernels TPU kernels (PallasOps)
+    - ``sparse``  block-local COO SpMM (SparseOps over core/blocksparse.py;
+                  on TPU it lowers to kernels/spmm.py); A's nonzeros never
+                  cross the wire, per the paper's invariant
 
-Support matrix (✓ = implemented):
+  ``backend=`` also accepts a LocalOps instance or subclass, or any name
+  registered via ``repro.backends.register_backend`` — schedules consume
+  only the LocalOps surface, so a custom backend works on every schedule.
+
+Support matrix (✓ everywhere):
 
     schedule \\ backend   dense   pallas   sparse
-    serial                 ✓       ✓        ✓  (BCOO)
-    faun                   ✓       ✓        ✓  (BlockCOO)
-    naive                  ✓       —        —
-    gspmd                  ✓       —        —
+    serial                 ✓       ✓        ✓  (1×1-grid BlockCOO)
+    faun                   ✓       ✓        ✓  (pr×pc BlockCOO)
+    naive                  ✓       ✓        ✓  (row- + col-blocked copies)
+    gspmd                  ✓       ✓*       ✓  (nnz-sharded triplets)
+
+  (* gspmd/pallas is single-device only — multi-device grids raise: XLA's
+  auto-partitioner cannot partition a pallas_call and would replicate A,
+  which is itself a point the paper's hand schedule makes — shard_map +
+  Pallas composes, global-view does not.)
 
 On top of the unified loop every schedule gets the same stopping-criterion
 subsystem: fixed iterations (the paper's benchmark protocol), relative-error
@@ -45,17 +57,14 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import algorithms, blocksparse
+from repro import backends as _backends
+from repro.core import algorithms
 from repro.core.aunmf import NMFResult, aunmf_step, init_h, init_w
-from repro.core.error import sq_frobenius
 from repro.util.compat import make_mesh
 
 SCHEDULES = ("serial", "faun", "naive", "gspmd")
-BACKENDS = ("dense", "pallas", "sparse")
-
-
-def _is_bcoo(A) -> bool:
-    return type(A).__name__ == "BCOO"
+# Valid backends are whatever repro.backends.available_backends() lists
+# ("dense", "pallas", "sparse" built in, plus anything registered).
 
 
 # ---------------------------------------------------------------------------
@@ -84,8 +93,9 @@ class StoppingCriterion:
 
 # ---------------------------------------------------------------------------
 # Schedules.  Each is an iteration body + a layout spec; the engine owns the
-# loop.  The step contract is step(Arep, W, Ht, normA_sq) -> (W, Ht, sq_err)
-# over (m,k) W and (n,k) Ht (transposed H), however Arep is represented.
+# loop and the backend owns the local products.  The step contract is
+# step(Arep, W, Ht, normA_sq) -> (W, Ht, sq_err) over (m,k) W and (n,k) Ht
+# (transposed H), however Arep is represented.
 # ---------------------------------------------------------------------------
 
 class _Schedule:
@@ -98,27 +108,18 @@ class _Schedule:
     def collect(self, W, Ht):
         return W, Ht.T
 
-    def _dense_abstract_args(self, m, n, dtype):
+    def _factor_abstract_args(self, m, n, dtype):
         k = self.s.k
-        return (jax.ShapeDtypeStruct((m, n), dtype),
-                jax.ShapeDtypeStruct((m, k), dtype),
+        return (jax.ShapeDtypeStruct((m, k), dtype),
                 jax.ShapeDtypeStruct((n, k), dtype),
                 jax.ShapeDtypeStruct((), jnp.float32))
-
-    def _require_dense(self, A):
-        if not isinstance(A, jax.Array):
-            raise ValueError(
-                f"{self.name} schedule is dense-only; got "
-                f"{type(A).__name__} — use schedule='faun' with "
-                f"backend='sparse' for sparse input")
-        return A
 
 
 class _GridSchedule(_Schedule):
     """Schedules laid out on a FaunGrid (paper Fig. 2 shardings)."""
 
     def _spec_A(self):
-        return self.grid.spec_A()
+        return self.s.ops.spec_A(self.grid)
 
     @property
     def p(self) -> int:
@@ -150,39 +151,26 @@ class _SerialSchedule(_Schedule):
         return (1, 1)
 
     def cache_key(self):
-        return (self.name, self.s.algo, self.s.backend)
+        return (self.name, self.s.algo, self.s.ops.cache_key())
 
     def prepare(self, A, W0, H0):
-        if self.s.backend == "sparse" and isinstance(A, jax.Array):
-            from jax.experimental import sparse as jsparse
-            A = jsparse.BCOO.fromdense(A)
-        if _is_bcoo(A):
-            normA_sq = jnp.sum(A.data.astype(jnp.float32) ** 2)
-        else:
-            normA_sq = sq_frobenius(A)
-        return A, W0, H0.T, normA_sq
+        A = self.s.ops.prepare(A)
+        return A, W0, H0.T, self.s.ops.norm_sq(A)
 
     def build_step(self) -> Callable:
         update_w, update_h = algorithms.get_update_fns(self.s.algo)
-        mm = mm_t = None
-        if self.s.backend == "pallas":
-            from repro.kernels import ops as kops
-            mm, mm_t = kops.ts_matmul, kops.ts_matmul_t
+        ops = self.s.ops
 
         def step(A, W, Ht, normA_sq):
             W, H, sq = aunmf_step(A, W, Ht.T, update_w, update_h, normA_sq,
-                                  mm=mm, mm_t=mm_t)
+                                  mm=ops.mm, mm_t=ops.mm_t, gram=ops.gram)
             return W, H.T, sq
 
         return step
 
     def abstract_args(self, m, n, dtype, nnz):
-        if self.s.backend == "sparse":
-            raise ValueError(
-                "serial sparse lowering is unsupported (BCOO cannot carry "
-                "abstract shapes); lower the distributed sparse path "
-                "instead: NMFSolver(schedule='faun', backend='sparse')")
-        return self._dense_abstract_args(m, n, dtype)
+        Aabs = self.s.ops.abstract_A(m, n, dtype, nnz, 1, 1)
+        return (Aabs,) + self._factor_abstract_args(m, n, dtype)
 
     def arg_shardings(self):
         return None
@@ -199,23 +187,13 @@ class _FaunSchedule(_GridSchedule):
         self.s, self.grid = solver, grid
 
     def cache_key(self):
-        return (self.name, self.s.algo, self.s.backend, self.s.panel_dtype,
-                self.grid)
-
-    def _spec_A(self):
-        return (self.grid.spec_A_sparse() if self.s.backend == "sparse"
-                else self.grid.spec_A())
+        return (self.name, self.s.algo, self.s.ops.cache_key(),
+                self.s.panel_dtype, self.grid)
 
     def prepare(self, A, W0, H0):
-        grid = self.grid
-        if self.s.backend == "sparse":
-            A = blocksparse.blockify(A, grid.pr, grid.pc)
-            normA_sq = blocksparse.sq_norm(A)
-        else:
-            if not isinstance(A, jax.Array):
-                raise ValueError("faun: dense/pallas backends need a dense "
-                                 "A; pass backend='sparse' for BCOO input")
-            normA_sq = sq_frobenius(A)
+        grid, ops = self.grid, self.s.ops
+        A = ops.blockify(A, grid.pr, grid.pc)
+        normA_sq = ops.norm_sq(A)
         Arep = jax.device_put(A, grid.sharding(self._spec_A()))
         W = jax.device_put(W0, grid.sharding(grid.spec_W()))
         Ht = jax.device_put(H0.T, grid.sharding(grid.spec_Ht()))
@@ -223,37 +201,19 @@ class _FaunSchedule(_GridSchedule):
 
     def build_step(self) -> Callable:
         from repro.core.faun import build_faun_step
-        return build_faun_step(self.grid, algo=self.s.algo,
-                               backend=self.s.backend,
+        return build_faun_step(self.grid, algo=self.s.algo, ops=self.s.ops,
                                panel_dtype=self.s.panel_dtype)
 
     def abstract_args(self, m, n, dtype, nnz):
-        k, grid = self.s.k, self.grid
-        if self.s.backend == "sparse":
-            gr, gc = grid.pr, grid.pc
-            nnz = int(nnz) if nnz else max(m * n // 100, 1)
-            nnz_max = max(-(-nnz // (gr * gc)), 1)
-            Aabs = blocksparse.BlockCOO(
-                vals=jax.ShapeDtypeStruct((gr, gc, nnz_max), dtype),
-                rows=jax.ShapeDtypeStruct((gr, gc, nnz_max), jnp.int32),
-                cols=jax.ShapeDtypeStruct((gr, gc, nnz_max), jnp.int32),
-                shape=(m, n), block_shape=(m // gr, n // gc), nnz=nnz)
-        else:
-            Aabs = jax.ShapeDtypeStruct((m, n), dtype)
-        return (Aabs,
-                jax.ShapeDtypeStruct((m, k), dtype),
-                jax.ShapeDtypeStruct((n, k), dtype),
-                jax.ShapeDtypeStruct((), jnp.float32))
+        grid = self.grid
+        Aabs = self.s.ops.abstract_A(m, n, dtype, nnz, grid.pr, grid.pc)
+        return (Aabs,) + self._factor_abstract_args(m, n, dtype)
 
 
 class _NaiveSchedule(_Schedule):
     name = "naive"
 
     def __init__(self, solver: "NMFSolver", mesh, axis: str):
-        if solver.backend != "dense":
-            raise ValueError("naive schedule supports only the dense backend "
-                             "(it exists as the paper's communication-"
-                             "inefficient dense baseline)")
         if mesh is None:
             mesh = make_mesh((jax.device_count(),), (axis,))
         self.s, self.mesh, self.axis = solver, mesh, axis
@@ -266,21 +226,36 @@ class _NaiveSchedule(_Schedule):
         return (self.p, 1)
 
     def cache_key(self):
-        return (self.name, self.s.algo, self.mesh, self.axis)
+        return (self.name, self.s.algo, self.s.ops.cache_key(), self.mesh,
+                self.axis)
+
+    def _specs_A(self) -> tuple[P, P]:
+        """Row- and column-blocked specs, extended over any extra
+        representation dims (the BlockCOO triplet dim stays unsharded)."""
+        extra = (None,) * (self.s.ops.block_leaf_ndim - 2)
+        return (P(self.axis, None, *extra), P(None, self.axis, *extra))
 
     def prepare(self, A, W0, H0):
-        self._require_dense(A)
+        ops, p, ax = self.s.ops, self.p, self.axis
+        # Algorithm 2 stores A twice: row-distributed and column-distributed.
+        # Canonicalise once (for sparse ops: the single dense→triplet
+        # conversion) so the two layouts only repack, not reconvert.
+        A = ops.pre_blockify(A)
+        Arow = ops.blockify(A, p, 1)
+        Acol = ops.blockify(A, 1, p)
+        normA_sq = ops.norm_sq(Arow)
         sh = lambda spec: NamedSharding(self.mesh, spec)
-        ax = self.axis
-        Arow = jax.device_put(A, sh(P(ax, None)))
-        Acol = jax.device_put(A, sh(P(None, ax)))   # the duplicate copy
+        spec_row, spec_col = self._specs_A()
+        Arow = jax.device_put(Arow, sh(spec_row))
+        Acol = jax.device_put(Acol, sh(spec_col))
         W = jax.device_put(W0, sh(P(ax, None)))
         Ht = jax.device_put(H0.T, sh(P(ax, None)))
-        return (Arow, Acol), W, Ht, sq_frobenius(A)
+        return (Arow, Acol), W, Ht, normA_sq
 
     def build_step(self) -> Callable:
         from repro.core.naive import build_naive_step
-        base = build_naive_step(self.mesh, algo=self.s.algo, axis=self.axis)
+        base = build_naive_step(self.mesh, algo=self.s.algo, axis=self.axis,
+                                ops=self.s.ops)
 
         def step(Arep, W, Ht, normA_sq):
             return base(Arep[0], Arep[1], W, Ht, normA_sq)
@@ -288,14 +263,16 @@ class _NaiveSchedule(_Schedule):
         return step
 
     def abstract_args(self, m, n, dtype, nnz):
-        _, W, Ht, norm = self._dense_abstract_args(m, n, dtype)
-        Aabs = jax.ShapeDtypeStruct((m, n), dtype)
-        return ((Aabs, Aabs), W, Ht, norm)
+        ops, p = self.s.ops, self.p
+        Aabs = (ops.abstract_A(m, n, dtype, nnz, p, 1),
+                ops.abstract_A(m, n, dtype, nnz, 1, p))
+        return (Aabs,) + self._factor_abstract_args(m, n, dtype)
 
     def arg_shardings(self):
         sh = lambda spec: NamedSharding(self.mesh, spec)
         ax = self.axis
-        in_sh = ((sh(P(ax, None)), sh(P(None, ax))), sh(P(ax, None)),
+        spec_row, spec_col = self._specs_A()
+        in_sh = ((sh(spec_row), sh(spec_col)), sh(P(ax, None)),
                  sh(P(ax, None)), None)
         out_sh = (sh(P(ax, None)), sh(P(ax, None)), None)
         return in_sh, out_sh
@@ -306,32 +283,53 @@ class _GspmdSchedule(_GridSchedule):
 
     def __init__(self, solver: "NMFSolver", grid):
         from repro.core.faun import FaunGrid, make_faun_mesh
-        if solver.backend != "dense":
-            raise ValueError("gspmd schedule supports only the dense backend "
-                             "(XLA owns the local compute)")
         if grid is None:
             grid = make_faun_mesh(*_square_grid(jax.device_count()))
         assert isinstance(grid, FaunGrid), grid
         self.s, self.grid = solver, grid
+        # Global-view programs leave parallelism to the auto-partitioner,
+        # which cannot split hand-written kernels — let the backend swap in
+        # its partitioner-safe variant, and reject backends that have none
+        # on multi-device grids (XLA would silently replicate A instead,
+        # breaking the never-communicate-A invariant).
+        self.gops = solver.ops.global_view_ops()
+        if grid.p > 1 and not self.gops.partitionable:
+            raise ValueError(
+                f"gspmd × {self.gops.name!r} is single-device only: the "
+                f"auto-partitioner cannot partition this backend's kernels "
+                f"(use schedule='faun', which composes shard_map with them)")
 
     def cache_key(self):
-        return (self.name, self.s.algo, self.grid)
+        return (self.name, self.s.algo, self.gops.cache_key(), self.grid)
+
+    def _spec_A(self):
+        # Global-view sparse A is one 1×1 block with the flat triplet dim
+        # sharded over ALL devices — XLA's partitioner then has no choice
+        # but to keep the nonzeros local and all-reduce the k-width partial
+        # products (verified in the lowered HLO by the distributed checks).
+        if self.gops.block_leaf_ndim > 2:
+            grid = self.grid
+            return P(None, None, tuple(grid.row_axes) + (grid.col_axis,))
+        return self.grid.spec_A()
 
     def prepare(self, A, W0, H0):
-        self._require_dense(A)
-        grid = self.grid
-        normA_sq = sq_frobenius(A)
-        Arep = jax.device_put(A, grid.sharding(grid.spec_A()))
+        grid, ops = self.grid, self.gops
+        A = ops.prepare(A)
+        normA_sq = ops.norm_sq(A)
+        A = ops.pad_global(A, grid.p)
+        Arep = jax.device_put(A, grid.sharding(self._spec_A()))
         W = jax.device_put(W0, grid.sharding(grid.spec_W()))
         Ht = jax.device_put(H0.T, grid.sharding(grid.spec_Ht()))
         return Arep, W, Ht, normA_sq
 
     def build_step(self) -> Callable:
         from repro.core.gspmd import gspmd_iteration
-        return functools.partial(gspmd_iteration, algo=self.s.algo)
+        return functools.partial(gspmd_iteration, algo=self.s.algo,
+                                 ops=self.gops)
 
     def abstract_args(self, m, n, dtype, nnz):
-        return self._dense_abstract_args(m, n, dtype)
+        Aabs = self.gops.abstract_global_A(m, n, dtype, nnz, self.grid.p)
+        return (Aabs,) + self._factor_abstract_args(m, n, dtype)
 
 
 def _square_grid(p: int) -> tuple[int, int]:
@@ -344,30 +342,39 @@ def _square_grid(p: int) -> tuple[int, int]:
 # ---------------------------------------------------------------------------
 
 class NMFSolver:
-    """One driver lifecycle for every AU-NMF schedule × local-matmul backend.
+    """One driver lifecycle for every AU-NMF schedule × local-compute backend.
 
     >>> solver = NMFSolver(k=16, algo="bpp", schedule="faun", grid=grid,
-    ...                    max_iters=200, tol=1e-4)
+    ...                    backend="sparse", max_iters=200, tol=1e-4)
     >>> result = solver.fit(A)          # A: dense, BCOO, or BlockCOO
 
-    The legacy entry points (``aunmf.fit``, ``faun.fit``, ``naive.fit``,
-    ``gspmd.fit``) are thin wrappers over this class.
+    ``backend`` is a name registered in ``repro.backends`` ("dense",
+    "pallas", "sparse", or your own via ``register_backend``) or a
+    ``LocalOps`` instance.  The legacy entry points (``aunmf.fit``,
+    ``faun.fit``, ``naive.fit``, ``gspmd.fit``) are thin wrappers over this
+    class.
     """
 
     def __init__(self, k: int, *, algo: str = "bpp", schedule: str = "serial",
-                 backend: str = "dense", grid=None, mesh: Mesh | None = None,
-                 axis: str = "p", max_iters: int = 30,
-                 tol: float | None = None, stall_iters: int = 0,
-                 stall_tol: float = 1e-6, panel_dtype=None,
-                 donate: bool = False):
+                 backend: "_backends.BackendSpec" = "dense", grid=None,
+                 mesh: Mesh | None = None, axis: str = "p",
+                 max_iters: int = 30, tol: float | None = None,
+                 stall_iters: int = 0, stall_tol: float = 1e-6,
+                 panel_dtype=None, donate: bool = False):
         if schedule not in SCHEDULES:
             raise ValueError(f"unknown schedule {schedule!r}; "
                              f"choose from {SCHEDULES}")
-        if backend not in BACKENDS:
-            raise ValueError(f"unknown backend {backend!r}; "
-                             f"choose from {BACKENDS}")
         algorithms.get_update_fns(algo)      # validate early
-        self.k, self.algo, self.backend = k, algo, backend
+        self.ops = _backends.get_backend(backend)
+        if panel_dtype is not None:
+            if schedule != "faun":
+                raise ValueError("panel_dtype (low-precision panel gathers) "
+                                 "is implemented by the faun schedule only")
+            if not self.ops.supports_panel_dtype:
+                raise ValueError(f"backend {self.ops.name!r} does not "
+                                 f"support low-precision panels "
+                                 f"(panel_dtype)")
+        self.k, self.algo = k, algo
         self.panel_dtype, self.donate = panel_dtype, donate
         self.stopping = StoppingCriterion(max_iters=max_iters, tol=tol,
                                           stall_iters=stall_iters,
@@ -384,6 +391,10 @@ class NMFSolver:
     @property
     def schedule(self) -> str:
         return self._schedule.name
+
+    @property
+    def backend(self) -> str:
+        return self.ops.name
 
     # -- driver lifecycle ---------------------------------------------------
 
@@ -436,12 +447,13 @@ class NMFSolver:
     def predict_cost(self, m: int, n: int, *, nnz: float = 0.0,
                      bpp_iters: float = 1.0):
         """α-β-γ per-iteration cost prediction for this solver's schedule,
-        threading nnz through when the backend is sparse."""
+        with the A-product flops supplied by the backend (dense m·n·k vs
+        sparse 2·nnz·k per product)."""
         from repro.core import costmodel
         pr, pc = self._schedule.grid_shape()
         return costmodel.schedule_cost(
             self.schedule, m, n, self.k, pr=pr, pc=pc, algo=self.algo,
-            dense=self.backend != "sparse", nnz=nnz, bpp_iters=bpp_iters)
+            backend=self.ops, nnz=nnz, bpp_iters=bpp_iters)
 
 
 # ---------------------------------------------------------------------------
@@ -483,7 +495,10 @@ def _fixed_run(step, donate: bool):
     def run(Arep, W, Ht, normA_sq, iters: int):
         def body(carry, _):
             W, Ht = carry
-            W, Ht, sq = step(Arep, W, Ht, normA_sq)
+            Wn, Htn, sq = step(Arep, W, Ht, normA_sq)
+            # Backends may emit fp32 from low-precision factors (fp32
+            # accumulation); restore the carry dtype (no-op for fp32 runs).
+            W, Ht = Wn.astype(W.dtype), Htn.astype(Ht.dtype)
             rel = jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq)
             return (W, Ht), rel
 
@@ -505,7 +520,8 @@ def _adaptive_run(step, crit: StoppingCriterion, donate: bool):
 
         def body(state):
             W, Ht, rels, i, best, stall, _ = state
-            W, Ht, sq = step(Arep, W, Ht, normA_sq)
+            Wn, Htn, sq = step(Arep, W, Ht, normA_sq)
+            W, Ht = Wn.astype(W.dtype), Htn.astype(Ht.dtype)
             rel = jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq)
             rels = lax.dynamic_update_index_in_dim(rels, rel, i, 0)
             improved = rel < best - stall_tol

@@ -32,7 +32,7 @@ from __future__ import annotations
 import functools
 import math
 from dataclasses import dataclass
-from typing import Callable, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -72,39 +72,32 @@ def matmul_reducescatter(Y_loc: jax.Array, axis: str, *,
 # ---------------------------------------------------------------------------
 
 def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, *, row_axes, col_axis,
-                   algo: str, local_mm: Callable | None = None,
-                   local_mm_t: Callable | None = None,
-                   local_gram: Callable | None = None,
-                   panel_dtype=None):
+                   algo: str, ops=None, panel_dtype=None):
     """One AU-NMF iteration of Algorithm 3 on local blocks.
 
-    A_blk  : (m/prE, n/pc)  local data block (prE = pod*pr on multi-pod)
+    A_blk  : (m/prE, n/pc)  local data block (prE = pod*pr on multi-pod),
+                            in whatever representation ``ops`` understands
+                            (dense array, BlockCOO triplets, ...)
     W_blk  : (m/p, k)       local W rows
     Ht_blk : (n/p, k)       local Hᵀ rows  (H column block, transposed)
     row_axes: mesh axis name(s) forming the grid-row dimension ("pod","pr")
     col_axis: mesh axis name for grid columns ("pc")
+    ops    : repro.backends.LocalOps supplying the local products
+             (None = DenseOps, plain XLA)
 
     Returns (W_blk, Ht_blk, sq_err).
     """
     all_axes = tuple(row_axes) + (col_axis,)
-    acc32 = functools.partial(lax.dot_general,
-                              dimension_numbers=(((1,), (0,)), ((), ())),
-                              preferred_element_type=jnp.float32)
-    if panel_dtype is not None and local_mm is None:
+    if ops is None:
+        from repro.backends import DenseOps
+        ops = DenseOps()
+    mm, mm_t, gram = ops.mm, ops.mm_t, ops.gram
+    if panel_dtype is not None:
         # Beyond-paper: ship factor panels over the wire in bf16 (half the
-        # all-gather bytes) and accumulate the GEMM in fp32 on the MXU.
-        mm = lambda a, b: acc32(a, b)
-        mm_t = lambda a, b: lax.dot_general(
-            a, b, dimension_numbers=(((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        gram = lambda x: lax.dot_general(
-            x, x, dimension_numbers=(((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        cast = lambda x: x.astype(panel_dtype)
+        # all-gather bytes); the backend accumulates fp32 on the MXU and
+        # casts its local A block to match.
+        cast = lambda x: ops.cast_block(x, panel_dtype)
     else:
-        mm = local_mm or (lambda a, b: a @ b)
-        mm_t = local_mm_t or (lambda a, b: a.T @ b)
-        gram = local_gram or (lambda x: x.T @ x)
         cast = lambda x: x
 
     def norm_psum(v):  # HALS column-norm reduction over the whole grid
@@ -213,41 +206,32 @@ def make_faun_mesh(pr: int, pc: int, *, devices=None) -> FaunGrid:
     return FaunGrid(mesh=mesh)
 
 
-def build_faun_step(grid: FaunGrid, *, algo: str, backend: str | None = None,
-                    use_pallas: bool = False, panel_dtype=None):
+def build_faun_step(grid: FaunGrid, *, algo: str, ops=None,
+                    backend: str | None = None, use_pallas: bool = False,
+                    panel_dtype=None):
     """Returns step(A, W, Ht, normA_sq) -> (W, Ht, sq_err) as a shard_mapped,
     jit-compatible callable over *global* arrays.
 
-    ``backend`` selects the local-matmul implementation: "dense" (XLA),
-    "pallas" (kernels/ops.py), or "sparse" (BlockCOO scatter-add SpMM —
-    A then enters as a core.blocksparse.BlockCOO and never crosses the
-    wire).  ``use_pallas=True`` is the legacy spelling of backend="pallas".
+    ``ops`` is the ``repro.backends.LocalOps`` backend computing the local
+    products (and defining A's blocked representation — for SparseOps, A
+    enters as a core.blocksparse.BlockCOO and never crosses the wire).
+    ``backend="dense"|"pallas"|"sparse"`` and ``use_pallas=True`` are the
+    legacy spellings, resolved through the same registry.
     """
-    if backend is None:
-        backend = "pallas" if use_pallas else "dense"
-    local_mm = local_mm_t = local_gram = None
-    if backend == "pallas":
-        from repro.kernels import ops as kops
-        local_mm = kops.ts_matmul
-        local_mm_t = kops.ts_matmul_t
-        local_gram = kops.gram
-    elif backend == "sparse":
-        from repro.core import blocksparse
-        if panel_dtype is not None:
-            raise ValueError("low-precision panels are not supported on the "
-                             "sparse backend (scatter-add SpMM is fp32)")
-        local_mm = blocksparse.local_spmm
-        local_mm_t = blocksparse.local_spmm_t
+    from repro.backends import get_backend
+    if ops is None:
+        ops = get_backend(backend or ("pallas" if use_pallas else "dense"))
+    if panel_dtype is not None and not ops.supports_panel_dtype:
+        raise ValueError(f"low-precision panels are not supported on the "
+                         f"{ops.name!r} backend")
 
-    spec_A = grid.spec_A_sparse() if backend == "sparse" else grid.spec_A()
     body = functools.partial(
         faun_iteration, row_axes=grid.row_axes, col_axis=grid.col_axis,
-        algo=algo, local_mm=local_mm, local_mm_t=local_mm_t,
-        local_gram=local_gram, panel_dtype=panel_dtype)
+        algo=algo, ops=ops, panel_dtype=panel_dtype)
 
     return shard_map(
         body, mesh=grid.mesh,
-        in_specs=(spec_A, grid.spec_W(), grid.spec_Ht(), P()),
+        in_specs=(ops.spec_A(grid), grid.spec_W(), grid.spec_Ht(), P()),
         out_specs=(grid.spec_W(), grid.spec_Ht(), P()),
     )
 
@@ -262,13 +246,9 @@ def fit(A, k: int, *, grid: FaunGrid, algo: str = "bpp", iters: int = 30,
     Thin wrapper over ``core.engine.NMFSolver(schedule="faun")``; sparse
     input (BCOO / BlockCOO) routes through the block-local SpMM backend.
     """
+    from repro.backends import infer_backend
     from repro.core.engine import NMFSolver
-    if use_pallas:
-        backend = "pallas"
-    elif isinstance(A, jax.Array):
-        backend = "dense"
-    else:
-        backend = "sparse"
+    backend = "pallas" if use_pallas else infer_backend(A)
     solver = NMFSolver(k, algo=algo, schedule="faun", backend=backend,
                        grid=grid, max_iters=iters, panel_dtype=panel_dtype,
                        donate=donate)

@@ -25,35 +25,51 @@ from repro.core.error import sq_error_from_products
 from repro.core.faun import FaunGrid
 
 
-def gspmd_iteration(A, W, Ht, normA_sq, *, algo: str):
-    """Global-view AU-NMF iteration; no explicit collectives anywhere."""
+def gspmd_iteration(A, W, Ht, normA_sq, *, algo: str, ops=None):
+    """Global-view AU-NMF iteration; no explicit collectives anywhere.
+
+    ``ops`` supplies the A-products on the *global* representation: dense
+    arrays for DenseOps/PallasOps, or one nnz-sharded BlockCOO for
+    SparseOps — XLA's partitioner then keeps the triplets local and
+    all-reduces the k-width partial products (the engine's distributed
+    checks assert this in the lowered HLO).
+    """
+    if ops is None:
+        from repro.backends import DenseOps
+        ops = DenseOps()
     update_w, update_h = algorithms.get_update_fns(algo)
     H = Ht.T
-    HHt = H @ H.T
-    AHt = A @ H.T
+    HHt = ops.gram(Ht)
+    AHt = ops.mm(A, H.T)
     W = update_w(HHt, AHt, W)
-    WtW = W.T @ W
-    WtA = W.T @ A
-    Ht = update_h(WtW, WtA.T, Ht)
-    sq = sq_error_from_products(normA_sq, WtA, Ht.T, WtW, Ht.T @ Ht)
+    WtW = ops.gram(W)
+    WtA_t = ops.mm_t(A, W)
+    Ht = update_h(WtW, WtA_t, Ht)
+    sq = sq_error_from_products(normA_sq, WtA_t.T, Ht.T, WtW, ops.gram(Ht))
     return W, Ht, sq
 
 
 def fit(A, k: int, *, grid: FaunGrid, algo: str = "bpp", iters: int = 30,
         key: jax.Array | None = None, H0: jax.Array | None = None,
-        W0: jax.Array | None = None) -> NMFResult:
+        W0: jax.Array | None = None,
+        backend: str | None = None) -> NMFResult:
     """Run the GSPMD-auto variant end to end (XLA picks the collectives).
     Thin wrapper over ``core.engine.NMFSolver(schedule="gspmd")``."""
+    from repro.backends import infer_backend
     from repro.core.engine import NMFSolver
+    if backend is None:
+        backend = infer_backend(A)
     solver = NMFSolver(k, algo=algo, schedule="gspmd", grid=grid,
-                       max_iters=iters)
+                       backend=backend, max_iters=iters)
     return solver.fit(A, key=key, H0=H0, W0=W0)
 
 
 def lower_step(grid: FaunGrid, m: int, n: int, k: int, *, algo: str = "mu",
-               dtype=jnp.float32):
+               dtype=jnp.float32, backend: str = "dense",
+               nnz: int | None = None):
     """Lower one GSPMD-auto iteration with the paper's data layouts as
     in/out shardings (same layouts as faun.lower_step, no shard_map)."""
     from repro.core.engine import NMFSolver
-    solver = NMFSolver(k, algo=algo, schedule="gspmd", grid=grid)
-    return solver.lower_step(m, n, dtype=dtype)
+    solver = NMFSolver(k, algo=algo, schedule="gspmd", grid=grid,
+                       backend=backend)
+    return solver.lower_step(m, n, dtype=dtype, nnz=nnz)

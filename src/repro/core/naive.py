@@ -3,14 +3,19 @@
 The communication-inefficient baseline the paper measures against:
 
   * A is stored TWICE — once row-distributed (A_i of m/p × n) and once
-    column-distributed (Aⁱ of m × n/p);
+    column-distributed (Aⁱ of m × n/p); with ``backend="sparse"`` the two
+    copies are a row-blocked (p, 1) and a column-blocked (1, p)
+    ``core.blocksparse.BlockCOO``, so even the naive schedule never ships
+    A's nonzeros — only its factor gathers are wasteful;
   * each half-iteration all-gathers the ENTIRE fixed factor
     (O((m+n)k) words vs FAUN's O(√(mnk²/p)));
   * every processor redundantly computes the k×k Gram of the full factor.
 
 We reproduce it faithfully (including the redundant Gram) on a 1-D mesh so
 benchmarks/bench_cost_table.py can show measured-HLO communication words of
-Naive vs FAUN, mirroring the paper's Figure 5/Table III comparison.
+Naive vs FAUN, mirroring the paper's Figure 5/Table III comparison.  The
+local products come from a ``repro.backends.LocalOps`` backend, same as
+every other schedule.
 """
 
 from __future__ import annotations
@@ -28,12 +33,17 @@ from repro.util.compat import shard_map
 
 
 def naive_iteration(Arow, Acol, W_blk, Ht_blk, normA_sq, *, axis: str,
-                    algo: str):
+                    algo: str, ops=None):
     """One iteration of Algorithm 2 on local blocks (inside shard_map).
 
     Arow: (m/p, n)   row block of A          W_blk: (m/p, k)
     Acol: (m, n/p)   column block of A       Ht_blk: (n/p, k)
+    (both A blocks in whatever representation ``ops`` understands)
     """
+    if ops is None:
+        from repro.backends import DenseOps
+        ops = DenseOps()
+
     def norm_psum(v):
         return lax.psum(v, axis)
 
@@ -41,18 +51,18 @@ def naive_iteration(Arow, Acol, W_blk, Ht_blk, normA_sq, *, axis: str,
 
     # --- W given H: all-gather whole H, redundant Gram (paper lines 3-4) ---
     Ht = lax.all_gather(Ht_blk, axis, axis=0, tiled=True)     # (n, k)
-    HHt = Ht.T @ Ht                                           # redundant k×k
-    AHt_blk = Arow @ Ht                                       # (m/p, k)
+    HHt = ops.gram(Ht)                                        # redundant k×k
+    AHt_blk = ops.mm(Arow, Ht)                                # (m/p, k)
     W_blk = update_w(HHt, AHt_blk, W_blk)
 
     # --- H given W: all-gather whole W, redundant Gram (lines 5-6) ---
     W = lax.all_gather(W_blk, axis, axis=0, tiled=True)       # (m, k)
-    WtW = W.T @ W
-    WtA_t_blk = Acol.T @ W                                    # (n/p, k)
+    WtW = ops.gram(W)
+    WtA_t_blk = ops.mm_t(Acol, W)                             # (n/p, k)
     Ht_blk = update_h(WtW, WtA_t_blk, Ht_blk)
 
     # --- error from byproducts ---
-    HHt_new = lax.psum(Ht_blk.T @ Ht_blk, axis)
+    HHt_new = lax.psum(ops.gram(Ht_blk), axis)
     cross = lax.psum(jnp.sum(WtA_t_blk.astype(jnp.float32)
                              * Ht_blk.astype(jnp.float32)), axis)
     quad = jnp.sum(WtW.astype(jnp.float32) * HHt_new.astype(jnp.float32))
@@ -60,29 +70,39 @@ def naive_iteration(Arow, Acol, W_blk, Ht_blk, normA_sq, *, axis: str,
     return W_blk, Ht_blk, sq_err
 
 
-def build_naive_step(mesh: Mesh, *, algo: str, axis: str = "p"):
-    body = functools.partial(naive_iteration, axis=axis, algo=algo)
+def build_naive_step(mesh: Mesh, *, algo: str, axis: str = "p", ops=None):
+    from repro.backends import get_backend
+    ops = get_backend(ops if ops is not None else "dense")
+    body = functools.partial(naive_iteration, axis=axis, algo=algo, ops=ops)
+    extra = (None,) * (ops.block_leaf_ndim - 2)   # BlockCOO triplet dim
     return shard_map(
         body, mesh=mesh,
-        in_specs=(P(axis, None), P(None, axis), P(axis, None), P(axis, None),
-                  P()),
+        in_specs=(P(axis, None, *extra), P(None, axis, *extra),
+                  P(axis, None), P(axis, None), P()),
         out_specs=(P(axis, None), P(axis, None), P()),
     )
 
 
 def fit(A, k: int, *, mesh: Mesh, algo: str = "bpp", iters: int = 30,
         key: jax.Array | None = None, H0: jax.Array | None = None,
-        W0: jax.Array | None = None, axis: str = "p") -> NMFResult:
-    """Thin wrapper over ``core.engine.NMFSolver(schedule="naive")``."""
+        W0: jax.Array | None = None, axis: str = "p",
+        backend: str | None = None) -> NMFResult:
+    """Thin wrapper over ``core.engine.NMFSolver(schedule="naive")``; sparse
+    input (BCOO / BlockCOO) routes through the block-local SpMM backend."""
+    from repro.backends import infer_backend
     from repro.core.engine import NMFSolver
-    solver = NMFSolver(k, algo=algo, schedule="naive", mesh=mesh, axis=axis,
-                       max_iters=iters)
+    if backend is None:
+        backend = infer_backend(A)
+    solver = NMFSolver(k, algo=algo, schedule="naive", backend=backend,
+                       mesh=mesh, axis=axis, max_iters=iters)
     return solver.fit(A, key=key, H0=H0, W0=W0)
 
 
 def lower_step(mesh: Mesh, m: int, n: int, k: int, *, algo: str = "bpp",
-               dtype=jnp.float32, axis: str = "p"):
+               dtype=jnp.float32, axis: str = "p", backend: str = "dense",
+               nnz: int | None = None):
     """AOT-lower one Naive iteration for HLO accounting."""
     from repro.core.engine import NMFSolver
-    solver = NMFSolver(k, algo=algo, schedule="naive", mesh=mesh, axis=axis)
-    return solver.lower_step(m, n, dtype=dtype)
+    solver = NMFSolver(k, algo=algo, schedule="naive", backend=backend,
+                       mesh=mesh, axis=axis)
+    return solver.lower_step(m, n, dtype=dtype, nnz=nnz)

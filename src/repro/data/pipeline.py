@@ -88,28 +88,46 @@ def lowrank_matrix(key, m, n, k, *, noise: float = 0.0, dtype=jnp.float32):
     return A
 
 
+def _erdos_renyi_sample(key, m, n, density: float, dtype):
+    """The one Erdős–Rényi sampler both storage variants draw from, so the
+    same key yields the same matrix in dense and BCOO form by construction
+    (tests assert the round trip)."""
+    k1, k2 = jax.random.split(key)
+    mask = jax.random.bernoulli(k1, density, (m, n))
+    vals = jax.random.uniform(k2, (m, n), dtype)
+    return mask, vals
+
+
 def erdos_renyi_matrix(key, m, n, density: float, dtype=jnp.float32):
     """Paper §6.1.1 sparse synthetic, DENSE storage (zero-masked values).
 
     This is the benchmark variant for comparing dense-path flops on a
     sparsity-structured matrix.  For true sparse storage — the paper's
-    actual sparse workload — use :func:`erdos_renyi_bcoo`, which feeds the
-    sparse backend of ``core.engine.NMFSolver`` directly.
+    actual sparse workload — use :func:`erdos_renyi_bcoo`, which draws from
+    the same sampler and feeds ``NMFSolver(backend="sparse")`` directly.
     """
-    k1, k2 = jax.random.split(key)
-    mask = jax.random.bernoulli(k1, density, (m, n))
-    vals = jax.random.uniform(k2, (m, n), dtype)
+    mask, vals = _erdos_renyi_sample(key, m, n, density, dtype)
     return jnp.where(mask, vals, 0.0)
 
 
 def erdos_renyi_bcoo(key, m, n, density: float, dtype=jnp.float32):
     """True sparse storage variant of :func:`erdos_renyi_matrix`: the same
-    entries for the same key, as a ``jax.experimental.sparse.BCOO``.  Use
-    with ``NMFSolver(backend="sparse")`` (serial BCOO path, or blockified
-    for the distributed faun schedule)."""
+    entries for the same key, as a ``jax.experimental.sparse.BCOO``.  The
+    triplets are extracted host-side from the shared sampler's (m, n) mask
+    and values (so the sampler itself still allocates two dense arrays —
+    this skips only the masked combine and the fromdense scatter).  Use
+    with ``NMFSolver(backend="sparse")`` (serial/gspmd 1×1 BlockCOO, or
+    grid-blockified for faun/naive)."""
+    import numpy as np
     from jax.experimental import sparse as jsparse
-    return jsparse.BCOO.fromdense(erdos_renyi_matrix(key, m, n, density,
-                                                     dtype))
+    mask, vals = _erdos_renyi_sample(key, m, n, density, dtype)
+    # Drop masked entries whose value rounds to exactly 0 in `dtype` (bf16
+    # can) so the result is identical to BCOO.fromdense of the dense form.
+    nz = np.asarray(mask) & (np.asarray(vals, np.float32) != 0.0)
+    rows, cols = np.nonzero(nz)
+    data = jnp.asarray(np.asarray(vals)[rows, cols])
+    indices = jnp.asarray(np.stack([rows, cols], axis=1), dtype=jnp.int32)
+    return jsparse.BCOO((data, indices), shape=(m, n))
 
 
 def video_like_matrix(key, m, n, *, rank: int = 20, motion: float = 0.05,

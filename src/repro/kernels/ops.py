@@ -2,14 +2,16 @@
 
 Responsibilities:
   * shape legalisation — pad rows to the block multiple and k to the MXU
-    lane width (128) with zeros (all four kernels are zero-padding-safe by
+    lane width (128) with zeros (all kernels are zero-padding-safe by
     construction; see each module's docstring), then slice back;
   * backend dispatch — compiled Pallas on TPU, interpret=True elsewhere
     (the container is CPU-only; interpret mode executes the same kernel
     body in Python for correctness validation);
   * block-size heuristics sized for ~16 MB VMEM working sets.
 
-These are the ``local_mm`` / ``local_gram`` hooks of core/faun.py.
+These back ``repro.backends.PallasOps`` (ts_matmul / ts_matmul_t / gram) and
+the Pallas lowering of ``repro.backends.SparseOps`` (spmm / spmm_t); the
+engine's schedules call them only through that ``LocalOps`` layer.
 """
 
 from __future__ import annotations
@@ -22,6 +24,7 @@ import jax.numpy as jnp
 from repro.kernels import gram as _gram
 from repro.kernels import hals_sweep as _hals
 from repro.kernels import mu_update as _mu
+from repro.kernels import spmm as _spmm
 from repro.kernels import ts_matmul as _ts
 
 LANE = 128          # MXU/VREG lane width: pad k to this multiple
@@ -93,6 +96,26 @@ def ts_matmul_t(A: jax.Array, B: jax.Array, *, block_m: int | None = None,
     bn = block_n or _block(Ap.shape[1], cap or 256)
     out = _ts.ts_matmul_t(Ap, Bp, block_m=bm, block_n=bn, interpret=interpret)
     return out[:n, :k]
+
+
+def spmm(vals: jax.Array, rows: jax.Array, cols: jax.Array, B: jax.Array,
+         m_out: int, *, block_nnz: int | None = None) -> jax.Array:
+    """A_blk @ B (fp32) from flat COO triplets, for arbitrary (n, k) B."""
+    interpret = not _on_tpu()
+    n, k = B.shape
+    Bp = _pad_to(_pad_to(B, 1, LANE), 0, 8)
+    m_pad = m_out + (-m_out) % 8
+    bnz = block_nnz or (_MAX_INTERP_BLOCK if interpret else 512)
+    out = _spmm.spmm(vals, rows.astype(jnp.int32), cols.astype(jnp.int32),
+                     Bp, m_out=m_pad, block_nnz=bnz, interpret=interpret)
+    return out[:m_out, :k]
+
+
+def spmm_t(vals: jax.Array, rows: jax.Array, cols: jax.Array, B: jax.Array,
+           n_out: int, *, block_nnz: int | None = None) -> jax.Array:
+    """A_blkᵀ @ B (fp32): the same scatter-add with rows ↔ cols swapped, so
+    Aᵀ is never materialised."""
+    return spmm(vals, cols, rows, B, n_out, block_nnz=block_nnz)
 
 
 def mu_update(X: jax.Array, G: jax.Array, R: jax.Array, *,

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: block-local SpMM out = A_blk · B from COO triplets.
+
+This is the sparse analogue of ts_matmul — the hot spot of the paper's
+sparse workloads (HPC-NMF arXiv:1509.09313 and PL-NMF arXiv:1904.07935 both
+measure the local SpMM dominating at scale).  The local block's triplets
+(vals, rows, cols) stream through SMEM in chunks while the dense operand B
+(n_blk × k) and the MXU-tile-aligned fp32 accumulator (m_blk × k, k padded
+to the 128 lane width by ops.py) stay VMEM-resident for the whole pass; each
+nonzero issues one dynamic-slice row read of B and one scatter-add
+dynamic-slice row update of the output.
+
+Zero-padding safety (the invariant every repro.kernels kernel keeps): padded
+triplets are (row=0, col=0, val=0) and add 0·B[0] to out[0] — a no-op — so
+ragged nnz, ragged k, and all-empty blocks are all safe by construction.
+
+Aᵀ·B needs no second kernel: swapping (rows ↔ cols) scatters into columns,
+exactly like blocksparse.local_spmm_t, so Aᵀ is never materialised.
+
+On CPU (no Mosaic) the same kernel body runs under interpret=True; the
+production CPU path is the XLA scatter-add in core/blocksparse.py — this
+kernel exists so ``backend="sparse"`` can use the TPU memory system the way
+the dense kernels do.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(vals_ref, rows_ref, cols_ref, b_ref, o_ref, *,
+                 block_nnz: int):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def body(t, carry):
+        v = vals_ref[0, t].astype(jnp.float32)
+        r = rows_ref[0, t]
+        c = cols_ref[0, t]
+        b = b_ref[pl.ds(c, 1), :].astype(jnp.float32)
+        o_ref[pl.ds(r, 1), :] += v * b
+        return carry
+
+    lax.fori_loop(0, block_nnz, body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m_out", "block_nnz", "interpret"))
+def spmm(vals: jax.Array, rows: jax.Array, cols: jax.Array, B: jax.Array, *,
+         m_out: int, block_nnz: int = 512,
+         interpret: bool = False) -> jax.Array:
+    """Scatter-add SpMM: (m_out, k) fp32 from flat COO triplets and B (n, k).
+
+    Shape contract (ops.py legalises arbitrary shapes): m_out and B's rows
+    are multiples of 8 and k a multiple of 128 on TPU; triplets may be any
+    length (padded to ``block_nnz`` internally with no-op zeros).
+    """
+    (nnz,) = vals.shape
+    n, k = B.shape
+    if nnz == 0:
+        return jnp.zeros((m_out, k), jnp.float32)
+    pad = (-nnz) % block_nnz
+    if pad:
+        vals = jnp.pad(vals, (0, pad))
+        rows = jnp.pad(rows, (0, pad))
+        cols = jnp.pad(cols, (0, pad))
+    chunks = (nnz + pad) // block_nnz
+    smem = functools.partial(pl.BlockSpec, (1, block_nnz), lambda j: (j, 0),
+                             memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        functools.partial(_spmm_kernel, block_nnz=block_nnz),
+        grid=(chunks,),
+        in_specs=[smem(), smem(), smem(),
+                  pl.BlockSpec((n, k), lambda j: (0, 0))],
+        out_specs=pl.BlockSpec((m_out, k), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_out, k), jnp.float32),
+        interpret=interpret,
+    )(vals.reshape(chunks, block_nnz), rows.reshape(chunks, block_nnz),
+      cols.reshape(chunks, block_nnz), B)

@@ -3,11 +3,14 @@ devices (tests/test_engine.py drives this).  Prints "PASS <name>" per
 check; exits nonzero on any failure.
 
 Covers the acceptance criteria of the engine refactor:
-  * every schedule (serial/faun/naive/gspmd) through NMFSolver agrees with
-    the serial oracle;
-  * the distributed-sparse path (faun × BlockCOO) matches serial sparse to
-    1e-4 relative error on a 2×2 grid with the same H0;
-  * the sparse lowering moves only k-width panels — NO all-gather of A;
+  * every multi-device cell of the schedule × backend matrix through
+    NMFSolver agrees with the serial oracle (gspmd × pallas is the one
+    single-device-only cell: XLA cannot partition a pallas_call);
+  * the distributed-sparse paths (faun / naive / gspmd over BlockCOO)
+    match serial sparse with the same H0;
+  * every sparse lowering moves only k-width panel collectives — A's
+    nonzeros are NEVER on the wire (faun, naive, and the gspmd
+    auto-partitioned scatter-add alike);
   * tolerance-based stopping halts early on every schedule.
 """
 
@@ -52,15 +55,19 @@ A_SP = jsparse.BCOO.fromdense(
     jnp.where(jax.random.bernoulli(KEY, 0.25, (M, N)), A, 0.0))
 
 
-@check("every_schedule_matches_serial")
+@check("every_schedule_backend_cell_matches_serial")
 def _():
     ref = NMFSolver(K, algo="bpp", max_iters=8).fit(A, key=KEY)
     grid = faun.make_faun_mesh(4, 2)
     mesh = make_mesh((8,), ("p",))
     for kwargs in [dict(schedule="faun", grid=grid),
                    dict(schedule="faun", grid=grid, backend="pallas"),
+                   dict(schedule="faun", grid=grid, backend="sparse"),
                    dict(schedule="naive", mesh=mesh),
-                   dict(schedule="gspmd", grid=grid)]:
+                   dict(schedule="naive", mesh=mesh, backend="pallas"),
+                   dict(schedule="naive", mesh=mesh, backend="sparse"),
+                   dict(schedule="gspmd", grid=grid),
+                   dict(schedule="gspmd", grid=grid, backend="sparse")]:
         res = NMFSolver(K, algo="bpp", max_iters=8, **kwargs).fit(A, key=KEY)
         np.testing.assert_allclose(np.asarray(ref.W), np.asarray(res.W),
                                    atol=5e-4, err_msg=str(kwargs))
@@ -72,17 +79,22 @@ def _():
 @check("distributed_sparse_matches_serial_sparse")
 def _():
     H0 = aunmf.init_h(KEY, N, K)
+    grid = faun.make_faun_mesh(2, 2)
+    mesh = make_mesh((8,), ("p",))
     for algo in ["mu", "hals", "bpp"]:
         ref = NMFSolver(K, algo=algo, backend="sparse",
                         max_iters=10).fit(A_SP, key=KEY, H0=H0)
-        grid = faun.make_faun_mesh(2, 2)
-        dist = NMFSolver(K, algo=algo, schedule="faun", backend="sparse",
-                         grid=grid, max_iters=10).fit(A_SP, key=KEY, H0=H0)
-        scale = float(jnp.max(jnp.abs(ref.W)))
-        err = float(jnp.max(jnp.abs(ref.W - dist.W))) / scale
-        assert err < 1e-4, (algo, err)
-        np.testing.assert_allclose(np.asarray(ref.rel_errors),
-                                   np.asarray(dist.rel_errors), atol=1e-4)
+        for kwargs in [dict(schedule="faun", grid=grid),
+                       dict(schedule="naive", mesh=mesh),
+                       dict(schedule="gspmd", grid=grid)]:
+            dist = NMFSolver(K, algo=algo, backend="sparse", max_iters=10,
+                             **kwargs).fit(A_SP, key=KEY, H0=H0)
+            scale = float(jnp.max(jnp.abs(ref.W)))
+            err = float(jnp.max(jnp.abs(ref.W - dist.W))) / scale
+            assert err < 1e-4, (algo, kwargs, err)
+            np.testing.assert_allclose(np.asarray(ref.rel_errors),
+                                       np.asarray(dist.rel_errors),
+                                       atol=1e-4, err_msg=str((algo, kwargs)))
 
 
 @check("sparse_lowering_never_gathers_A")
@@ -102,6 +114,54 @@ def _():
     assert st.wire_bytes["all-gather"] <= panel_bytes, st.wire_bytes
     assert st.wire_bytes["all-gather"] < a_block_bytes, (
         st.wire_bytes, a_block_bytes)
+
+
+@check("gspmd_pallas_multi_device_rejected")
+def _():
+    # The auto-partitioner cannot split a pallas_call; on >1 device it
+    # would replicate A, so the engine must refuse the cell outright.
+    grid = faun.make_faun_mesh(2, 2)
+    try:
+        NMFSolver(K, algo="mu", schedule="gspmd", backend="pallas",
+                  grid=grid)
+    except ValueError as e:
+        assert "single-device" in str(e), e
+    else:
+        raise AssertionError("gspmd × pallas on 4 devices did not raise")
+
+
+@check("naive_sparse_lowering_never_gathers_A")
+def _():
+    mesh = make_mesh((8,), ("p",))
+    solver = NMFSolver(K, algo="mu", schedule="naive", backend="sparse",
+                       mesh=mesh)
+    txt = solver.lower_step(M, N, nnz=int(A_SP.nse)).compile().as_text()
+    st = collective_stats(txt)
+    # Algorithm 2's waste is the two FULL-factor gathers — but they are
+    # still k-width panels; A's triplets must never move.
+    assert st.counts["all-gather"] == 2, st.counts
+    assert st.counts["all-to-all"] == 0, st.counts
+    factor_bytes = (M + N) * K * 4
+    assert st.bytes_moved["all-gather"] <= factor_bytes, st.bytes_moved
+    assert st.bytes_moved["all-gather"] < int(A_SP.nse) * 4, st.bytes_moved
+
+
+@check("gspmd_sparse_auto_partitioner_keeps_A_local")
+def _():
+    grid = faun.make_faun_mesh(4, 2)
+    solver = NMFSolver(K, algo="mu", schedule="gspmd", backend="sparse",
+                       grid=grid)
+    txt = solver.lower_step(M, N, nnz=int(A_SP.nse)).compile().as_text()
+    st = collective_stats(txt)
+    # XLA's partitioner must keep the nnz-sharded triplets local: only the
+    # k-width factor gathers and (m+n)k partial-product/Gram all-reduces.
+    nnz_bytes = int(A_SP.nse) * 4
+    assert st.counts["all-to-all"] == 0, st.counts
+    assert st.bytes_moved["all-gather"] < nnz_bytes, st.bytes_moved
+    assert st.bytes_moved["all-gather"] <= (M + N) * K * 4, st.bytes_moved
+    # all-reduces: (m,k)+(n,k) partial products + k×k Grams + error scalars
+    ar_bound = 2 * (M + N) * K * 4 + 8 * K * K * 4
+    assert st.bytes_moved["all-reduce"] <= ar_bound, st.bytes_moved
 
 
 @check("sparse_multipod_grid")

@@ -155,11 +155,22 @@ def test_blockcoo_rejects_bad_grid():
         blocksparse.blockify(Ad, 3, 2)       # 40 % 3 != 0
 
 
-def test_erdos_renyi_bcoo_matches_dense_variant():
-    Ad = erdos_renyi_matrix(KEY, 64, 48, 0.1)
-    As = erdos_renyi_bcoo(KEY, 64, 48, 0.1)
-    np.testing.assert_allclose(np.asarray(As.todense()), np.asarray(Ad),
-                               atol=0)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_erdos_renyi_bcoo_matches_dense_variant(dt):
+    """Shared-sampler round trip: the same key must yield the same matrix
+    in dense, BCOO, and BlockCOO form, bit for bit."""
+    Ad = erdos_renyi_matrix(KEY, 64, 48, 0.1, dtype=dt)
+    As = erdos_renyi_bcoo(KEY, 64, 48, 0.1, dtype=dt)
+    np.testing.assert_array_equal(np.asarray(As.todense(), np.float32),
+                                  np.asarray(Ad, np.float32))
+    ref = jsparse.BCOO.fromdense(Ad)
+    np.testing.assert_array_equal(np.asarray(As.indices),
+                                  np.asarray(ref.indices))
+    np.testing.assert_array_equal(np.asarray(As.data, np.float32),
+                                  np.asarray(ref.data, np.float32))
+    blk = blocksparse.blockify(As, 2, 2)
+    np.testing.assert_array_equal(blk.todense().astype(np.float32),
+                                  np.asarray(Ad, np.float32))
 
 
 # ------------------------------------------------------------- cost model
@@ -184,6 +195,106 @@ def test_solver_predict_cost():
     assert c.flops > 0 and c.words == 0
 
 
+# ------------------------------------------- schedule × backend matrix
+
+SCHEDULE_KWARGS = {
+    "serial": {},
+    "faun": {},          # 1×1 grid on the single smoke-tier device
+    "naive": {},
+    "gspmd": {},
+}
+
+
+@pytest.mark.parametrize("schedule", sorted(SCHEDULE_KWARGS))
+@pytest.mark.parametrize("backend", ["dense", "pallas", "sparse"])
+def test_schedule_backend_matrix_matches_serial_dense(schedule, backend):
+    """Every (schedule, backend) cell must run through NMFSolver.fit and
+    agree with the serial dense oracle on the same input (single device;
+    the multi-device grid parity runs in engine_distributed_checks.py)."""
+    Ad = erdos_renyi_matrix(KEY, 48, 36, 0.3)
+    ref = NMFSolver(5, algo="mu", max_iters=6).fit(Ad, key=KEY)
+    res = NMFSolver(5, algo="mu", schedule=schedule, backend=backend,
+                    max_iters=6, **SCHEDULE_KWARGS[schedule]).fit(Ad, key=KEY)
+    assert res.extras["schedule"] == schedule
+    assert res.extras["backend"] == backend
+    np.testing.assert_allclose(np.asarray(res.W), np.asarray(ref.W),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(res.rel_errors),
+                               np.asarray(ref.rel_errors), atol=1e-5)
+
+
+def test_numpy_input_fit():
+    """Legacy wrappers and both dense/sparse backends accept host numpy
+    arrays (infer_backend classifies ndarray as dense)."""
+    An = np.asarray(erdos_renyi_matrix(KEY, 32, 24, 0.3))
+    ref = NMFSolver(4, algo="mu", max_iters=4).fit(jnp.asarray(An), key=KEY)
+    res = aunmf.fit(An, 4, algo="mu", iters=4, key=KEY)
+    assert res.extras["backend"] == "dense"
+    np.testing.assert_array_equal(np.asarray(res.W), np.asarray(ref.W))
+    sp = NMFSolver(4, algo="mu", backend="sparse", max_iters=4).fit(An,
+                                                                    key=KEY)
+    np.testing.assert_allclose(np.asarray(sp.W), np.asarray(ref.W),
+                               atol=2e-4)
+
+
+@pytest.mark.parametrize("backend", ["dense", "pallas", "sparse"])
+def test_low_precision_input_fit(backend):
+    """bf16 data matrices fit on every backend: local products accumulate
+    fp32, the loop restores the bf16 factor carry."""
+    Ab = lowrank_matrix(KEY, 64, 48, 4, noise=0.01).astype(jnp.bfloat16)
+    res = NMFSolver(4, algo="mu", backend=backend, max_iters=4).fit(Ab,
+                                                                    key=KEY)
+    assert res.W.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(res.rel_errors, np.float32)).all()
+
+
+# ------------------------------------------------------ LocalOps registry
+
+def test_backend_registry_accepts_instance_and_class():
+    from repro.backends import DenseOps
+
+    res_name = NMFSolver(4, algo="mu", backend="dense", max_iters=4) \
+        .fit(A, key=KEY)
+    for spec in (DenseOps(), DenseOps):      # instance and class
+        res = NMFSolver(4, algo="mu", backend=spec, max_iters=4) \
+            .fit(A, key=KEY)
+        assert res.extras["backend"] == "dense"
+        np.testing.assert_array_equal(np.asarray(res.W),
+                                      np.asarray(res_name.W))
+
+
+def test_custom_backend_registration():
+    from repro import backends
+
+    calls = []
+
+    class TracingOps(backends.DenseOps):
+        name = "tracing"
+
+        def mm(self, A_, B):
+            calls.append("mm")
+            return super().mm(A_, B)
+
+    backends.register_backend("tracing", TracingOps, overwrite=True)
+    try:
+        assert "tracing" in backends.available_backends()
+        res = NMFSolver(4, algo="mu", backend="tracing", max_iters=3) \
+            .fit(A, key=KEY)
+        assert res.extras["backend"] == "tracing"
+        assert calls  # the schedule consumed the custom LocalOps
+        ref = NMFSolver(4, algo="mu", max_iters=3).fit(A, key=KEY)
+        np.testing.assert_array_equal(np.asarray(res.W), np.asarray(ref.W))
+    finally:
+        from repro.backends import base
+        base._REGISTRY.pop("tracing", None)
+
+
+def test_register_backend_rejects_duplicates():
+    from repro import backends
+    with pytest.raises(ValueError):
+        backends.register_backend("dense", backends.DenseOps)
+
+
 # ----------------------------------------------------------- validation
 
 def test_bad_schedule_and_backend_rejected():
@@ -191,15 +302,23 @@ def test_bad_schedule_and_backend_rejected():
         NMFSolver(4, schedule="mpi")
     with pytest.raises(ValueError):
         NMFSolver(4, backend="cusparse")
-    with pytest.raises(ValueError):
-        NMFSolver(4, schedule="naive", backend="sparse")
-    with pytest.raises(ValueError):
-        NMFSolver(4, schedule="gspmd", backend="pallas")
+    with pytest.raises(ValueError):           # sparse SpMM is fp32-only
+        NMFSolver(4, backend="sparse", panel_dtype=jnp.bfloat16)
+    with pytest.raises(ValueError):           # dense backends need dense A
+        As = jsparse.BCOO.fromdense(erdos_renyi_matrix(KEY, 16, 12, 0.3))
+        NMFSolver(4, algo="mu", max_iters=2).fit(As, key=KEY)
 
 
 def test_serial_lower_step_smoke():
     low = NMFSolver(4, algo="mu").lower_step(32, 24)
     assert "dot" in low.as_text()
+
+
+def test_serial_sparse_lower_step():
+    """The 1×1-grid BlockCOO representation makes serial sparse AOT-lowerable
+    (the BCOO path could not carry abstract shapes)."""
+    low = NMFSolver(4, algo="mu", backend="sparse").lower_step(32, 24, nnz=40)
+    assert "scatter" in low.as_text()
 
 
 # ------------------------------------------------- multi-device (slow tier)
