@@ -8,9 +8,9 @@ Prints ``name,us_per_call,derived`` CSV lines.
 import sys
 import time
 
-from benchmarks import (bench_cost_table, bench_datasets, bench_error_curves,
-                        bench_grid_sweep, bench_k_sweep, bench_strong_scaling,
-                        bench_time_to_tol)
+from benchmarks import (bench_autotune, bench_cost_table, bench_datasets,
+                        bench_error_curves, bench_grid_sweep, bench_k_sweep,
+                        bench_strong_scaling, bench_time_to_tol)
 
 BENCHES = {
     "fig4_error_curves": bench_error_curves.main,
@@ -20,6 +20,7 @@ BENCHES = {
     "table1_datasets": bench_datasets.main,
     "table3_cost": bench_cost_table.main,
     "ttol_time_to_tol": bench_time_to_tol.main,
+    "tune_autotune": bench_autotune.main,
 }
 
 

@@ -152,6 +152,14 @@ class LocalOps:
         """Words needed to store A in this backend's representation."""
         return m * n
 
+    def mm_traffic_words(self, m: float, n: float, k: float,
+                         nnz: float = 0.0) -> float:
+        """Memory (HBM) words moved by the two data-matrix products per
+        iteration — the locality term ``costmodel`` reports alongside
+        flops.  Dense default: stream A once plus read/write the k-width
+        panels, per product."""
+        return 2.0 * (m * n + n * k + m * k)
+
     def cache_key(self):
         """Hashable identity for the engine's compiled-run cache; stateful
         custom backends should extend this with their configuration.  Keyed

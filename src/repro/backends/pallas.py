@@ -4,6 +4,11 @@ Streams A through VMEM once per product (kernels/ts_matmul.py) and keeps the
 k×k Gram accumulator VMEM-resident (kernels/gram.py).  The kernels accept
 bf16 inputs and accumulate fp32, so low-precision factor panels work; on CPU
 the ops.py wrappers fall back to interpret mode automatically.
+
+``PallasOps(autotune=True)`` swaps the wrappers' hand block-size heuristics
+for the measured search in kernels/autotune.py (cached per shape/dtype/jax
+backend in the autotune JSON cache; the heuristic is always a candidate, so
+tuning never loses to it).
 """
 
 from __future__ import annotations
@@ -15,14 +20,20 @@ class PallasOps(LocalOps):
     name = "pallas"
     partitionable = False    # pallas_call is opaque to the auto-partitioner
 
+    def __init__(self, autotune: bool = False):
+        self.autotune = autotune
+
+    def cache_key(self):
+        return super().cache_key() + (self.autotune,)
+
     def mm(self, A, B):
         from repro.kernels import ops as kops
-        return kops.ts_matmul(A, B)
+        return kops.ts_matmul(A, B, autotune=self.autotune)
 
     def mm_t(self, A, B):
         from repro.kernels import ops as kops
-        return kops.ts_matmul_t(A, B)
+        return kops.ts_matmul_t(A, B, autotune=self.autotune)
 
     def gram(self, X):
         from repro.kernels import ops as kops
-        return kops.gram(X)
+        return kops.gram(X, autotune=self.autotune)

@@ -6,11 +6,23 @@ serial execution, the processor grid for distributed schedules), so the same
 block's triplets; in a global-view (gspmd) program they see the whole matrix
 as one nnz-sharded block and XLA's partitioner keeps the triplets local.
 
-Two SpMM lowerings, selected by ``spmm_impl``:
+Three SpMM lowerings, selected by ``spmm_impl``:
 
     "scatter"  jnp scatter-add (XLA scatter) — the CPU/GPU path
-    "pallas"   kernels/spmm.py, the MXU-tiled TPU kernel
-    "auto"     pallas on TPU, scatter elsewhere (default)
+    "pallas"   kernels/spmm.spmm — the unsorted triplet-streaming TPU
+               kernel; no preprocessing, but the whole (m_blk, k) output
+               tile stays VMEM-resident
+    "sorted"   kernels/spmm.spmm_sorted — the row-sorted scalar-prefetch
+               TPU kernel; ``prepare``/``blockify`` call
+               ``BlockCOO.sort_rows()`` so the triplets carry per-row
+               segment offsets, and output rows stream through a small
+               accumulator tile instead of pinning m_blk × k in VMEM
+    "auto"     (default) on TPU, "sorted" when the BlockCOO already
+               carries sort_rows metadata and "pallas" otherwise; off TPU,
+               always "scatter".  Note "auto" never sorts on its own —
+               pass spmm_impl="sorted" to opt into the sort-time
+               preprocessing (and ``autotune=True`` for measured block
+               sizes on either Pallas impl).
 
 Factor panels stay dense, so ``gram`` is inherited dense fp32.
 """
@@ -23,6 +35,8 @@ import jax.numpy as jnp
 from repro.backends.base import LocalOps
 from repro.core import blocksparse
 
+_IMPLS = ("auto", "scatter", "pallas", "sorted")
+
 
 def _is_bcoo(A) -> bool:
     return type(A).__name__ == "BCOO"
@@ -33,14 +47,18 @@ class SparseOps(LocalOps):
     supports_panel_dtype = False     # scatter-add SpMM accumulates fp32 only
     block_leaf_ndim = 3              # BlockCOO leaves are (gr, gc, nnz)
 
-    def __init__(self, spmm_impl: str = "auto"):
-        if spmm_impl not in ("auto", "scatter", "pallas"):
-            raise ValueError(f"spmm_impl must be auto|scatter|pallas, "
+    def __init__(self, spmm_impl: str = "auto", autotune: bool = False,
+                 align: int = blocksparse.DEFAULT_ALIGN):
+        if spmm_impl not in _IMPLS:
+            raise ValueError(f"spmm_impl must be one of {_IMPLS}, "
                              f"got {spmm_impl!r}")
         self.spmm_impl = spmm_impl
+        self.autotune = autotune
+        self.align = align
 
     def cache_key(self):
-        return super().cache_key() + (self.spmm_impl,)
+        return super().cache_key() + (self.spmm_impl, self.autotune,
+                                      self.align)
 
     def global_view_ops(self) -> "SparseOps":
         """Under the gspmd auto-partitioner only the XLA scatter-add is
@@ -50,16 +68,28 @@ class SparseOps(LocalOps):
             return self
         return SparseOps(spmm_impl="scatter")
 
-    def _impl(self) -> str:
-        if self.spmm_impl == "auto":
-            return "pallas" if jax.default_backend() == "tpu" else "scatter"
-        return self.spmm_impl
+    def _impl(self, A=None) -> str:
+        if self.spmm_impl != "auto":
+            return self.spmm_impl
+        if jax.default_backend() == "tpu":
+            if isinstance(A, blocksparse.BlockCOO) and A.is_sorted:
+                return "sorted"
+            return "pallas"
+        return "scatter"
+
+    def _sort(self, blk: blocksparse.BlockCOO) -> blocksparse.BlockCOO:
+        if self.spmm_impl != "sorted":
+            return blk
+        if blk.is_sorted and blk.align == self.align:
+            return blk
+        return blk.sort_rows(align=self.align)
 
     # -- products -----------------------------------------------------------
 
     def mm(self, A, B):
         if isinstance(A, blocksparse.BlockCOO):
-            return blocksparse.local_spmm(A, B, impl=self._impl())
+            return blocksparse.local_spmm(A, B, impl=self._impl(A),
+                                          autotune=self.autotune)
         if _is_bcoo(A):
             return A @ B
         raise ValueError(f"sparse mm needs BlockCOO/BCOO, got "
@@ -67,7 +97,8 @@ class SparseOps(LocalOps):
 
     def mm_t(self, A, B):
         if isinstance(A, blocksparse.BlockCOO):
-            return blocksparse.local_spmm_t(A, B, impl=self._impl())
+            return blocksparse.local_spmm_t(A, B, impl=self._impl(A),
+                                            autotune=self.autotune)
         if _is_bcoo(A):
             return A.T @ B
         raise ValueError(f"sparse mm_t needs BlockCOO/BCOO, got "
@@ -77,11 +108,13 @@ class SparseOps(LocalOps):
 
     def prepare(self, A):
         """Serial canonical form: the whole matrix as one 1×1 block, so the
-        serial path shares the distributed SpMM code and AOT-lowers."""
-        return blocksparse.blockify(A, 1, 1)
+        serial path shares the distributed SpMM code and AOT-lowers.  With
+        spmm_impl="sorted" the block is row-sorted here, at prepare time —
+        never inside jit."""
+        return self._sort(blocksparse.blockify(A, 1, 1))
 
     def blockify(self, A, gr: int, gc: int):
-        return blocksparse.blockify(A, gr, gc)
+        return self._sort(blocksparse.blockify(A, gr, gc))
 
     def pre_blockify(self, A):
         """Run the expensive dense→COO conversion once; blockify then packs
@@ -117,11 +150,32 @@ class SparseOps(LocalOps):
                    gr: int, gc: int):
         nnz = int(nnz) if nnz else max(m * n // 100, 1)
         nnz_max = max(-(-nnz // (gr * gc)), 1)
+        sds = jax.ShapeDtypeStruct
+        extra = {}
+        if self.spmm_impl == "sorted":
+            # Self-consistent stand-in for the sorted layout (the true
+            # packed length is data-dependent): U units of `align` slots.
+            mb, nb = m // gr, n // gc
+            a = self.align
+            U = max(-(-nnz_max // a), 1)
+            L = U * a
+            extra = dict(
+                row_offsets=sds((gr, gc, mb + 1), jnp.int32),
+                row_tiles=sds((gr, gc, U), jnp.int32),
+                row_valid=sds((gr, gc, U), jnp.int32),
+                t_vals=sds((gr, gc, L), dtype),
+                t_rows=sds((gr, gc, L), jnp.int32),
+                t_cols=sds((gr, gc, L), jnp.int32),
+                col_offsets=sds((gr, gc, nb + 1), jnp.int32),
+                col_tiles=sds((gr, gc, U), jnp.int32),
+                col_valid=sds((gr, gc, U), jnp.int32),
+                align=a)
+            nnz_max = L
         return blocksparse.BlockCOO(
-            vals=jax.ShapeDtypeStruct((gr, gc, nnz_max), dtype),
-            rows=jax.ShapeDtypeStruct((gr, gc, nnz_max), jnp.int32),
-            cols=jax.ShapeDtypeStruct((gr, gc, nnz_max), jnp.int32),
-            shape=(m, n), block_shape=(m // gr, n // gc), nnz=nnz)
+            vals=sds((gr, gc, nnz_max), dtype),
+            rows=sds((gr, gc, nnz_max), jnp.int32),
+            cols=sds((gr, gc, nnz_max), jnp.int32),
+            shape=(m, n), block_shape=(m // gr, n // gc), nnz=nnz, **extra)
 
     def spec_A(self, grid):
         return grid.spec_A_sparse()
@@ -138,5 +192,24 @@ class SparseOps(LocalOps):
         return 4.0 * nnz * k
 
     def storage_words(self, m: float, n: float, nnz: float = 0.0) -> float:
-        """COO triplets: value + row + col per nonzero."""
-        return 3.0 * nnz
+        """COO triplets: value + row + col per nonzero.  The sorted layout
+        stores the triplets twice (row- and column-sorted copies) plus the
+        per-row/-col segment offsets."""
+        coo = 3.0 * nnz
+        if self.spmm_impl == "sorted":
+            return 2.0 * coo + (m + 1) + (n + 1)
+        return coo
+
+    def mm_traffic_words(self, m: float, n: float, k: float,
+                         nnz: float = 0.0) -> float:
+        """HBM words moved by the two A-products per iteration.  The
+        unsorted scatter path re-reads AND re-writes an output row per
+        nonzero (read-modify-write, 2k words); the sorted path streams each
+        output tile exactly once, so the quadratic-in-nnz output term
+        collapses to one m·k (resp. n·k) pass — the memory-traffic
+        difference that motivates sort_rows."""
+        triplets = 3.0 * nnz
+        if self.spmm_impl == "sorted":
+            #   per product: triplets + one B row per nnz + output streamed
+            return 2.0 * triplets + 2.0 * nnz * k + (m + n) * k
+        return 2.0 * triplets + 2.0 * nnz * k + 4.0 * nnz * k

@@ -16,8 +16,29 @@ implementation, so every schedule in core/engine.py (serial, faun, naive,
 gspmd) runs unchanged on top of them: the serial path uses a 1×1 grid, faun
 the pr×pc grid, naive a row-blocked (p, 1) plus a column-blocked (1, p)
 copy, and gspmd one nnz-sharded 1×1 block under the auto-partitioner.  On
-TPU the scatter-add lowers to the Pallas kernel (kernels/spmm.py) via
-``impl="pallas"``.
+TPU the scatter-add lowers to a Pallas kernel (kernels/spmm.py) via
+``impl="pallas"`` (unsorted triplet streaming) or ``impl="sorted"`` (the
+locality-optimized variant — requires ``BlockCOO.sort_rows()`` metadata,
+see below).
+
+Row sorting (``sort_rows``) reorders each block's triplets by row at
+blockify time and records three per-block index arrays per orientation:
+
+  * ``row_offsets`` (mb+1,)  CSR-style prefix counts — offsets of each
+    row's triplet segment in the *unpadded* sorted order;
+  * ``row_tiles``   (U,)     the 8-row output tile each ``align``-sized
+    packed unit of triplets belongs to;
+  * ``row_valid``   (U,)     how many triplets of each unit are real
+    (the rest are zero-padding no-ops).
+
+plus a transposed copy (``t_vals``/``t_rows``/``t_cols`` with
+``col_offsets``/``col_tiles``/``col_valid``) holding the same nonzeros
+sorted by column, so Aᵀ·B runs through the *same* sorted kernel with the
+(rows ↔ cols) swap trick and Aᵀ is never materialised.  The packed layout
+pads each 8-row tile's segment to a multiple of ``align`` so a kernel nnz
+chunk never spans two output tiles — that is what lets kernels/spmm.py
+stream output rows through a small accumulator tile with scalar prefetch
+instead of pinning the whole (m_blk, k) output in VMEM.
 """
 
 from __future__ import annotations
@@ -30,6 +51,23 @@ import jax.numpy as jnp
 import numpy as np
 
 
+#: Default packed-segment alignment for ``sort_rows`` (triplets per unit).
+#: The sorted kernel's nnz chunk size must divide it; 64 keeps the
+#: interpret-mode loops small while still giving the autotuner headroom
+#: (on real TPUs pass a larger align, e.g. 512, at sort time).
+DEFAULT_ALIGN = 64
+
+#: Output-row granularity of the sorted layout: segments are tile-aligned
+#: per ROW_TILE rows so any accumulator height that is a multiple of it
+#: (the fp32 sublane count) keeps chunks inside one output tile.
+ROW_TILE = 8
+
+# Sorted-orientation array-field names (children of the pytree, all rank 3).
+_SORT_FIELDS = ("row_offsets", "row_tiles", "row_valid",
+                "t_vals", "t_rows", "t_cols",
+                "col_offsets", "col_tiles", "col_valid")
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class BlockCOO:
@@ -38,6 +76,12 @@ class BlockCOO:
     vals/rows/cols are (gr, gc, nnz_max); rows/cols are int32 indices
     *within* the block.  ``shape`` is the global (m, n); ``block_shape`` is
     (m/gr, n/gc); ``nnz`` the true (pre-padding) nonzero count.
+
+    After ``sort_rows()`` the triplets are row-sorted in the tile-aligned
+    packed layout and the nine optional metadata leaves (see the module
+    docstring) are populated; ``align`` records the packing alignment
+    (0 ⇒ unsorted).  All leaves keep the leading (gr, gc) grid dims so one
+    PartitionSpec shards the whole pytree.
     """
 
     vals: Any
@@ -46,6 +90,18 @@ class BlockCOO:
     shape: tuple[int, int]
     block_shape: tuple[int, int]
     nnz: int
+    # -- sort_rows metadata (None until sorted; all (gr, gc, X) int32
+    #    except t_vals which matches vals' dtype) --
+    row_offsets: Any = None
+    row_tiles: Any = None
+    row_valid: Any = None
+    t_vals: Any = None
+    t_rows: Any = None
+    t_cols: Any = None
+    col_offsets: Any = None
+    col_tiles: Any = None
+    col_valid: Any = None
+    align: int = 0
 
     @property
     def dtype(self):
@@ -56,15 +112,35 @@ class BlockCOO:
         return (self.shape[0] // self.block_shape[0],
                 self.shape[1] // self.block_shape[1])
 
+    @property
+    def has_sorted_rows(self) -> bool:
+        return self.row_offsets is not None
+
+    @property
+    def has_sorted_cols(self) -> bool:
+        return self.col_offsets is not None
+
+    @property
+    def is_sorted(self) -> bool:
+        """Full (both-orientation) sort metadata — what mm AND mm_t need."""
+        return self.has_sorted_rows and self.has_sorted_cols
+
     def tree_flatten(self):
-        return ((self.vals, self.rows, self.cols),
-                (self.shape, self.block_shape, self.nnz))
+        return ((self.vals, self.rows, self.cols)
+                + tuple(getattr(self, f) for f in _SORT_FIELDS),
+                (self.shape, self.block_shape, self.nnz, self.align))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        vals, rows, cols = children
-        shape, block_shape, nnz = aux
-        return cls(vals, rows, cols, shape, block_shape, nnz)
+        shape, block_shape, nnz, align = aux
+        return cls(*children[:3], shape, block_shape, nnz,
+                   *children[3:], align=align)
+
+    def sort_rows(self, *, align: int = DEFAULT_ALIGN,
+                  orient: str = "both") -> "BlockCOO":
+        """Row-sorted copy with scalar-prefetch metadata (host-side; see
+        module-level ``sort_rows``).  Bit-for-bit the same matrix."""
+        return sort_rows(self, align=align, orient=orient)
 
     def todense(self) -> np.ndarray:
         """Host-side densification (tests / small problems only)."""
@@ -159,16 +235,139 @@ def sq_norm(A: BlockCOO) -> jax.Array:
 
 def pad_nnz(blk: BlockCOO, multiple: int) -> BlockCOO:
     """Pad each block's triplet dim to a multiple (zero no-op entries), so
-    the nnz dimension can be sharded evenly — the gspmd sparse layout."""
+    the nnz dimension can be sharded evenly — the gspmd sparse layout.
+    Drops any ``sort_rows`` metadata: tail padding breaks the tile-aligned
+    packed layout (gspmd forces the scatter impl anyway)."""
     nnz_max = blk.vals.shape[-1]
     pad = (-nnz_max) % multiple
-    if pad == 0:
+    if pad == 0 and not blk.align:
         return blk
     widths = ((0, 0), (0, 0), (0, pad))
     return BlockCOO(vals=jnp.pad(blk.vals, widths),
                     rows=jnp.pad(blk.rows, widths),
                     cols=jnp.pad(blk.cols, widths),
                     shape=blk.shape, block_shape=blk.block_shape, nnz=blk.nnz)
+
+
+# ---------------------------------------------------------------------------
+# Row sorting — the locality-optimized layout for kernels/spmm.spmm_sorted.
+# ---------------------------------------------------------------------------
+
+def _sorted_layout(vals, rows, cols, dim: int, align: int):
+    """Sort ONE block's triplets by ``rows`` and pack them per 8-row output
+    tile, each tile's segment zero-padded to a multiple of ``align``.
+
+    Returns numpy arrays (pv, pr, pc, offsets, tiles, valid): the packed
+    triplets (length U·align), CSR prefix offsets over the *unpadded*
+    sorted order (dim+1,), and per-unit tile ids / valid counts (U,).
+    Padding entries are (row = tile's first row, col = 0, val = 0) — no-ops
+    for both the sorted kernel (skipped via ``valid``) and scatter-add.
+    """
+    order = np.argsort(rows, kind="stable")
+    sv, sr, sc = vals[order], rows[order], cols[order]
+    offs = np.searchsorted(sr, np.arange(dim + 1)).astype(np.int32)
+    ntiles = -(-dim // ROW_TILE)
+    bounds = np.minimum(np.arange(ntiles + 1) * ROW_TILE, dim)
+    t_start, t_end = offs[bounds[:-1]], offs[bounds[1:]]
+    units = -(-(t_end - t_start) // align)          # 0 ⇒ empty tile, skipped
+    U = int(units.sum())
+    pv = np.zeros(U * align, dtype=vals.dtype)
+    pr = np.zeros(U * align, dtype=np.int32)
+    pc = np.zeros(U * align, dtype=np.int32)
+    tiles = np.zeros(U, dtype=np.int32)
+    valid = np.zeros(U, dtype=np.int32)
+    u = pos = 0
+    for t in np.flatnonzero(units):
+        s, e = int(t_start[t]), int(t_end[t])
+        ln, nu = e - s, int(units[t])
+        pv[pos:pos + ln] = sv[s:e]
+        pr[pos:pos + ln] = sr[s:e]
+        pc[pos:pos + ln] = sc[s:e]
+        pr[pos + ln:pos + nu * align] = t * ROW_TILE
+        tiles[u:u + nu] = t
+        valid[u:u + nu] = np.minimum(
+            np.maximum(ln - np.arange(nu) * align, 0), align)
+        u += nu
+        pos += nu * align
+    return pv, pr, pc, offs, tiles, valid
+
+
+def _stack_padded(blocks, gr: int, gc: int, pad_tiles):
+    """Stack per-block 1-D arrays into (gr, gc, X), zero-padding each to the
+    longest.  ``pad_tiles`` gives, per block, the tile id tail padding should
+    carry (the last real unit's tile — keeps the grid on one output block)."""
+    out = []
+    for arrs, fill_from_tiles in blocks:
+        L = max(a.shape[0] for a in arrs)
+        padded = []
+        for idx, a in enumerate(arrs):
+            pad = L - a.shape[0]
+            if pad and fill_from_tiles:
+                a = np.concatenate(
+                    [a, np.full(pad, pad_tiles[idx], dtype=a.dtype)])
+            elif pad:
+                a = np.concatenate([a, np.zeros(pad, dtype=a.dtype)])
+            padded.append(a)
+        out.append(jnp.asarray(
+            np.stack(padded).reshape(gr, gc, L)))
+    return out
+
+
+def sort_rows(blk: BlockCOO, *, align: int = DEFAULT_ALIGN,
+              orient: str = "both") -> BlockCOO:
+    """Row-sorted copy of ``blk`` carrying per-row segment offsets — the
+    layout ``kernels/spmm.spmm_sorted`` streams with scalar prefetch.
+
+    Host-side (numpy), like ``blockify`` — call it at blockify time on
+    concrete arrays, never inside jit.  The result is the same matrix
+    bit-for-bit (stable sort; zero-padding adds are no-ops), still valid
+    for the scatter and triplet-streaming impls, plus:
+
+      * vals/rows/cols re-packed row-sorted and tile-aligned (see
+        ``_sorted_layout``) with ``row_offsets``/``row_tiles``/``row_valid``;
+      * a column-sorted *transposed* copy (``t_vals``/``t_rows``/``t_cols``
+        hold Aᵀ's triplets with ``col_offsets``/``col_tiles``/``col_valid``)
+        so ``local_spmm_t`` uses the identical kernel — the (rows ↔ cols)
+        swap trick at the storage level.
+
+    ``orient`` limits the work to one orientation when the caller knows
+    only one product runs on this copy: "rows" (mm only) skips the
+    transposed arrays, "cols" (mm_t only) skips the row re-pack — e.g. the
+    naive schedule's row-blocked copy only ever sees mm.  Default "both".
+    """
+    if align <= 0 or align % ROW_TILE:
+        raise ValueError(f"align must be a positive multiple of {ROW_TILE}, "
+                         f"got {align}")
+    if orient not in ("both", "rows", "cols"):
+        raise ValueError(f"orient must be both|rows|cols, got {orient!r}")
+    gr, gc = blk.grid
+    mb, nb = blk.block_shape
+    V = np.asarray(blk.vals).reshape(gr * gc, -1)
+    R = np.asarray(blk.rows).reshape(gr * gc, -1)
+    C = np.asarray(blk.cols).reshape(gr * gc, -1)
+    last_tile = lambda lay: [int(x[4][-1]) if x[4].size else 0 for x in lay]
+    kw: dict = {}
+    if orient != "cols":
+        row = [_sorted_layout(V[b], R[b], C[b], mb, align)
+               for b in range(gr * gc)]
+        (pv, pr, pc, r_tiles, r_valid) = _stack_padded(
+            [([x[0] for x in row], False), ([x[1] for x in row], False),
+             ([x[2] for x in row], False), ([x[4] for x in row], True),
+             ([x[5] for x in row], False)], gr, gc, last_tile(row))
+        kw.update(vals=pv, rows=pr, cols=pc, row_tiles=r_tiles,
+                  row_valid=r_valid, row_offsets=jnp.asarray(
+                      np.stack([x[3] for x in row]).reshape(gr, gc, -1)))
+    if orient != "rows":
+        col = [_sorted_layout(V[b], C[b], R[b], nb, align)   # Aᵀ: cols drive
+               for b in range(gr * gc)]
+        (tv, tr, tc, c_tiles, c_valid) = _stack_padded(
+            [([x[0] for x in col], False), ([x[1] for x in col], False),
+             ([x[2] for x in col], False), ([x[4] for x in col], True),
+             ([x[5] for x in col], False)], gr, gc, last_tile(col))
+        kw.update(t_vals=tv, t_rows=tr, t_cols=tc, col_tiles=c_tiles,
+                  col_valid=c_valid, col_offsets=jnp.asarray(
+                      np.stack([x[3] for x in col]).reshape(gr, gc, -1)))
+    return dataclasses.replace(blk, align=align, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -182,29 +381,69 @@ def _local_triplets(blk: BlockCOO):
     return (blk.vals.reshape(-1), blk.rows.reshape(-1), blk.cols.reshape(-1))
 
 
-def local_spmm(blk: BlockCOO, B: jax.Array, *,
-               impl: str = "scatter") -> jax.Array:
+def _require_sorted(blk: BlockCOO, orientation: bool, leaf) -> None:
+    if not orientation:
+        raise ValueError(
+            "impl='sorted' needs the sorted layout for this orientation — "
+            "call BlockCOO.sort_rows() at blockify time (SparseOps"
+            "(spmm_impl='sorted') does this for you; orient='rows' covers "
+            "mm only, 'cols' mm_t only); sorting is host-side and cannot "
+            "run inside jit")
+    # Check the LEAF dims, not the shape-derived grid: inside shard_map the
+    # leaves are sliced to (1, 1, ·) while the static `shape` aux stays
+    # global, so blk.grid still reports the full mesh there.
+    if leaf.shape[:2] != (1, 1):
+        raise ValueError(
+            f"local_spmm(impl='sorted') operates on ONE local block; got "
+            f"leaves blocked {leaf.shape[0]}×{leaf.shape[1]} — slice out "
+            f"the device's block first (shard_map leaves are (1, 1, ...))")
+
+
+def local_spmm(blk: BlockCOO, B: jax.Array, *, impl: str = "scatter",
+               autotune: bool = False) -> jax.Array:
     """A_blk @ B: (m_blk, n_blk) sparse × (n_blk, k) -> (m_blk, k) fp32.
 
-    impl="scatter" is the XLA scatter-add (CPU/GPU); impl="pallas" lowers to
-    the MXU-tiled kernel in kernels/spmm.py (interpret mode off-TPU).
+    impl="scatter" is the XLA scatter-add (CPU/GPU); impl="pallas" lowers
+    to the unsorted triplet-streaming kernel in kernels/spmm.py and
+    impl="sorted" to its row-sorted scalar-prefetch variant (both interpret
+    mode off-TPU; "sorted" requires ``sort_rows`` metadata).  ``autotune``
+    turns on measured block sizes for the two Pallas impls.
     """
+    if impl == "sorted":
+        _require_sorted(blk, blk.has_sorted_rows, blk.vals)
+        from repro.kernels import ops as kops
+        return kops.spmm_sorted(
+            blk.vals.reshape(-1), blk.rows.reshape(-1),
+            blk.cols.reshape(-1), blk.row_offsets.reshape(-1),
+            blk.row_tiles.reshape(-1), blk.row_valid.reshape(-1), B,
+            blk.block_shape[0], align=blk.align, autotune=autotune)
     v, r, c = _local_triplets(blk)
     if impl == "pallas":
         from repro.kernels import ops as kops
-        return kops.spmm(v, r, c, B, blk.block_shape[0])
+        return kops.spmm(v, r, c, B, blk.block_shape[0], autotune=autotune)
     out = jnp.zeros((blk.block_shape[0], B.shape[-1]), jnp.float32)
     return out.at[r].add(v.astype(jnp.float32)[:, None]
                          * B[c].astype(jnp.float32))
 
 
-def local_spmm_t(blk: BlockCOO, B: jax.Array, *,
-                 impl: str = "scatter") -> jax.Array:
-    """A_blkᵀ @ B without transposing storage: scatter into columns."""
+def local_spmm_t(blk: BlockCOO, B: jax.Array, *, impl: str = "scatter",
+                 autotune: bool = False) -> jax.Array:
+    """A_blkᵀ @ B without transposing storage: scatter into columns, or —
+    for impl="sorted" — the same streaming kernel over the column-sorted
+    transposed triplet copy ``sort_rows`` stored (the rows ↔ cols swap
+    applied at the storage level)."""
+    if impl == "sorted":
+        _require_sorted(blk, blk.has_sorted_cols, blk.t_vals)
+        from repro.kernels import ops as kops
+        return kops.spmm_sorted(
+            blk.t_vals.reshape(-1), blk.t_rows.reshape(-1),
+            blk.t_cols.reshape(-1), blk.col_offsets.reshape(-1),
+            blk.col_tiles.reshape(-1), blk.col_valid.reshape(-1), B,
+            blk.block_shape[1], align=blk.align, autotune=autotune)
     v, r, c = _local_triplets(blk)
     if impl == "pallas":
         from repro.kernels import ops as kops
-        return kops.spmm_t(v, r, c, B, blk.block_shape[1])
+        return kops.spmm_t(v, r, c, B, blk.block_shape[1], autotune=autotune)
     out = jnp.zeros((blk.block_shape[1], B.shape[-1]), jnp.float32)
     return out.at[c].add(v.astype(jnp.float32)[:, None]
                          * B[r].astype(jnp.float32))

@@ -62,9 +62,15 @@ def luc_flops(algo: str, m: int, n: int, k: int, *,
 @dataclass(frozen=True)
 class IterCost:
     flops: float
-    words: float
+    words: float                  # communication (wire) words
     messages: float
-    memory_words: float
+    memory_words: float           # resident storage footprint
+    #: HBM words the local A-products move per iteration (the backend's
+    #: ``mm_traffic_words``) — the locality term the sorted SpMM layout
+    #: improves: the scatter impl re-reads and re-writes an output row per
+    #: nonzero, the sorted impl streams each output tile once.  Not part of
+    #: ``time`` (α-β-γ models wire, not HBM); reported for roofline use.
+    traffic_words: float = 0.0
 
     def time(self, mach: Machine) -> float:
         return (mach.gamma * self.flops + mach.beta * self.words
@@ -89,7 +95,8 @@ def serial_cost(m: int, n: int, k: int, *, algo: str = "bpp",
     flops = ops.mm_flops(m, n, k, nnz=nnz) + gram_flops \
         + luc_flops(algo, m, n, k, bpp_iters=bpp_iters)
     mem = ops.storage_words(m, n, nnz=nnz) + (m + n) * k
-    return IterCost(flops, 0.0, 0.0, mem)
+    return IterCost(flops, 0.0, 0.0, mem,
+                    ops.mm_traffic_words(m, n, k, nnz=nnz))
 
 
 def schedule_cost(schedule: str, m: int, n: int, k: int, *, pr: int = 1,
@@ -99,9 +106,12 @@ def schedule_cost(schedule: str, m: int, n: int, k: int, *, pr: int = 1,
     """One entry point for every engine schedule, threading nnz through.
 
     ``backend`` is a ``repro.backends`` name or LocalOps instance; its
-    ``mm_flops`` (dense 4·m·n·k vs sparse 4·nnz·k per iteration) and
-    ``storage_words`` keep the prediction honest per backend.  The legacy
-    ``dense=False`` spelling maps to the sparse backend.
+    ``mm_flops`` (dense 4·m·n·k vs sparse 4·nnz·k per iteration),
+    ``storage_words``, and ``mm_traffic_words`` (e.g. the sorted SpMM
+    layout's streamed-output traffic vs the scatter impl's per-nonzero
+    read-modify-write — ``SparseOps(spmm_impl="sorted")``) keep the
+    prediction honest per backend.  The legacy ``dense=False`` spelling
+    maps to the sparse backend.
 
     ``gspmd`` is modelled with the FAUN formulas — its *optimal* schedule —
     so the measured-HLO gap (see core/gspmd.py: 121× more wire bytes) reads
@@ -136,7 +146,8 @@ def mpifaun_cost(m: int, n: int, k: int, pr: int, pc: int, *,
     messages = 6 * math.log2(max(p, 2))
     mem = ops.storage_words(m, n, nnz=nnz) / p + (m + n) * k / p \
         + 2 * m * k / pr + 2 * n * k / pc
-    return IterCost(flops, words, messages, mem)
+    return IterCost(flops, words, messages, mem,
+                    ops.mm_traffic_words(m, n, k, nnz=nnz) / p)
 
 
 def naive_cost(m: int, n: int, k: int, p: int, *, algo: str = "bpp",
@@ -151,7 +162,8 @@ def naive_cost(m: int, n: int, k: int, p: int, *, algo: str = "bpp",
     words = (m + n) * k * (p - 1) / p     # two full-factor all-gathers
     messages = 2 * math.log2(max(p, 2))
     mem = 2.0 * ops.storage_words(m, n, nnz=nnz) / p + (m + n) * k
-    return IterCost(flops, words, messages, mem)
+    return IterCost(flops, words, messages, mem,
+                    ops.mm_traffic_words(m, n, k, nnz=nnz) / p)
 
 
 def optimal_grid(m: int, n: int, p: int) -> tuple[int, int]:

@@ -1,0 +1,176 @@
+"""Measured-search block-size autotuner for the repro.kernels wrappers.
+
+The block sizes in ops.py used to be VMEM-budget *guesses*; this module
+replaces them with *measurements*.  ``tune(op, key_parts, candidates, run)``
+times every candidate configuration on synthetic inputs of the caller's
+exact shapes/dtypes (one warm-up call, then best-of-``repeats`` wall time
+with ``jax.block_until_ready``) and returns the fastest.  Results persist in
+a JSON cache file so the search runs once per (op, shape, dtype, jax
+backend) — including across processes, which is what makes benchmark runs
+reproducible: CI uploads the cache as an artifact (see docs/benchmarks.md
+for how to read it).
+
+Cache location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/autotune.json``.  The file maps key → entry::
+
+    {"gram|(512, 128)|float32|cpu|interp": {
+        "params": [64],
+        "times_us": {"(16,)": 812.4, "(64,)": 401.2, ...},
+        "chosen_us": 401.2}}
+
+``params`` is what the wrapper uses; ``times_us`` keeps the full search so
+docs/benchmarks can show heuristic-vs-tuned deltas without re-measuring.
+
+Timing happens at *trace time* of the enclosing jit (ops.py wrappers are
+plain Python): candidate kernels run eagerly on concrete synthetic arrays,
+which is legal inside tracing and costs one search per engine compilation
+at most.  The measurement loop runs in a dedicated worker THREAD: jax
+trace contexts are thread-local, and timing eager dispatches from inside
+an active trace both inflates and destabilises the numbers enough to
+invert candidate rankings — the fresh thread measures in a clean eval
+context, identical to timing outside jit.  Because the hand heuristic is
+always injected into the candidate set, the tuned choice is never slower
+than the heuristic (modulo timer noise) — the property
+benchmarks/bench_autotune.py checks.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Callable, Iterable, Sequence
+
+import jax
+
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+_DEFAULT_PATH = "~/.cache/repro/autotune.json"
+
+# In-memory mirror of the cache file (per cache path, so tests that
+# repoint the env var don't see stale entries).
+_cache: dict[str, dict] = {}
+_cache_for: str | None = None
+
+
+def cache_path() -> Path:
+    return Path(os.environ.get(CACHE_ENV) or _DEFAULT_PATH).expanduser()
+
+
+def _load() -> dict[str, dict]:
+    global _cache, _cache_for
+    path = str(cache_path())
+    if _cache_for != path:
+        _cache_for = path
+        try:
+            with open(path) as f:
+                _cache = json.load(f)
+        except (OSError, ValueError):
+            _cache = {}
+    return _cache
+
+
+def _persist() -> None:
+    path = cache_path()
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        with open(tmp, "w") as f:
+            json.dump(_cache, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except OSError:
+        pass        # read-only FS: keep the in-memory result, stay usable
+
+
+def clear(*, memory_only: bool = True) -> None:
+    """Drop cached tunings (tests).  With ``memory_only=False`` also removes
+    the cache file."""
+    global _cache, _cache_for
+    _cache, _cache_for = {}, None
+    if not memory_only:
+        try:
+            os.remove(cache_path())
+        except OSError:
+            pass
+
+
+def make_key(op: str, key_parts: Iterable) -> str:
+    """Stable cache key: op name, the caller's shape/dtype parts, the jax
+    backend, and whether kernels run in interpret mode (timings from the
+    two regimes are not comparable)."""
+    backend = jax.default_backend()
+    mode = "compiled" if backend == "tpu" else "interp"
+    parts = "|".join(str(p) for p in key_parts)
+    return f"{op}|{parts}|{backend}|{mode}"
+
+
+def measure(run: Callable[[], jax.Array], *, repeats: int = 2) -> float:
+    """Best-of-``repeats`` wall seconds of ``run`` after one warm-up call
+    (the warm-up absorbs compilation)."""
+    jax.block_until_ready(run())
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _entry_params(entry) -> tuple | None:
+    """Params of a cache entry, or None for anything schema-invalid (the
+    file is a shared, hand-editable artifact: a truncated or mangled entry
+    must read as a miss — degrade to re-tuning, never crash the fit)."""
+    if not isinstance(entry, dict):
+        return None
+    params = entry.get("params")
+    if isinstance(params, list) and params:
+        return tuple(params)
+    return None
+
+
+def lookup(op: str, key_parts: Iterable) -> tuple | None:
+    return _entry_params(_load().get(make_key(op, key_parts)))
+
+
+def tune(op: str, key_parts: Iterable, candidates: Sequence[tuple],
+         run: Callable[[tuple], jax.Array], *, repeats: int = 3) -> tuple:
+    """The measured search.  ``candidates`` are parameter tuples (the hand
+    heuristic must be among them); ``run(params)`` executes the kernel once
+    with those parameters on synthetic inputs.  Returns the fastest tuple,
+    consulting/updating the persistent cache."""
+    key = make_key(op, key_parts)
+    cache = _load()
+    cached = _entry_params(cache.get(key))
+    if cached is not None and cached in set(candidates):
+        return cached
+
+    times: dict[str, float] = {}
+    best_box: list = [None, float("inf")]
+
+    def _search():       # worker thread: clean (non-tracing) jax context
+        for cand in candidates:
+            t = measure(lambda: run(cand), repeats=repeats)
+            times[str(tuple(cand))] = round(t * 1e6, 2)
+            if t < best_box[1]:
+                best_box[0], best_box[1] = tuple(cand), t
+
+    err: list = []
+
+    def _target():
+        try:
+            _search()
+        except BaseException as e:          # re-raised on the caller thread
+            err.append(e)
+
+    worker = threading.Thread(target=_target, name=f"repro-autotune-{op}")
+    worker.start()
+    worker.join()
+    if err:
+        raise err[0]
+    best, best_t = best_box
+    assert best is not None, "empty candidate set"
+    cache[key] = {"params": list(best), "times_us": times,
+                  "chosen_us": round(best_t * 1e6, 2)}
+    _persist()
+    return best

@@ -7,10 +7,15 @@ Responsibilities:
   * backend dispatch — compiled Pallas on TPU, interpret=True elsewhere
     (the container is CPU-only; interpret mode executes the same kernel
     body in Python for correctness validation);
-  * block-size heuristics sized for ~16 MB VMEM working sets.
+  * block-size selection — hand heuristics sized for ~16 MB VMEM working
+    sets by default, or the *measured* choice from kernels/autotune.py when
+    ``autotune=True`` (the search always includes the heuristic, so tuning
+    is never slower; results persist in the autotune JSON cache).
 
-These back ``repro.backends.PallasOps`` (ts_matmul / ts_matmul_t / gram) and
-the Pallas lowering of ``repro.backends.SparseOps`` (spmm / spmm_t); the
+These back ``repro.backends.PallasOps`` (ts_matmul / ts_matmul_t / gram;
+``PallasOps(autotune=True)`` turns the tuner on) and the Pallas lowerings of
+``repro.backends.SparseOps`` (spmm / spmm_t for the unsorted streaming
+kernel, spmm_sorted for the row-sorted scalar-prefetch kernel); the
 engine's schedules call them only through that ``LocalOps`` layer.
 """
 
@@ -18,9 +23,12 @@ from __future__ import annotations
 
 import functools
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as _at
 from repro.kernels import gram as _gram
 from repro.kernels import hals_sweep as _hals
 from repro.kernels import mu_update as _mu
@@ -54,18 +62,97 @@ def _block(size: int, target: int) -> int:
     return b
 
 
-def gram(X: jax.Array, *, block_m: int | None = None) -> jax.Array:
+def _block8(size: int, target: int) -> int:
+    """Largest divisor of `size` that is a multiple of 8 and <= target
+    (`size` must itself be a multiple of 8)."""
+    return 8 * _block(size // 8, max(target // 8, 1))
+
+
+def _candidates(size: int, default: int, interp_targets, tpu_targets,
+                interpret: bool, *, pick=_block) -> list[int]:
+    """Divisor-legal candidate block sizes for one dimension, always
+    including the hand heuristic ``default``."""
+    targets = interp_targets if interpret else tpu_targets
+    return sorted({pick(size, t) for t in targets} | {default})
+
+
+def _synth(shape, dtype, *, lo: float = 0.0, hi: float = 1.0,
+           seed: int = 0) -> jax.Array:
+    """Concrete pseudo-random array for tuning runs.  MUST be called from
+    the tuner's worker thread (inside the ``run`` callable), never on a
+    thread with an active trace — there the ``astype`` would silently
+    produce a tracer and the search would time tracing, not compute."""
+    arr = np.random.RandomState(seed).uniform(lo, hi, size=shape)
+    return jnp.asarray(arr.astype(np.float32)).astype(dtype)
+
+
+def _cached_params(op, key, *checks) -> tuple | None:
+    """Cached tuning result, validated before use: the autotune cache is a
+    shared artifact (env-pointed file, restored from CI), so a stale or
+    hand-edited entry must degrade to a re-tune, never crash the fit.
+    ``checks`` are per-position predicates; arity is implied by their
+    count."""
+    cached = _at.lookup(op, key)
+    if cached is None or len(cached) != len(checks):
+        return None
+    if all(isinstance(p, int) and p > 0 and chk(p)
+           for p, chk in zip(cached, checks)):
+        return cached
+    return None
+
+
+def _isynth(shape, n: int, *, seed: int = 0) -> jax.Array:
+    arr = np.random.RandomState(seed).randint(0, max(n, 1), size=shape)
+    return jnp.asarray(arr.astype(np.int32))
+
+
+def gram(X: jax.Array, *, block_m: int | None = None,
+         autotune: bool = False) -> jax.Array:
     """XᵀX (fp32) for arbitrary (m, k)."""
     interpret = not _on_tpu()
     m, k = X.shape
     Xp = _pad_to(_pad_to(X, 1, LANE), 0, 8)
-    bm = block_m or _block(Xp.shape[0], _MAX_INTERP_BLOCK if interpret else 512)
+    default = _block(Xp.shape[0], _MAX_INTERP_BLOCK if interpret else 512)
+    bm = block_m or default
+    if block_m is None and autotune:
+        key = (Xp.shape, Xp.dtype)
+        # hot path: validated cache hit needs no synthetic inputs
+        cached = _cached_params("gram", key, lambda b: Xp.shape[0] % b == 0)
+        if cached is not None:
+            (bm,) = cached
+        else:
+            cands = _candidates(Xp.shape[0], default, (16, 32, 64),
+                                (128, 256, 512, 1024), interpret)
+            Xs = functools.cache(lambda: _synth(Xp.shape, Xp.dtype))
+            (bm,) = _at.tune("gram", key, [(c,) for c in cands],
+                             lambda p: _gram.gram(Xs(), block_m=p[0],
+                                                  interpret=interpret))
     out = _gram.gram(Xp, block_m=bm, interpret=interpret)
     return out[:k, :k]
 
 
+def _tune_ts(fn, name, Ap, Bp, interpret, default_m, default_n):
+    key = (Ap.shape, Bp.shape, Ap.dtype)
+    # hot path: validated cache hit needs no synthetic inputs
+    cached = _cached_params(name, key, lambda b: Ap.shape[0] % b == 0,
+                            lambda b: Ap.shape[1] % b == 0)
+    if cached is not None:
+        return cached
+    cands_m = _candidates(Ap.shape[0], default_m, (16, 32, 64),
+                          (128, 256, 512), interpret)
+    cands_n = _candidates(Ap.shape[1], default_n, (16, 32, 64),
+                          (128, 256, 512), interpret)
+    syn = functools.cache(lambda: (_synth(Ap.shape, Ap.dtype),
+                                   _synth(Bp.shape, Bp.dtype, seed=1)))
+    return _at.tune(name, key,
+                    [(cm, cn) for cm in cands_m for cn in cands_n],
+                    lambda p: fn(*syn(), block_m=p[0], block_n=p[1],
+                                 interpret=interpret))
+
+
 def ts_matmul(A: jax.Array, B: jax.Array, *, block_m: int | None = None,
-              block_n: int | None = None) -> jax.Array:
+              block_n: int | None = None,
+              autotune: bool = False) -> jax.Array:
     """A @ B (fp32) for arbitrary (m, n) × (n, k)."""
     interpret = not _on_tpu()
     m, n = A.shape
@@ -77,12 +164,16 @@ def ts_matmul(A: jax.Array, B: jax.Array, *, block_m: int | None = None,
     cap = _MAX_INTERP_BLOCK if interpret else None
     bm = block_m or _block(Ap.shape[0], cap or 256)
     bn = block_n or _block(Ap.shape[1], cap or 512)
+    if block_m is None and block_n is None and autotune:
+        bm, bn = _tune_ts(_ts.ts_matmul, "ts_matmul", Ap, Bp, interpret,
+                          bm, bn)
     out = _ts.ts_matmul(Ap, Bp, block_m=bm, block_n=bn, interpret=interpret)
     return out[:m, :k]
 
 
 def ts_matmul_t(A: jax.Array, B: jax.Array, *, block_m: int | None = None,
-                block_n: int | None = None) -> jax.Array:
+                block_n: int | None = None,
+                autotune: bool = False) -> jax.Array:
     """Aᵀ @ B (fp32) for arbitrary (m, n) × (m, k)."""
     interpret = not _on_tpu()
     n = A.shape[1]
@@ -94,28 +185,122 @@ def ts_matmul_t(A: jax.Array, B: jax.Array, *, block_m: int | None = None,
     cap = _MAX_INTERP_BLOCK if interpret else None
     bm = block_m or _block(Ap.shape[0], cap or 512)
     bn = block_n or _block(Ap.shape[1], cap or 256)
+    if block_m is None and block_n is None and autotune:
+        bm, bn = _tune_ts(_ts.ts_matmul_t, "ts_matmul_t", Ap, Bp, interpret,
+                          bm, bn)
     out = _ts.ts_matmul_t(Ap, Bp, block_m=bm, block_n=bn, interpret=interpret)
     return out[:n, :k]
 
 
 def spmm(vals: jax.Array, rows: jax.Array, cols: jax.Array, B: jax.Array,
-         m_out: int, *, block_nnz: int | None = None) -> jax.Array:
-    """A_blk @ B (fp32) from flat COO triplets, for arbitrary (n, k) B."""
+         m_out: int, *, block_nnz: int | None = None,
+         autotune: bool = False) -> jax.Array:
+    """A_blk @ B (fp32) from flat COO triplets, for arbitrary (n, k) B —
+    the unsorted triplet-streaming kernel (full output VMEM-resident)."""
     interpret = not _on_tpu()
     n, k = B.shape
     Bp = _pad_to(_pad_to(B, 1, LANE), 0, 8)
     m_pad = m_out + (-m_out) % 8
-    bnz = block_nnz or (_MAX_INTERP_BLOCK if interpret else 512)
+    default = _MAX_INTERP_BLOCK if interpret else 512
+    bnz = block_nnz or default
+    if block_nnz is None and autotune and vals.shape[0]:
+        key = (vals.shape[0], m_pad, Bp.shape, vals.dtype)
+        # hot path: validated cache hit needs no synthetic inputs
+        cached = _cached_params("spmm", key, lambda b: True)
+        if cached is not None:
+            (bnz,) = cached
+        else:
+            cands = _candidates(vals.shape[0], default, (16, 32, 64),
+                                (256, 512, 1024), interpret,
+                                pick=lambda s, t: min(s + (-s) % 8, t))
+            syn = functools.cache(
+                lambda: (_synth(vals.shape, vals.dtype),
+                         _isynth(vals.shape, m_pad),
+                         _isynth(vals.shape, Bp.shape[0], seed=1),
+                         _synth(Bp.shape, Bp.dtype, seed=2)))
+            (bnz,) = _at.tune(
+                "spmm", key, [(c,) for c in cands],
+                lambda p: _spmm.spmm(*syn(), m_out=m_pad,
+                                     block_nnz=p[0], interpret=interpret))
     out = _spmm.spmm(vals, rows.astype(jnp.int32), cols.astype(jnp.int32),
                      Bp, m_out=m_pad, block_nnz=bnz, interpret=interpret)
     return out[:m_out, :k]
 
 
 def spmm_t(vals: jax.Array, rows: jax.Array, cols: jax.Array, B: jax.Array,
-           n_out: int, *, block_nnz: int | None = None) -> jax.Array:
+           n_out: int, *, block_nnz: int | None = None,
+           autotune: bool = False) -> jax.Array:
     """A_blkᵀ @ B (fp32): the same scatter-add with rows ↔ cols swapped, so
     Aᵀ is never materialised."""
-    return spmm(vals, cols, rows, B, n_out, block_nnz=block_nnz)
+    return spmm(vals, cols, rows, B, n_out, block_nnz=block_nnz,
+                autotune=autotune)
+
+
+def _synth_sorted(L, align, m_pad, Bp, dtype):
+    """Consistent synthetic sort_rows layout for tuning runs: U full units
+    with non-decreasing tile ids and rows inside each unit's tile."""
+    U = L // align
+    rng = np.random.RandomState(0)
+    tiles = np.sort(rng.randint(0, m_pad // 8, size=U)).astype(np.int32)
+    rows = (np.repeat(tiles, align) * 8
+            + rng.randint(0, 8, size=L)).astype(np.int32)
+    cols = rng.randint(0, Bp.shape[0], size=L).astype(np.int32)
+    valid = np.full(U, align, np.int32)
+    return (_synth((L,), dtype), jnp.asarray(rows), jnp.asarray(cols),
+            jnp.asarray(tiles), jnp.asarray(valid),
+            _synth(Bp.shape, Bp.dtype, seed=2))
+
+
+def spmm_sorted(vals: jax.Array, rows: jax.Array, cols: jax.Array,
+                offsets: jax.Array, tiles: jax.Array, valid: jax.Array,
+                B: jax.Array, m_out: int, *, align: int,
+                block_m: int | None = None, block_nnz: int | None = None,
+                autotune: bool = False) -> jax.Array:
+    """A_blk @ B (fp32) from the row-sorted ``sort_rows`` packed layout —
+    the scalar-prefetch kernel whose output streams tile by tile.
+
+    ``offsets`` is the (m_out+1,) per-row segment-offset array; rows that
+    own no triplets may sit in output tiles the kernel never visits, so
+    they are masked to exact zeros here.
+    """
+    interpret = not _on_tpu()
+    n, k = B.shape
+    Bp = _pad_to(_pad_to(B, 1, LANE), 0, 8)
+    m_pad = m_out + (-m_out) % 8
+    default_m = 8 if interpret else _block8(m_pad, 64)
+    default_nnz = _block(align, _MAX_INTERP_BLOCK if interpret else 512)
+    bm = block_m or default_m
+    bnz = block_nnz or default_nnz
+    if block_m is None and block_nnz is None and autotune and vals.shape[0]:
+        key = (vals.shape[0], align, m_pad, Bp.shape, vals.dtype)
+        # hot path: validated cache hit needs no synthetic inputs
+        cached = _cached_params(
+            "spmm_sorted", key,
+            lambda b: b % 8 == 0 and m_pad % b == 0,
+            lambda b: align % b == 0)
+        if cached is not None:
+            bm, bnz = cached
+        else:
+            cands_m = _candidates(m_pad, default_m, (8, 16, 32),
+                                  (64, 128, 256, 512), interpret,
+                                  pick=_block8)
+            cands_z = _candidates(align, default_nnz, (16, 32, 64),
+                                  (128, 256, 512), interpret)
+            syn = functools.cache(
+                lambda: _synth_sorted(vals.shape[0], align, m_pad,
+                                      Bp, vals.dtype))
+            bm, bnz = _at.tune(
+                "spmm_sorted", key,
+                [(cm, cz) for cm in cands_m for cz in cands_z],
+                lambda p: _spmm.spmm_sorted(*syn(), m_out=m_pad, align=align,
+                                            block_m=p[0], block_nnz=p[1],
+                                            interpret=interpret))
+    out = _spmm.spmm_sorted(vals, rows.astype(jnp.int32),
+                            cols.astype(jnp.int32), tiles, valid, Bp,
+                            m_out=m_pad, align=align, block_m=bm,
+                            block_nnz=bnz, interpret=interpret)
+    counts = offsets[1:] - offsets[:-1]
+    return jnp.where(counts[:, None] > 0, out[:m_out, :k], 0.0)
 
 
 def mu_update(X: jax.Array, G: jax.Array, R: jax.Array, *,

@@ -97,6 +97,28 @@ def _():
                                        atol=1e-4, err_msg=str((algo, kwargs)))
 
 
+@check("sorted_spmm_matches_scatter_on_multidevice_grids")
+def _():
+    # Regression: inside shard_map the BlockCOO leaves are sliced to
+    # (1, 1, ·) but the static `shape` aux stays global — the sorted impl's
+    # single-block guard must key off the leaves, or every multi-device
+    # faun/naive run with spmm_impl="sorted" dies at trace time.
+    from repro.backends import SparseOps
+    H0 = aunmf.init_h(KEY, N, K)
+    ref = NMFSolver(K, algo="mu", backend=SparseOps(spmm_impl="scatter"),
+                    max_iters=8).fit(A_SP, key=KEY, H0=H0)
+    grid = faun.make_faun_mesh(2, 2)
+    mesh = make_mesh((8,), ("p",))
+    for kwargs in [dict(schedule="faun", grid=grid),
+                   dict(schedule="naive", mesh=mesh)]:
+        res = NMFSolver(K, algo="mu", max_iters=8,
+                        backend=SparseOps(spmm_impl="sorted"),
+                        **kwargs).fit(A_SP, key=KEY, H0=H0)
+        np.testing.assert_allclose(np.asarray(ref.rel_errors),
+                                   np.asarray(res.rel_errors), atol=1e-4,
+                                   err_msg=str(kwargs))
+
+
 @check("sparse_lowering_never_gathers_A")
 def _():
     grid = faun.make_faun_mesh(2, 2)

@@ -1,12 +1,16 @@
-"""BlockCOO SpMM property tests: the scatter-add path and the Pallas kernel
-(kernels/spmm.py, interpret mode on CPU) against the dense reference, across
-grid shapes, dtypes, duplicate/padded triplets, and all-empty blocks.
+"""BlockCOO SpMM property tests: the scatter-add path, the unsorted
+Pallas triplet-streaming kernel, and the row-sorted scalar-prefetch kernel
+(kernels/spmm.py, interpret mode on CPU) against the dense reference,
+across grid shapes, dtypes, duplicate/padded triplets, ragged nnz, and
+all-empty blocks — plus the ``sort_rows`` layout invariants.
 
 The grid sweep emulates what shard_map does on a pr×pc mesh: each block's
 triplets multiply only that block's panel slice, and block-row/-column
 results accumulate — so these tests pin the per-device semantics every
 schedule builds on without needing fake devices.
 """
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -20,20 +24,30 @@ from repro.kernels import ops as kops
 
 KEY = jax.random.PRNGKey(0)
 DTYPES = [jnp.float32, jnp.bfloat16]
-IMPLS = ["scatter", "pallas"]
+IMPLS = ["scatter", "pallas", "sorted"]
+SORT_ALIGN = 16          # small align keeps interpret-mode loops cheap
 
 
 def _tol(dt):
     return 1e-5 if dt == jnp.float32 else 2e-2
 
 
+def _for_impl(blk: blocksparse.BlockCOO, impl: str) -> blocksparse.BlockCOO:
+    """The representation each impl consumes: impl="sorted" needs the
+    sort_rows metadata (SparseOps adds it at blockify time)."""
+    return blk.sort_rows(align=SORT_ALIGN) if impl == "sorted" else blk
+
+
 def _block(blk: blocksparse.BlockCOO, i: int, j: int) -> blocksparse.BlockCOO:
     """The (i, j) grid block as its own 1×1 BlockCOO (what a device holds
-    inside shard_map)."""
-    return blocksparse.BlockCOO(
-        vals=blk.vals[i:i + 1, j:j + 1], rows=blk.rows[i:i + 1, j:j + 1],
-        cols=blk.cols[i:i + 1, j:j + 1], shape=blk.block_shape,
-        block_shape=blk.block_shape, nnz=blk.nnz)
+    inside shard_map) — slicing every leaf, sort metadata included."""
+    fields = {f.name: getattr(blk, f.name)[i:i + 1, j:j + 1]
+              for f in dataclasses.fields(blk)
+              if f.name not in ("shape", "block_shape", "nnz", "align")
+              and getattr(blk, f.name) is not None}
+    return blocksparse.BlockCOO(shape=blk.block_shape,
+                                block_shape=blk.block_shape, nnz=blk.nnz,
+                                align=blk.align, **fields)
 
 
 def _grid_spmm(blk, B, impl):
@@ -60,7 +74,7 @@ def _grid_spmm_t(blk, C, impl):
     return out
 
 
-@settings(max_examples=12, deadline=None)
+@settings(max_examples=10, deadline=None)
 @given(st.integers(1, 3), st.integers(1, 3), st.integers(1, 12),
        st.integers(0, 10 ** 6))
 def test_blockcoo_spmm_matches_dense(gr, gc, k, seed):
@@ -75,10 +89,11 @@ def test_blockcoo_spmm_matches_dense(gr, gc, k, seed):
                               jnp.float32).astype(dt)
         A32 = np.asarray(Ad, np.float32)
         for impl in IMPLS:
-            np.testing.assert_allclose(_grid_spmm(blk, B, impl),
+            rep = _for_impl(blk, impl)
+            np.testing.assert_allclose(_grid_spmm(rep, B, impl),
                                        A32 @ np.asarray(B, np.float32),
                                        atol=_tol(dt), rtol=_tol(dt))
-            np.testing.assert_allclose(_grid_spmm_t(blk, C, impl),
+            np.testing.assert_allclose(_grid_spmm_t(rep, C, impl),
                                        A32.T @ np.asarray(C, np.float32),
                                        atol=_tol(dt), rtol=_tol(dt))
 
@@ -87,7 +102,7 @@ def test_blockcoo_spmm_matches_dense(gr, gc, k, seed):
 def test_blockcoo_spmm_all_empty_blocks(impl):
     """A block (and a whole matrix) with zero nonzeros must produce exact
     zeros — the padding triplets are no-ops by construction."""
-    blk = blocksparse.blockify(jnp.zeros((32, 24)), 2, 2)
+    blk = _for_impl(blocksparse.blockify(jnp.zeros((32, 24)), 2, 2), impl)
     B = jax.random.normal(KEY, (24, 5))
     C = jax.random.normal(jax.random.fold_in(KEY, 1), (32, 5))
     assert np.abs(_grid_spmm(blk, B, impl)).max() == 0.0
@@ -102,10 +117,120 @@ def test_blockcoo_spmm_ragged_blocks(impl):
     rng = np.random.RandomState(3)
     Ad[:16, :12] = rng.rand(16, 12) * (rng.rand(16, 12) < 0.5)
     Ad = jnp.asarray(Ad)
-    blk = blocksparse.blockify(Ad, 2, 2)
+    blk = _for_impl(blocksparse.blockify(Ad, 2, 2), impl)
     B = jax.random.normal(KEY, (24, 7))
     np.testing.assert_allclose(_grid_spmm(blk, B, impl),
                                np.asarray(Ad @ B), atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["sorted"])
+def test_sorted_ragged_nnz_rows(impl):
+    """Heavily skewed per-row nnz (one hot row, many empty rows) exercises
+    the tile-aligned packing: multi-unit segments, empty tiles the grid
+    never visits (masked to exact zero), and partial last units."""
+    m, n, k = 40, 24, 5
+    Ad = np.zeros((m, n), np.float32)
+    rng = np.random.RandomState(7)
+    Ad[3, :] = rng.rand(n)                      # hot row: nnz ≫ align
+    Ad[17, 5] = 1.25                            # lone nonzero mid-matrix
+    blk = blocksparse.blockify(jnp.asarray(Ad), 1, 1).sort_rows(align=8)
+    B = rng.rand(n, k).astype(np.float32)
+    out = blocksparse.local_spmm(blk, jnp.asarray(B), impl=impl)
+    np.testing.assert_allclose(np.asarray(out), Ad @ B, atol=1e-5)
+    empty = np.setdiff1d(np.arange(m), [3, 17])
+    assert np.abs(np.asarray(out)[empty]).max() == 0.0
+
+
+def test_sort_rows_round_trips_bit_for_bit():
+    """sort_rows must represent the SAME matrix bit-for-bit (stable sort,
+    zero-padding no-ops) and leave the original untouched."""
+    Ad = erdos_renyi_matrix(jax.random.PRNGKey(11), 48, 36, 0.2)
+    blk = blocksparse.blockify(Ad, 3, 2)
+    dense_before = blk.todense()
+    srt = blk.sort_rows(align=SORT_ALIGN)
+    assert srt.is_sorted and not blk.is_sorted
+    assert np.array_equal(srt.todense(), dense_before)
+    assert np.array_equal(blk.todense(), dense_before)
+    assert srt.nnz == blk.nnz and srt.shape == blk.shape
+    # fp32 norm identical: padding values are exact zeros
+    assert float(blocksparse.sq_norm(srt)) == float(blocksparse.sq_norm(blk))
+
+
+def test_sort_rows_layout_invariants():
+    """Per-block invariants the sorted kernel relies on: rows
+    non-decreasing within each valid segment, offsets consistent with the
+    per-row counts, tile ids non-decreasing, valid ≤ align, and packed
+    segments that never cross an 8-row tile boundary."""
+    Ad = erdos_renyi_matrix(jax.random.PRNGKey(5), 64, 40, 0.15)
+    srt = blocksparse.blockify(Ad, 2, 2).sort_rows(align=SORT_ALIGN)
+    gr, gc = srt.grid
+    mb = srt.block_shape[0]
+    dense = np.asarray(Ad)
+    for i in range(gr):
+        for j in range(gc):
+            offs = np.asarray(srt.row_offsets[i, j])
+            tiles = np.asarray(srt.row_tiles[i, j])
+            valid = np.asarray(srt.row_valid[i, j])
+            rows = np.asarray(srt.rows[i, j])
+            blk_dense = dense[i * mb:(i + 1) * mb,
+                              j * srt.block_shape[1]:(j + 1)
+                              * srt.block_shape[1]]
+            counts = offs[1:] - offs[:-1]
+            # offsets count every stored triplet of the block (incl. the
+            # _pack_triplets zero padding, which sorts into its row segment)
+            assert offs[0] == 0 and offs[-1] >= np.count_nonzero(blk_dense)
+            assert (counts >= 0).all()
+            assert (np.diff(tiles) >= 0).all()
+            assert ((valid >= 0) & (valid <= SORT_ALIGN)).all()
+            for u, t in enumerate(tiles):
+                seg = rows[u * SORT_ALIGN:u * SORT_ALIGN + valid[u]]
+                assert (np.diff(seg) >= 0).all()
+                # all valid rows of a unit live inside the unit's 8-row tile
+                assert ((seg >= t * 8) & (seg < (t + 1) * 8)).all()
+
+
+def test_sorted_requires_metadata():
+    blk = blocksparse.blockify(jnp.zeros((16, 8)).at[3, 2].set(1.0), 1, 1)
+    B = jnp.ones((8, 4))
+    with pytest.raises(ValueError, match="sort_rows"):
+        blocksparse.local_spmm(blk, B, impl="sorted")
+    with pytest.raises(ValueError, match="sort_rows"):
+        blocksparse.local_spmm_t(blk, jnp.ones((16, 4)), impl="sorted")
+
+
+def test_sort_rows_single_orientation():
+    """orient="rows"/"cols" stores only that orientation's arrays (half the
+    host work and device memory when a copy runs one product only), and
+    the other product's sorted impl refuses with a clear error."""
+    Ad = erdos_renyi_matrix(jax.random.PRNGKey(9), 32, 24, 0.2)
+    blk = blocksparse.blockify(Ad, 1, 1)
+    B = jax.random.normal(KEY, (24, 5))
+    C = jax.random.normal(jax.random.fold_in(KEY, 1), (32, 5))
+    rows_only = blk.sort_rows(align=SORT_ALIGN, orient="rows")
+    assert rows_only.has_sorted_rows and not rows_only.has_sorted_cols
+    assert rows_only.t_vals is None and not rows_only.is_sorted
+    np.testing.assert_allclose(
+        np.asarray(blocksparse.local_spmm(rows_only, B, impl="sorted")),
+        np.asarray(Ad, np.float32) @ np.asarray(B), atol=1e-5)
+    with pytest.raises(ValueError, match="orient"):
+        blocksparse.local_spmm_t(rows_only, C, impl="sorted")
+    cols_only = blk.sort_rows(align=SORT_ALIGN, orient="cols")
+    assert cols_only.has_sorted_cols and not cols_only.has_sorted_rows
+    np.testing.assert_allclose(
+        np.asarray(blocksparse.local_spmm_t(cols_only, C, impl="sorted")),
+        np.asarray(Ad, np.float32).T @ np.asarray(C), atol=1e-5)
+    with pytest.raises(ValueError, match="orient"):
+        blocksparse.local_spmm(cols_only, B, impl="sorted")
+
+
+def test_pad_nnz_drops_sort_metadata():
+    """gspmd's nnz padding breaks the tile-aligned layout, so it must
+    strip the sorted fields rather than ship a stale layout."""
+    Ad = erdos_renyi_matrix(jax.random.PRNGKey(2), 32, 24, 0.2)
+    srt = blocksparse.blockify(Ad, 1, 1).sort_rows(align=SORT_ALIGN)
+    padded = blocksparse.pad_nnz(srt, 7)
+    assert not padded.is_sorted
+    assert np.array_equal(padded.todense(), srt.todense())
 
 
 @settings(max_examples=10, deadline=None)
@@ -128,3 +253,36 @@ def test_pallas_spmm_scatter_semantics(m, n, k, nnz, seed):
     got_t = kops.spmm_t(jnp.asarray(vals), jnp.asarray(rows),
                         jnp.asarray(cols), jnp.asarray(C), n)
     np.testing.assert_allclose(np.asarray(got_t), Ad.T @ C, atol=1e-4)
+
+
+def test_sorted_spmm_duplicate_indices():
+    """Duplicate (row, col) triplets must accumulate in the sorted layout
+    too (stable sort keeps them adjacent, the kernel adds them all)."""
+    rows = np.array([5, 5, 5, 2, 5], np.int32)
+    cols = np.array([1, 1, 3, 0, 1], np.int32)
+    vals = np.array([1.0, 2.0, 4.0, 8.0, 16.0], np.float32)
+    blk = blocksparse._pack_triplets(vals, rows, cols, 16, 8, 1, 1, nnz=5)
+    srt = blk.sort_rows(align=8)
+    B = np.eye(8, 3, dtype=np.float32)
+    Ad = np.zeros((16, 8), np.float32)
+    np.add.at(Ad, (rows, cols), vals)
+    out = blocksparse.local_spmm(srt, jnp.asarray(B), impl="sorted")
+    np.testing.assert_allclose(np.asarray(out), Ad @ B, atol=1e-6)
+
+
+@pytest.mark.parametrize("schedule", ["serial", "faun", "naive"])
+def test_sorted_backend_matches_scatter_through_engine(schedule):
+    """spmm_impl="sorted" must match the scatter oracle on every schedule
+    it is reachable from (gspmd forces scatter via global_view_ops)."""
+    from repro.backends import SparseOps
+    from repro.core.engine import NMFSolver
+    A = erdos_renyi_matrix(jax.random.PRNGKey(3), 48, 32, 0.1)
+    key = jax.random.PRNGKey(0)
+    ref = NMFSolver(4, algo="mu", schedule=schedule,
+                    backend=SparseOps(spmm_impl="scatter"),
+                    max_iters=5).fit(A, key=key)
+    got = NMFSolver(4, algo="mu", schedule=schedule,
+                    backend=SparseOps(spmm_impl="sorted", align=16),
+                    max_iters=5).fit(A, key=key)
+    np.testing.assert_allclose(np.asarray(got.rel_errors),
+                               np.asarray(ref.rel_errors), atol=1e-5)
