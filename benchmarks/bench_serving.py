@@ -1,0 +1,152 @@
+"""Serving latency/throughput: fold-in p50/p99 and rows/s across batch
+sizes — the repo's first request-driven workload.
+
+Protocol:
+  1. train a small artifact (BPP, dense low-rank) once, outside the timed
+     region;
+  2. warm every fold-in bucket (dense and sparse) so the measurements see
+     the serving steady state — the no-retrace invariant is then CHECKED:
+     compile counts must not move during the timed loops;
+  3. per input kind × batch size: REPS single project() calls, report p50
+     and p99 latency (µs) plus rows/s at the p50;
+  4. top-k retrieval latency over a streamed W;
+  5. microbatcher end-to-end: concurrent single-row submitters, per-request
+     p50/p99 and aggregate rows/s (the latency cost of coalescing vs the
+     throughput it buys).
+
+Writes ``results/serving_latency.csv`` (kind, batch, p50_us, p99_us,
+rows_per_s, compiles) — CI uploads it as an artifact.
+"""
+
+import os
+import threading
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import sparse as jsparse
+
+from repro.core.engine import NMFSolver
+from repro.data.pipeline import lowrank_matrix
+from repro.serve.artifact import FactorArtifact
+from repro.serve.batcher import MicroBatcher
+from repro.serve.foldin import FoldInProjector
+from repro.serve.topk import TopK
+
+M, N, K = 512, 256, 12
+BATCHES = [1, 4, 16, 64]
+MAX_BATCH = 64
+NNZ_PER_ROW = 8
+REPS = 30
+TOPK_ROWS = 50_000
+
+
+def _percentiles(samples_s):
+    return (float(np.percentile(samples_s, 50) * 1e6),
+            float(np.percentile(samples_s, 99) * 1e6))
+
+
+def _bench_calls(fn, arg, reps=REPS):
+    fn(arg)                                  # steady-state entry
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(arg))
+        times.append(time.perf_counter() - t0)
+    return _percentiles(times)
+
+
+def _sparse_batch(rng, b, n):
+    nnz = b * NNZ_PER_ROW
+    idx = np.stack([rng.randint(0, b, nnz), rng.randint(0, n, nnz)],
+                   axis=1).astype(np.int32)
+    return jsparse.BCOO((jnp.asarray(rng.rand(nnz).astype(np.float32)),
+                         jnp.asarray(idx)), shape=(b, n))
+
+
+def main(emit):
+    key = jax.random.PRNGKey(0)
+    A = lowrank_matrix(key, M, N, K, noise=0.01)
+    res = NMFSolver(K, algo="bpp", max_iters=30).fit(A, key=key)
+    art = FactorArtifact.from_result(res)
+    proj = FoldInProjector(art, max_batch=MAX_BATCH)
+    warm = proj.warmup(dense=True, sparse=True, nnz_per_row=NNZ_PER_ROW)
+    emit("serve_warmup_compiles", 0.0, f"compile_count={warm}")
+
+    rng = np.random.RandomState(1)
+    rows_csv = []
+    for kind in ("dense", "sparse"):
+        for b in BATCHES:
+            if kind == "dense":
+                arg = jnp.asarray(rng.rand(b, N).astype(np.float32))
+            else:
+                arg = _sparse_batch(rng, b, N)
+            p50, p99 = _bench_calls(proj.project, arg)
+            rps = b / (p50 / 1e6)
+            emit(f"serve_foldin_{kind}_b{b}", p50,
+                 f"p99_us={p99:.0f};rows_per_s={rps:.0f}")
+            rows_csv.append((f"foldin_{kind}", b, p50, p99, rps,
+                             proj.compile_count))
+    # the serving steady-state invariant: the timed loops above must not
+    # have recompiled anything beyond the warmup passes
+    emit("serve_no_retrace", 0.0,
+         f"compiles_after={proj.compile_count};warmed={warm};"
+         f"ok={proj.compile_count == warm}")
+
+    # -- top-k retrieval over a large streamed W ---------------------------
+    Wbig = jnp.asarray(rng.rand(TOPK_ROWS, K).astype(np.float32))
+    handle = TopK(FactorArtifact.from_factors(Wbig, art.H, algo="bpp"),
+                  metric="cosine", chunk=8192)
+    codes = proj.project(jnp.asarray(rng.rand(16, N).astype(np.float32)))
+    p50, p99 = _bench_calls(lambda q: handle.query(q, k=10)[0], codes)
+    emit(f"serve_topk_m{TOPK_ROWS}_b16", p50,
+         f"p99_us={p99:.0f};queries_per_s={16 / (p50 / 1e6):.0f}")
+    rows_csv.append(("topk", 16, p50, p99, 16 / (p50 / 1e6),
+                     proj.compile_count))
+
+    # -- microbatcher end to end -------------------------------------------
+    n_req, n_threads = 192, 4
+    reqs = rng.rand(n_req, N).astype(np.float32)
+    lat = np.zeros(n_req)
+    with MicroBatcher(proj.project, max_batch=MAX_BATCH,
+                      max_delay_s=2e-3) as mb:
+        t_all = time.perf_counter()
+
+        def client(lo, hi):
+            for i in range(lo, hi):
+                t0 = time.perf_counter()
+                mb.submit(reqs[i]).result(timeout=60)
+                lat[i] = time.perf_counter() - t0
+
+        span = n_req // n_threads
+        threads = [threading.Thread(target=client,
+                                    args=(t * span, (t + 1) * span))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t_all
+    p50, p99 = _percentiles(lat)
+    rps = n_req / wall
+    emit("serve_batcher_192req", p50,
+         f"p99_us={p99:.0f};rows_per_s={rps:.0f};"
+         f"mean_batch={mb.stats.mean_batch:.1f};"
+         f"max_batch={mb.stats.max_batch_seen}")
+    rows_csv.append(("batcher", mb.stats.max_batch_seen, p50, p99, rps,
+                     proj.compile_count))
+
+    out = os.path.join(os.path.dirname(__file__), "results",
+                       "serving_latency.csv")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write("kind,batch,p50_us,p99_us,rows_per_s,compiles\n")
+        for r in rows_csv:
+            f.write(f"{r[0]},{r[1]},{r[2]:.1f},{r[3]:.1f},{r[4]:.1f},"
+                    f"{r[5]}\n")
+
+
+if __name__ == "__main__":
+    main(lambda name, us, derived="": print(f"{name},{us:.2f},{derived}"))

@@ -10,7 +10,8 @@ import time
 
 from benchmarks import (bench_autotune, bench_cost_table, bench_datasets,
                         bench_error_curves, bench_grid_sweep, bench_k_sweep,
-                        bench_strong_scaling, bench_time_to_tol)
+                        bench_serving, bench_strong_scaling,
+                        bench_time_to_tol)
 
 BENCHES = {
     "fig4_error_curves": bench_error_curves.main,
@@ -21,6 +22,7 @@ BENCHES = {
     "table3_cost": bench_cost_table.main,
     "ttol_time_to_tol": bench_time_to_tol.main,
     "tune_autotune": bench_autotune.main,
+    "serve_latency": bench_serving.main,
 }
 
 

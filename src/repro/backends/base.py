@@ -105,6 +105,20 @@ class LocalOps:
         (dense → triplets) here so each blockify only repacks."""
         return A
 
+    def blockify_for(self, A, gr: int, gc: int,
+                     products: tuple[str, ...] = ("mm", "mm_t")):
+        """``blockify`` with a hint of WHICH local products will ever run on
+        this copy of A — a subset of ("mm", "mm_t").  Schedules that store A
+        more than once (the naive schedule keeps a row-blocked copy that
+        only sees ``mm`` and a column-blocked copy that only sees ``mm_t``)
+        pass the hint so representation preprocessing can skip the unused
+        orientation (e.g. ``BlockCOO.sort_rows(orient=...)``).  Default:
+        delegate to ``blockify`` — the hint is an optimisation, never a
+        correctness requirement, so custom backends that only override
+        ``blockify`` keep working on every schedule."""
+        del products
+        return self.blockify(A, gr, gc)
+
     def pad_global(self, A, p: int):
         """Pad the global-view (gspmd) representation so it shards evenly
         over p devices.  Dense arrays need nothing (XLA pads shardings)."""

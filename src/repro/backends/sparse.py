@@ -68,27 +68,40 @@ class SparseOps(LocalOps):
             return self
         return SparseOps(spmm_impl="scatter")
 
-    def _impl(self, A=None) -> str:
+    def _impl(self, A=None, need: str = "both") -> str:
+        """Effective impl for one product.  ``need`` names the sorted-layout
+        orientation that product consumes ("rows" for mm, "cols" for mm_t) —
+        one-orientation copies (``blockify_for`` with a single product) must
+        still dispatch to the sorted kernel under "auto"."""
         if self.spmm_impl != "auto":
             return self.spmm_impl
         if jax.default_backend() == "tpu":
-            if isinstance(A, blocksparse.BlockCOO) and A.is_sorted:
-                return "sorted"
+            if isinstance(A, blocksparse.BlockCOO):
+                ok = {"rows": A.has_sorted_rows, "cols": A.has_sorted_cols,
+                      "both": A.is_sorted}[need]
+                if ok:
+                    return "sorted"
             return "pallas"
         return "scatter"
 
-    def _sort(self, blk: blocksparse.BlockCOO) -> blocksparse.BlockCOO:
+    def _sort(self, blk: blocksparse.BlockCOO,
+              orient: str = "both") -> blocksparse.BlockCOO:
         if self.spmm_impl != "sorted":
             return blk
-        if blk.is_sorted and blk.align == self.align:
+        need_rows = orient != "cols"
+        need_cols = orient != "rows"
+        if (blk.align == self.align
+                and (blk.has_sorted_rows or not need_rows)
+                and (blk.has_sorted_cols or not need_cols)):
             return blk
-        return blk.sort_rows(align=self.align)
+        return blk.sort_rows(align=self.align, orient=orient)
 
     # -- products -----------------------------------------------------------
 
     def mm(self, A, B):
         if isinstance(A, blocksparse.BlockCOO):
-            return blocksparse.local_spmm(A, B, impl=self._impl(A),
+            return blocksparse.local_spmm(A, B,
+                                          impl=self._impl(A, need="rows"),
                                           autotune=self.autotune)
         if _is_bcoo(A):
             return A @ B
@@ -97,7 +110,8 @@ class SparseOps(LocalOps):
 
     def mm_t(self, A, B):
         if isinstance(A, blocksparse.BlockCOO):
-            return blocksparse.local_spmm_t(A, B, impl=self._impl(A),
+            return blocksparse.local_spmm_t(A, B,
+                                            impl=self._impl(A, need="cols"),
                                             autotune=self.autotune)
         if _is_bcoo(A):
             return A.T @ B
@@ -115,6 +129,27 @@ class SparseOps(LocalOps):
 
     def blockify(self, A, gr: int, gc: int):
         return self._sort(blocksparse.blockify(A, gr, gc))
+
+    def blockify_for(self, A, gr: int, gc: int,
+                     products: tuple[str, ...] = ("mm", "mm_t")):
+        """Skip the unused sorted orientation when the schedule promises a
+        copy only ever runs one product (the naive schedule's row-blocked
+        copy sees only ``mm``, its column-blocked copy only ``mm_t``) —
+        halves the sorted layout's host-side sort work and its device
+        footprint for those copies.  The hint must come from the SCHEDULE:
+        inferring it from the grid shape here would be wrong (1-D faun
+        grids run both products on the same blocks)."""
+        prods = set(products)
+        if not prods or not prods <= {"mm", "mm_t"}:
+            raise ValueError(f"products must be a non-empty subset of "
+                             f"('mm', 'mm_t'), got {products!r}")
+        if prods == {"mm"}:
+            orient = "rows"
+        elif prods == {"mm_t"}:
+            orient = "cols"
+        else:
+            orient = "both"
+        return self._sort(blocksparse.blockify(A, gr, gc), orient=orient)
 
     def pre_blockify(self, A):
         """Run the expensive dense→COO conversion once; blockify then packs

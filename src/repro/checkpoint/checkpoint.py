@@ -25,6 +25,44 @@ import numpy as np
 _SEP = "::"
 
 
+def write_payload(final: str, arrays: dict[str, np.ndarray],
+                  meta: dict) -> str:
+    """Publish ``arrays.npz`` + ``meta.json`` as directory ``final``
+    without ever exposing a torn payload: everything lands in a tmp dir
+    first, and on overwrite the PREVIOUS payload is moved aside before the
+    ``os.replace`` and deleted only after the new one is in place.  A crash
+    at any point leaves intact payload dirs on disk — worst case (between
+    the two renames) ``final`` is briefly absent with both versions
+    recoverable next to it, never half-written.  Shared by the train
+    checkpoints below and the serving factor artifacts
+    (``repro.serve.artifact``)."""
+    parent = os.path.dirname(final) or "."
+    os.makedirs(parent, exist_ok=True)
+    base = os.path.basename(final)
+    tmp = os.path.join(parent, f".tmp_{base}_{os.getpid()}")
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    old = os.path.join(parent, f".old_{base}_{os.getpid()}")
+    if os.path.exists(final):
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.replace(final, old)       # keep the previous payload intact
+    os.replace(tmp, final)           # atomic publish
+    shutil.rmtree(old, ignore_errors=True)
+    return final
+
+
+def read_payload(path: str) -> tuple[dict[str, np.ndarray], dict]:
+    """Load a ``write_payload`` directory back as (arrays, meta)."""
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return arrays, meta
+
+
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -37,19 +75,11 @@ def _flatten(tree) -> dict[str, np.ndarray]:
 
 def save(state, step: int, ckpt_dir: str, *, keep_last: int = 3,
          extra_meta: dict | None = None) -> str:
-    os.makedirs(ckpt_dir, exist_ok=True)
-    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}_{os.getpid()}")
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
-    os.makedirs(tmp, exist_ok=True)
     flat = _flatten(state)
-    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
     meta = {"step": step, "time": time.time(), "keys": sorted(flat),
             **(extra_meta or {})}
-    with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump(meta, f)
-    if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)                       # atomic publish
+    write_payload(final, flat, meta)
     _prune(ckpt_dir, keep_last)
     return final
 

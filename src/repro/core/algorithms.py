@@ -92,6 +92,47 @@ ALGORITHMS: dict[str, Callable] = {
 }
 
 
+def make_fold_in(algo: str, *, iters: int = 100,
+                 max_iter: int | None = None) -> Callable:
+    """Return ``fold(G, R, X0=None) -> X`` projecting rows onto a FIXED factor.
+
+    Serving fold-in is one half-update of AU-NMF with the trained factor held
+    fixed — the paper's ``SolveBPP(HHᵀ, HAᵀ_new)`` applied to unseen rows:
+    ``G`` is the trained factor's k×k Gram, ``R`` the (rows, k)
+    cross-products, and the result ``X ≥ 0`` minimises ‖a_i − x_i H‖ per
+    row.  BPP solves the NNLS exactly in one call (``core.bpp.solve_bpp``);
+    HALS is iterated ``iters`` coordinate-descent sweeps (converges to the
+    same NNLS solution); MU is iterated ``iters`` multiplicative steps from
+    a strictly positive Jacobi init (R_i / G_ii), since the multiplicative
+    rule is only defined for positive iterates.
+
+    The returned closure is jit-safe: no data-dependent python control flow,
+    so ``repro.serve.foldin`` compiles it once per padded batch bucket.
+    """
+    algo = algo.lower()
+    if algo in ("bpp", "abpp", "anls"):
+        def fold(G, R, X0=None):
+            del X0          # exact solve, no warm start needed
+            return solve_bpp(G, R, max_iter=max_iter)
+        return fold
+    if algo == "hals":
+        def fold(G, R, X0=None):
+            X = jnp.zeros_like(R) if X0 is None else X0
+            body = lambda _, X: update_hals(G, R, X, normalize=False)
+            return jax.lax.fori_loop(0, iters, body, X)
+        return fold
+    if algo == "mu":
+        def fold(G, R, X0=None):
+            Rp = jnp.maximum(R, 0.0)        # nonneg data ⇒ R ≥ 0 already
+            if X0 is None:
+                d = jnp.maximum(jnp.diag(G), _EPS)
+                X0 = jnp.maximum(Rp / d, _EPS)
+            body = lambda _, X: update_mu(G, Rp, X)
+            return jax.lax.fori_loop(0, iters, body, X0)
+        return fold
+    raise ValueError(f"unknown NMF algorithm {algo!r}; choose from mu|hals|bpp")
+
+
 def get_update_fns(algo: str, *, norm_psum=lambda v: v):
     """Returns (update_w, update_h) closures for the chosen algorithm.
 

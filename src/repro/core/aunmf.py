@@ -37,6 +37,12 @@ class NMFResult:
     iters: int = 0
     extras: dict = field(default_factory=dict)
 
+    def save_artifact(self, path: str, **meta) -> str:
+        """Persist the trained factors as a serving artifact (factors +
+        precomputed Gram + metadata) — see ``repro.serve.artifact``."""
+        from repro.serve.artifact import FactorArtifact
+        return FactorArtifact.from_result(self, **meta).save(path)
+
 
 def init_h(key: jax.Array, n: int, k: int, dtype=jnp.float32) -> jax.Array:
     """Paper §6.1.3: H initialised uniform at random (W derived on iter 1)."""

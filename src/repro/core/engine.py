@@ -239,10 +239,13 @@ class _NaiveSchedule(_Schedule):
         ops, p, ax = self.s.ops, self.p, self.axis
         # Algorithm 2 stores A twice: row-distributed and column-distributed.
         # Canonicalise once (for sparse ops: the single dense→triplet
-        # conversion) so the two layouts only repack, not reconvert.
+        # conversion) so the two layouts only repack, not reconvert.  Each
+        # copy only ever runs ONE product (row copy: A·Hᵀ; column copy:
+        # AᵀW), so the blockify_for hint lets representations skip the
+        # unused orientation (sorted-SpMM metadata, for one).
         A = ops.pre_blockify(A)
-        Arow = ops.blockify(A, p, 1)
-        Acol = ops.blockify(A, 1, p)
+        Arow = ops.blockify_for(A, p, 1, products=("mm",))
+        Acol = ops.blockify_for(A, 1, p, products=("mm_t",))
         normA_sq = ops.norm_sq(Arow)
         sh = lambda spec: NamedSharding(self.mesh, spec)
         spec_row, spec_col = self._specs_A()

@@ -1,0 +1,133 @@
+"""Factor artifacts: the on-disk serving format for trained NMF factors.
+
+Training ends at ``NMFResult``; serving starts here.  An artifact bundles
+everything a request path needs so nothing is recomputed per query:
+
+  * the factors ``W`` (m, k) and ``H`` (k, n);
+  * the precomputed Gram ``G = HHᵀ`` (k, k, fp32) — the normal-equation
+    matrix every fold-in half-update reuses (paper's ``SolveBPP(HHᵀ, ·)``),
+    computed once at publish time instead of per batch;
+  * the training algorithm and free-form metadata (iterations, final
+    relative error, schedule/backend provenance from ``NMFResult.extras``).
+
+On disk an artifact is a ``repro.checkpoint.checkpoint.write_payload``
+directory (``arrays.npz`` + ``meta.json``, written to a tmp dir and
+atomically renamed), so a crash mid-publish can never corrupt the artifact
+a live server would load.
+
+    res = NMFSolver(k, algo="bpp").fit(A)
+    res.save_artifact("artifacts/topics")            # convenience wrapper
+    art = FactorArtifact.load("artifacts/topics")
+    proj = FoldInProjector(art)                      # repro.serve.foldin
+
+``projection_state()`` exposes the reusable per-algorithm state (Gram +
+its diagonal, both fp32) that ``repro.serve.foldin`` closes its compiled
+projection over.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FORMAT = "nmf-factor-artifact"
+VERSION = 1
+
+
+class ProjectionState(NamedTuple):
+    """Per-artifact state a fold-in projection reuses across requests."""
+    gram: jax.Array       # (k, k) fp32 — HHᵀ of the fixed factor
+    diag: jax.Array       # (k,)  fp32 — its diagonal (HALS/MU init + sweeps)
+    algo: str
+
+
+def _gram_fp32(H: jax.Array) -> jax.Array:
+    """HHᵀ with fp32 accumulation whatever H's dtype (bf16 factors serve)."""
+    return jax.lax.dot_general(
+        H, H, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorArtifact:
+    """Trained factors + precomputed serving state.  Immutable."""
+
+    W: Any                # (m, k)
+    H: Any                # (k, n)
+    algo: str
+    gram: Any             # (k, k) fp32, HHᵀ
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def k(self) -> int:
+        return self.W.shape[1]
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.W.shape[0], self.H.shape[1])
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_factors(cls, W, H, *, algo: str = "bpp",
+                     **meta) -> "FactorArtifact":
+        W = jnp.asarray(W)
+        H = jnp.asarray(H)
+        if W.ndim != 2 or H.ndim != 2 or W.shape[1] != H.shape[0]:
+            raise ValueError(f"factor shapes do not compose: W {W.shape} × "
+                             f"H {H.shape}")
+        return cls(W=W, H=H, algo=algo, gram=_gram_fp32(H), meta=dict(meta))
+
+    @classmethod
+    def from_result(cls, result, **meta) -> "FactorArtifact":
+        """Build from an ``NMFResult``, keeping training provenance."""
+        rels = np.asarray(result.rel_errors, np.float32)
+        prov = {"iters": int(result.iters),
+                "rel_error": float(rels[-1]) if rels.size else None,
+                **{k: v for k, v in result.extras.items()
+                   if isinstance(v, (str, int, float, bool))}}
+        prov.update(meta)
+        return cls.from_factors(result.W, result.H, algo=result.algo, **prov)
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Atomically publish to directory ``path`` (arrays.npz+meta.json)."""
+        from repro.checkpoint.checkpoint import write_payload
+        arrays = {"W": np.asarray(self.W), "H": np.asarray(self.H),
+                  "gram": np.asarray(self.gram)}
+        meta = {"format": FORMAT, "version": VERSION, "algo": self.algo,
+                "k": int(self.k), "shape": list(self.shape),
+                "meta": self.meta}
+        return write_payload(path, arrays, meta)
+
+    @classmethod
+    def load(cls, path: str) -> "FactorArtifact":
+        from repro.checkpoint.checkpoint import read_payload
+        arrays, meta = read_payload(path)
+        if meta.get("format") != FORMAT:
+            raise ValueError(f"{path} is not a {FORMAT} payload "
+                             f"(format={meta.get('format')!r})")
+        if meta.get("version", 0) > VERSION:
+            raise ValueError(f"artifact version {meta['version']} is newer "
+                             f"than this reader (supports ≤ {VERSION})")
+        return cls(W=jnp.asarray(arrays["W"]), H=jnp.asarray(arrays["H"]),
+                   algo=meta["algo"], gram=jnp.asarray(arrays["gram"]),
+                   meta=dict(meta.get("meta", {})))
+
+    # -- serving state ------------------------------------------------------
+
+    def projection_state(self) -> ProjectionState:
+        G = jnp.asarray(self.gram, jnp.float32)
+        return ProjectionState(gram=G, diag=jnp.diag(G), algo=self.algo)
+
+    def transposed(self) -> "FactorArtifact":
+        """The (Hᵀ, Wᵀ) view: fold COLUMNS of A (e.g. new documents when A
+        is vocab×docs) through the same row fold-in API."""
+        return FactorArtifact(W=self.H.T, H=self.W.T, algo=self.algo,
+                              gram=_gram_fp32(jnp.asarray(self.W.T)),
+                              meta=dict(self.meta, transposed=True))

@@ -1,0 +1,149 @@
+"""Microbatching front-end: coalesce concurrent fold-in requests.
+
+Single-row projection wastes the accelerator — the batched NNLS solve in
+``serve/foldin.py`` amortises the Gram solve and the jit dispatch over the
+whole batch.  ``MicroBatcher`` is the piece that turns independent callers
+into batches: a thread-safe queue plus one worker thread that drains up to
+``max_batch`` requests or until ``max_delay_s`` after the first queued
+request (whichever comes first), runs the batch through one ``project``
+call, and resolves each caller's ``Future`` with its own row of the result.
+
+The deadline starts at the FIRST request of a batch, so an isolated request
+pays at most ``max_delay_s`` extra latency while a burst fills the batch
+immediately — the standard latency/throughput knob pair of serving systems.
+
+    proj = FoldInProjector(artifact, max_batch=64)
+    with MicroBatcher(proj.project, max_batch=64, max_delay_s=2e-3) as mb:
+        fut = mb.submit(row)             # from any thread
+        x = fut.result()                 # (k,) latent code
+
+``stack`` controls how queued rows combine (default ``np.stack`` for dense
+1-D rows); pass a custom callable to batch other request payloads.  The
+worker never dies on a failing batch — the exception is delivered to that
+batch's futures and the loop continues.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+_STOP = object()
+
+
+@dataclass
+class BatcherStats:
+    requests: int = 0
+    batches: int = 0
+    batch_sizes: list = field(default_factory=list)
+
+    @property
+    def mean_batch(self) -> float:
+        return self.requests / max(self.batches, 1)
+
+    @property
+    def max_batch_seen(self) -> int:
+        return max(self.batch_sizes, default=0)
+
+
+class MicroBatcher:
+    """Thread-safe request coalescing in front of a batched ``project``."""
+
+    def __init__(self, project: Callable[[Any], Any], *, max_batch: int = 64,
+                 max_delay_s: float = 2e-3,
+                 stack: Callable[[list], Any] | None = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.project = project
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self.stack = stack or (lambda rows: np.stack(rows))
+        self.stats = BatcherStats()
+        self._q: "queue.Queue" = queue.Queue()
+        self._closed = False
+        # serialises the closed-check-then-enqueue against close(): without
+        # it a submit could read _closed == False, lose the CPU, and enqueue
+        # after the worker already exited — a future no one ever resolves
+        self._lock = threading.Lock()
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="microbatcher")
+        self._worker.start()
+
+    # -- client side --------------------------------------------------------
+
+    def submit(self, row) -> Future:
+        """Enqueue one request; resolves to the request's own result row."""
+        fut: Future = Future()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            # enqueued under the lock ⇒ strictly before close()'s sentinel,
+            # so the FIFO worker always processes it before exiting
+            self._q.put((row, fut))
+        return fut
+
+    def close(self) -> None:
+        """Drain outstanding requests, then stop the worker."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._q.put(_STOP)
+        self._worker.join()
+
+    def __enter__(self) -> "MicroBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker side --------------------------------------------------------
+
+    def _collect(self) -> list | None:
+        """Block for the first request, then coalesce until max_batch or
+        the deadline relative to that first arrival."""
+        first = self._q.get()
+        if first is _STOP:
+            return None
+        batch = [first]
+        deadline = time.monotonic() + self.max_delay_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                item = self._q.get(timeout=remaining)
+            except queue.Empty:
+                break
+            if item is _STOP:
+                self._q.put(_STOP)       # re-post for the outer loop
+                break
+            batch.append(item)
+        return batch
+
+    def _run(self) -> None:
+        while True:
+            batch = self._collect()
+            if batch is None:
+                return
+            rows = [r for r, _ in batch]
+            futs = [f for _, f in batch]
+            try:
+                out = self.project(self.stack(rows))
+                out = np.asarray(out)
+            except Exception as e:       # noqa: BLE001 — deliver, don't die
+                for f in futs:
+                    f.set_exception(e)
+                continue
+            finally:
+                self.stats.requests += len(batch)
+                self.stats.batches += 1
+                self.stats.batch_sizes.append(len(batch))
+            for i, f in enumerate(futs):
+                f.set_result(out[i])

@@ -1,0 +1,251 @@
+"""Online fold-in: project new data rows into a trained NMF latent space.
+
+Serving consumes factors by one half-iteration of AU-NMF with the trained
+factor held FIXED: given new rows ``A_new`` (b, n) and the trained ``H``
+(k, n), solve per row
+
+    x_i = argmin_{x >= 0} || a_i - x H ||_2
+        = fold(G, R)   with   G = HHᵀ (precomputed),  R = A_new Hᵀ
+
+— exactly the paper's ``SolveBPP(HHᵀ, HAᵀ_new)`` (§4.3), which is also the
+incremental one-sided view at the core of DID (Gao & Chu 2018).  The
+``fold`` closure comes from ``core.algorithms.make_fold_in`` so serving
+reuses the training update rules verbatim (BPP exact, HALS/MU iterated).
+
+The cross-product ``R`` is the only operation touching request data, and it
+routes through the same local-compute layer training uses:
+
+  * dense rows    → any ``repro.backends.LocalOps`` backend (``mm``);
+  * sparse rows   → ``core.blocksparse`` SpMM via ``SparseOps`` (a 1×1-grid
+    ``BlockCOO`` built from the request's triplets inside jit), so
+    bag-of-words queries never densify.
+
+**Bucketing — the no-retrace contract.**  Request batches vary in size; jit
+specialises on shape.  ``FoldInProjector`` therefore pads every batch up to
+a fixed ladder of bucket sizes (and, for sparse input, pads nnz to a
+power-of-two ladder), so after one warm-up pass per bucket NO request ever
+recompiles — ``compile_count`` exposes the jit cache sizes and the test
+suite asserts it stays flat under varying batch sizes.  Padding rows are
+all-zero, which every fold rule maps to x = 0 (sliced off before return).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import backends as _backends
+from repro.backends.sparse import SparseOps, _is_bcoo
+from repro.core import algorithms, blocksparse
+from repro.serve.artifact import FactorArtifact, _gram_fp32
+
+#: nnz padding floor for sparse requests (keeps the shape ladder short)
+_MIN_NNZ_BUCKET = 64
+
+
+def default_buckets(max_batch: int) -> tuple[int, ...]:
+    """Power-of-two ladder 1, 2, 4, … capped at (and including) max_batch."""
+    out, b = [], 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    return tuple(out) + (max_batch,)
+
+
+class FoldInProjector:
+    """Batched NNLS projection of new rows against a fixed trained factor.
+
+    >>> art = FactorArtifact.load("artifacts/topics")
+    >>> proj = FoldInProjector(art, max_batch=64)
+    >>> X = proj.project(new_rows)        # (b, n) dense or BCOO -> (b, k)
+
+    ``factor`` is a ``FactorArtifact`` or a raw (k, n) array (the fixed
+    factor itself — pass ``W.T`` to fold new *columns* of A, e.g. unseen
+    documents of a vocab×docs matrix).  ``backend`` computes the dense-row
+    cross product (any LocalOps name/instance; a ``SparseOps`` instance
+    instead configures the sparse path).  ``iters`` bounds the HALS/MU
+    fold iterations (ignored by exact BPP).
+    """
+
+    def __init__(self, factor, *, algo: str | None = None,
+                 backend: "_backends.BackendSpec | None" = None,
+                 iters: int = 100, max_batch: int = 256,
+                 buckets: tuple[int, ...] | None = None):
+        if isinstance(factor, FactorArtifact):
+            H = jnp.asarray(factor.H)
+            algo = algo or factor.algo
+            G = jnp.asarray(factor.gram, jnp.float32)
+        else:
+            H = jnp.asarray(factor)
+            if H.ndim != 2:
+                raise ValueError(f"fixed factor must be (k, n), got shape "
+                                 f"{H.shape}")
+            algo = algo or "bpp"
+            G = _gram_fp32(H)
+        self.algo = algo
+        self.k, self.n = H.shape
+        self.Ht = H.T                        # (n, k) — the mm operand
+        self.G = G
+        self._fold = algorithms.make_fold_in(algo, iters=iters)
+
+        ops = _backends.get_backend(backend if backend is not None
+                                    else "dense")
+        if isinstance(ops, SparseOps):
+            if ops.spmm_impl == "sorted":
+                raise ValueError(
+                    "fold-in builds the request BlockCOO inside jit, where "
+                    "the host-side sort_rows preprocessing cannot run — use "
+                    "spmm_impl='auto'/'scatter'/'pallas' for serving")
+            self._dense_ops = _backends.get_backend("dense")
+            self._sparse_ops = ops
+        else:
+            self._dense_ops = ops
+            self._sparse_ops = SparseOps()
+
+        self.max_batch = int(max_batch)
+        self.buckets = tuple(sorted(set(buckets or
+                                        default_buckets(self.max_batch))))
+        if self.buckets[-1] < self.max_batch:
+            raise ValueError(f"largest bucket {self.buckets[-1]} < "
+                             f"max_batch {self.max_batch}")
+
+        # One jitted callable per input kind; shape bucketing bounds the jit
+        # cache to len(buckets) (dense) / bucket-ladder × nnz-ladder (sparse,
+        # via the per-bucket closures of _sparse_calls).
+        self._dense_jit = jax.jit(self._dense_impl)
+        self._sparse_cache: dict[int, "jax.stages.Wrapped"] = {}
+
+    # -- compiled bodies ----------------------------------------------------
+
+    def _dense_impl(self, rows, Ht, G):
+        R = self._dense_ops.mm(rows, Ht)          # (B, k) fp32 accumulate
+        return self._fold(G, R)
+
+    # -- bucketing ----------------------------------------------------------
+
+    def _bucket(self, b: int) -> int:
+        if b <= 0:
+            raise ValueError(f"empty request batch (b={b})")
+        if b > self.buckets[-1]:
+            raise ValueError(f"batch of {b} rows exceeds max_batch="
+                             f"{self.buckets[-1]}; split the request or "
+                             f"raise max_batch")
+        return next(s for s in self.buckets if s >= b)
+
+    @staticmethod
+    def _nnz_bucket(nnz: int) -> int:
+        b = _MIN_NNZ_BUCKET
+        while b < nnz:
+            b *= 2
+        return b
+
+    # -- public API ---------------------------------------------------------
+
+    def project(self, rows) -> jax.Array:
+        """Latent codes (b, k) fp32 for a (b, n) batch of rows — a dense
+        array (jax/numpy) or a sparse BCOO / 1×1-grid BlockCOO."""
+        if _is_bcoo(rows):
+            return self._project_bcoo(rows.shape, np.asarray(rows.indices),
+                                      np.asarray(rows.data))
+        if isinstance(rows, blocksparse.BlockCOO):
+            if rows.grid != (1, 1):
+                raise ValueError("fold-in takes a 1×1-grid BlockCOO (a "
+                                 "request batch is not distributed)")
+            idx = np.stack([np.asarray(rows.rows).reshape(-1),
+                            np.asarray(rows.cols).reshape(-1)], axis=1)
+            return self._project_bcoo(rows.shape, idx,
+                                      np.asarray(rows.vals).reshape(-1))
+        rows = jnp.asarray(rows)
+        if rows.ndim == 1:
+            rows = rows[None, :]
+        b, n = rows.shape
+        if n != self.n:
+            raise ValueError(f"rows have {n} features, factor has {self.n}")
+        B = self._bucket(b)
+        if B != b:
+            rows = jnp.pad(rows, ((0, B - b), (0, 0)))
+        return self._dense_jit(rows, self.Ht, self.G)[:b]
+
+    def _project_bcoo(self, shape, indices, data) -> jax.Array:
+        b, n = shape
+        if n != self.n:
+            raise ValueError(f"rows have {n} features, factor has {self.n}")
+        B = self._bucket(b)
+        L = self._nnz_bucket(len(data))
+        vals = np.zeros(L, dtype=np.asarray(data).dtype)
+        rix = np.zeros(L, dtype=np.int32)
+        cix = np.zeros(L, dtype=np.int32)
+        vals[:len(data)] = data
+        rix[:len(data)] = indices[:, 0]
+        cix[:len(data)] = indices[:, 1]
+        call = self._sparse_calls(B)
+        return call(jnp.asarray(vals), jnp.asarray(rix), jnp.asarray(cix),
+                    self.Ht, self.G)[:b]
+
+    def _sparse_calls(self, bucket: int):
+        """The sparse jitted body needs the padded row count as a STATIC
+        value (it sizes the scatter output); close over it per bucket so the
+        flat triplet leaves stay dynamic and only (bucket, nnz-bucket)
+        pairs ever compile."""
+        if bucket in self._sparse_cache:
+            return self._sparse_cache[bucket]
+
+        fold, sops, n = self._fold, self._sparse_ops, self.n
+
+        def body(vals, rix, cix, Ht, G):
+            blk = blocksparse.BlockCOO(
+                vals=vals.reshape(1, 1, -1), rows=rix.reshape(1, 1, -1),
+                cols=cix.reshape(1, 1, -1), shape=(bucket, n),
+                block_shape=(bucket, n), nnz=int(vals.shape[0]))
+            R = sops.mm(blk, Ht)
+            return fold(G, R)
+
+        self._sparse_cache[bucket] = jax.jit(body)
+        return self._sparse_cache[bucket]
+
+    # -- observability ------------------------------------------------------
+
+    @property
+    def compile_count(self) -> int:
+        """Total jit compilations so far (dense + sparse paths).  Flat
+        after one warm-up pass per bucket — the serving no-retrace
+        invariant the tests assert."""
+        count = self._dense_jit._cache_size()
+        for fn in self._sparse_cache.values():
+            count += fn._cache_size()
+        return count
+
+    def warmup(self, *, dense: bool = True, sparse: bool = False,
+               nnz_per_row: int = 4) -> int:
+        """Compile every bucket ahead of traffic; returns compile_count.
+
+        ``nnz_per_row`` declares the DENSEST sparse request expected (per
+        padded row); every nnz bucket of the ladder up to that density is
+        compiled for every batch bucket, so the no-retrace contract covers
+        any later sparse request with ≤ bucket · nnz_per_row nonzeros.
+        Sparser-than-declared requests are always covered (the ladder
+        starts at its floor); denser ones compile on first sight.
+        """
+        rng = np.random.RandomState(0)
+        from jax.experimental import sparse as jsparse
+        for B in self.buckets:
+            if dense:
+                self.project(jnp.asarray(
+                    rng.rand(B, self.n).astype(np.float32)))
+            if sparse:
+                top = self._nnz_bucket(max(B * nnz_per_row, 1))
+                L = _MIN_NNZ_BUCKET
+                while L <= top:
+                    # exactly L triplets (duplicates are fine under
+                    # scatter-add) pins this rung of the nnz ladder
+                    idx = np.stack([rng.randint(0, B, L),
+                                    rng.randint(0, self.n, L)], axis=1)
+                    self.project(jsparse.BCOO(
+                        (jnp.asarray(rng.rand(L).astype(np.float32)),
+                         jnp.asarray(idx.astype(np.int32))),
+                        shape=(B, self.n)))
+                    L *= 2
+        jax.block_until_ready(self.G)
+        return self.compile_count

@@ -1,0 +1,145 @@
+"""Top-k retrieval over trained factors: nearest rows of W to a query's
+latent code, scored in the k-dim space.
+
+The naive score between a query's reconstruction ``x H`` and row i's
+reconstruction ``w_i H`` is an n-length inner product; with the precomputed
+Gram ``G = HHᵀ`` it collapses to the k-dim form
+
+    ⟨w_i H, x H⟩ = w_i G xᵀ            (the Gram trick)
+
+so queries are transformed ONCE (``q̃ = x G``, k² flops) and every row score
+is a k-length dot — n never appears in the request path.  ``gram=None``
+scores directly in latent space (plain ⟨w_i, x⟩ / cosine over codes).
+
+W streams through fixed memory: rows are scanned in ``chunk``-row tiles
+(pad tile masked to -inf) while a running (b, k) top-k set is merged per
+tile with ``lax.top_k`` — millions of rows never materialise more than one
+(b, chunk) score block.  The scan compiles once per (W shape, query bucket);
+reuse one ``TopK`` instance per artifact so the jit cache stays warm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.serve.artifact import FactorArtifact
+
+_NEG = -jnp.inf
+_EPS = 1e-12
+
+METRICS = ("dot", "cosine")
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "chunk"))
+def _topk_scan(W, Wn, Q, qnorm, *, k: int, metric: str, chunk: int):
+    m, kl = W.shape
+    b = Q.shape[0]
+    pad = (-m) % chunk
+    Wp = jnp.pad(W, ((0, pad), (0, 0)))
+    Wnp = jnp.pad(Wn, (0, pad), constant_values=1.0)
+    nchunks = Wp.shape[0] // chunk
+    Wc = Wp.reshape(nchunks, chunk, kl)
+    Wnc = Wnp.reshape(nchunks, chunk)
+    base = jnp.arange(nchunks) * chunk
+
+    def body(carry, tile):
+        vals, idx = carry
+        C, cn, start = tile
+        s = jax.lax.dot_general(
+            Q, C, dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (b, chunk)
+        if metric == "cosine":
+            s = s / (jnp.maximum(cn, _EPS)[None, :] * qnorm[:, None])
+        gidx = start + jnp.arange(chunk)
+        s = jnp.where((gidx < m)[None, :], s, _NEG)        # mask pad rows
+        cand_v = jnp.concatenate([vals, s], axis=1)
+        cand_i = jnp.concatenate(
+            [idx, jnp.broadcast_to(gidx[None, :], (b, chunk))], axis=1)
+        vals, pos = jax.lax.top_k(cand_v, k)
+        idx = jnp.take_along_axis(cand_i, pos, axis=1)
+        return (vals, idx), None
+
+    init = (jnp.full((b, k), _NEG, jnp.float32),
+            jnp.full((b, k), -1, jnp.int32))
+    (vals, idx), _ = jax.lax.scan(body, init, (Wc, Wnc, base))
+    return vals, idx
+
+
+@functools.partial(jax.jit, static_argnames=("use_gram",))
+def _row_norms(W, G, *, use_gram: bool):
+    """‖w_i H‖ per row via the Gram (√(w_i G w_iᵀ)), or latent ‖w_i‖.
+    m·k² once per (W, G) — precompute and reuse across queries (TopK
+    caches it); recomputing this inside the query scan would dominate the
+    request path."""
+    Wf = W.astype(jnp.float32)
+    base = jnp.sum((Wf @ G) * Wf, axis=1) if use_gram \
+        else jnp.sum(Wf * Wf, axis=1)
+    return jnp.sqrt(jnp.maximum(base, 0.0))
+
+
+def topk_rows(W, queries, *, k: int = 10, gram=None, metric: str = "dot",
+              chunk: int = 4096, row_norms=None):
+    """Top-k rows of ``W`` (m, kl) for latent queries (b, kl).
+
+    Returns ``(scores, indices)``, both (b, k), scores descending per query.
+    ``gram`` switches on reconstruction-space scoring (pass the artifact's
+    ``HHᵀ``); ``metric="cosine"`` normalises by both row and query norms in
+    the same space — pass the precomputed ``row_norms`` (m,) when W is
+    fixed across queries (``TopK`` does) so the m·k² norm pass leaves the
+    request path.  ``chunk`` bounds resident memory at b×chunk scores.
+    """
+    if metric not in METRICS:
+        raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
+    W = jnp.asarray(W)
+    Q = jnp.asarray(queries)
+    if Q.ndim == 1:
+        Q = Q[None, :]
+    if W.shape[1] != Q.shape[1]:
+        raise ValueError(f"W has latent dim {W.shape[1]}, queries "
+                         f"{Q.shape[1]}")
+    if k > W.shape[0]:
+        raise ValueError(f"k={k} exceeds the {W.shape[0]} rows of W")
+    use_gram = gram is not None
+    G = (jnp.asarray(gram, jnp.float32) if use_gram
+         else jnp.eye(W.shape[1], dtype=jnp.float32))
+    Qf = Q.astype(jnp.float32)
+    Qt = Qf @ G if use_gram else Qf            # transform queries once
+    if metric == "cosine":
+        if row_norms is None:
+            row_norms = _row_norms(W, G, use_gram=use_gram)
+        Wn = jnp.asarray(row_norms, jnp.float32)
+        if Wn.shape != (W.shape[0],):
+            raise ValueError(f"row_norms must be ({W.shape[0]},), got "
+                             f"{Wn.shape}")
+        qsq = jnp.sum(Qt * Qf, axis=1)
+        qnorm = jnp.maximum(jnp.sqrt(jnp.maximum(qsq, 0.0)), _EPS)
+    else:
+        Wn = jnp.ones((W.shape[0],), jnp.float32)
+        qnorm = jnp.ones((Q.shape[0],), jnp.float32)
+    chunk = int(min(chunk, max(W.shape[0], 1)))
+    return _topk_scan(W.astype(jnp.float32), Wn, Qt, qnorm, k=k,
+                      metric=metric, chunk=chunk)
+
+
+class TopK:
+    """Retrieval handle bound to one artifact: ``TopK(art).query(X, k=5)``
+    scores against ``art.W`` with the artifact's Gram (reconstruction
+    space).  Precomputes what is fixed per artifact — for cosine, the
+    (m,) row-norm vector — so a query is purely the k-dim scores + merge."""
+
+    def __init__(self, artifact: FactorArtifact, *, metric: str = "cosine",
+                 chunk: int = 4096):
+        self.W = jnp.asarray(artifact.W)
+        self.gram = jnp.asarray(artifact.gram, jnp.float32)
+        self.metric = metric
+        self.chunk = chunk
+        self.row_norms = (_row_norms(self.W, self.gram, use_gram=True)
+                          if metric == "cosine" else None)
+
+    def query(self, latent_codes, *, k: int = 10):
+        return topk_rows(self.W, latent_codes, k=k, gram=self.gram,
+                         metric=self.metric, chunk=self.chunk,
+                         row_norms=self.row_norms)

@@ -1,9 +1,11 @@
 """Execute the documentation's code examples — doctest-style.
 
-docs/backends.md promises that every fenced ``python`` block on the page
-runs verbatim; this test keeps that promise by extracting the blocks in
-order and executing them in one shared namespace (so later blocks see the
-earlier definitions, exactly as a reader following along would).
+Every documented page promises that each fenced ``python`` block runs
+verbatim; this test keeps that promise by extracting the blocks in order
+and executing them in one shared namespace per page (so later blocks see
+the earlier definitions, exactly as a reader following along would).  Each
+page names a marker string its final example prints, sanity-checking that
+the examples actually computed something.
 """
 
 import re
@@ -14,6 +16,12 @@ import pytest
 DOCS = Path(__file__).resolve().parent.parent / "docs"
 _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 
+#: page -> substring its executed examples must print
+PAGES = {
+    "backends.md": "final rel err:",
+    "serving.md": "held-out rel err:",
+}
+
 
 def _blocks(page: str) -> list[str]:
     text = (DOCS / page).read_text()
@@ -22,8 +30,15 @@ def _blocks(page: str) -> list[str]:
     return blocks
 
 
-@pytest.mark.parametrize("page", ["backends.md"])
-def test_docs_examples_execute(page, capsys):
+def test_every_docs_page_is_covered():
+    missing = {p.name for p in DOCS.glob("*.md")
+               if _FENCE.search(p.read_text())} - set(PAGES)
+    assert not missing, f"docs pages with unexecuted python blocks: {missing}"
+
+
+@pytest.mark.parametrize("page", sorted(PAGES))
+def test_docs_examples_execute(page, capsys, tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)          # pages may write artifacts
     ns: dict = {"__name__": f"docs_{page.removesuffix('.md')}"}
     for i, block in enumerate(_blocks(page)):
         try:
@@ -31,6 +46,5 @@ def test_docs_examples_execute(page, capsys):
         except Exception as e:      # pragma: no cover - failure reporting
             pytest.fail(f"{page} code block {i} raised {type(e).__name__}: "
                         f"{e}\n---\n{block}")
-    # the guide's final example prints the converged error — sanity-check it
     out = capsys.readouterr().out
-    assert "final rel err:" in out
+    assert PAGES[page] in out

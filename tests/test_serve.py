@@ -1,0 +1,329 @@
+"""The serving subsystem: factor artifacts, online fold-in, top-k
+retrieval, and the microbatching front-end.
+
+The load-bearing checks:
+  * fold-in correctness — folding TRAINING rows of A back in with the
+    trained H recovers the corresponding W rows (all three algorithms,
+    dense and sparse inputs; exact-NNLS algorithms tightly, MU to its
+    stationary tolerance);
+  * batched-BPP parity — one batched solve equals per-row solves;
+  * the serving no-retrace invariant — after one warm-up pass per bucket,
+    varying request batch sizes never recompile (jit compilation-count
+    check, the ISSUE acceptance criterion).
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import sparse as jsparse
+
+from repro.core.engine import NMFSolver
+from repro.data.pipeline import lowrank_matrix
+from repro.serve.artifact import FactorArtifact
+from repro.serve.batcher import MicroBatcher
+from repro.serve.foldin import FoldInProjector, default_buckets
+from repro.serve.topk import TopK, topk_rows
+
+KEY = jax.random.PRNGKey(0)
+M, N, K = 96, 64, 6
+A = lowrank_matrix(KEY, M, N, K, noise=0.0)          # exactly rank-K
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """One converged fit per algorithm (module-scoped: training dominates
+    this file's runtime)."""
+    out = {}
+    for algo in ("mu", "hals", "bpp"):
+        out[algo] = NMFSolver(K, algo=algo, max_iters=400, tol=1e-5) \
+            .fit(A, key=KEY)
+    return out
+
+
+def _recon_rel_err(rows, X, H):
+    R = np.asarray(rows, np.float32)
+    D = R - np.asarray(X, np.float32) @ np.asarray(H, np.float32)
+    return np.linalg.norm(D) / np.linalg.norm(R)
+
+
+# ------------------------------------------------------------- artifact --
+
+def test_artifact_roundtrip(tmp_path, trained):
+    res = trained["bpp"]
+    art = FactorArtifact.from_result(res, corpus="unit-test")
+    assert art.k == K and art.shape == (M, N)
+    np.testing.assert_allclose(np.asarray(art.gram),
+                               np.asarray(res.H @ res.H.T), atol=1e-4)
+    path = art.save(str(tmp_path / "art"))
+    loaded = FactorArtifact.load(path)
+    np.testing.assert_array_equal(np.asarray(loaded.W), np.asarray(res.W))
+    np.testing.assert_array_equal(np.asarray(loaded.H), np.asarray(res.H))
+    np.testing.assert_array_equal(np.asarray(loaded.gram),
+                                  np.asarray(art.gram))
+    assert loaded.algo == "bpp"
+    assert loaded.meta["corpus"] == "unit-test"
+    assert loaded.meta["iters"] == res.iters          # provenance survives
+    # NMFResult convenience wrapper writes the identical payload
+    p2 = res.save_artifact(str(tmp_path / "art2"))
+    np.testing.assert_array_equal(
+        np.asarray(FactorArtifact.load(p2).W), np.asarray(res.W))
+
+
+def test_artifact_rejects_foreign_payload(tmp_path):
+    from repro.checkpoint.checkpoint import write_payload
+    p = write_payload(str(tmp_path / "ckpt"), {"x": np.zeros(3)},
+                      {"step": 0})
+    with pytest.raises(ValueError, match="format"):
+        FactorArtifact.load(p)
+
+
+def test_artifact_atomic_overwrite(tmp_path, trained):
+    """Re-publishing over an existing artifact replaces it atomically."""
+    art = FactorArtifact.from_result(trained["bpp"])
+    path = art.save(str(tmp_path / "art"))
+    art2 = FactorArtifact.from_factors(art.W + 1.0, art.H, algo="bpp")
+    art2.save(path)
+    np.testing.assert_array_equal(np.asarray(FactorArtifact.load(path).W),
+                                  np.asarray(art2.W))
+
+
+def test_artifact_transposed_folds_columns(trained):
+    """transposed() serves column fold-in (new documents of a vocab×docs
+    matrix): projecting A's columns against W recovers H columns."""
+    res = trained["bpp"]
+    proj = FoldInProjector(FactorArtifact.from_result(res).transposed())
+    cols = jnp.asarray(A).T[:10]                      # (10, M) = Aᵀ rows
+    X = proj.project(cols)
+    np.testing.assert_allclose(np.asarray(X),
+                               np.asarray(res.H).T[:10], atol=5e-3)
+
+
+# -------------------------------------------------------------- fold-in --
+
+@pytest.mark.parametrize("algo,row_atol", [("bpp", 5e-3), ("hals", 5e-3),
+                                           ("mu", 5e-2)])
+@pytest.mark.parametrize("sparse", [False, True], ids=["dense", "sparse"])
+def test_foldin_recovers_training_rows(trained, algo, row_atol, sparse):
+    """Folding training rows back in with the trained H must recover the
+    corresponding W rows: exactly-solving algorithms (BPP; HALS iterated to
+    convergence) tightly, MU to its stationary tolerance — and the fold-in
+    reconstruction must be at least as good as the trained rows'."""
+    res = trained[algo]
+    art = FactorArtifact.from_result(res)
+    proj = FoldInProjector(art, iters=300, max_batch=32)
+    rows = jnp.asarray(A)[:24]
+    X = proj.project(jsparse.BCOO.fromdense(rows) if sparse else rows)
+    W24 = np.asarray(res.W)[:24]
+    scale = np.abs(W24).max()
+    np.testing.assert_allclose(np.asarray(X), W24,
+                               atol=row_atol * max(scale, 1.0))
+    assert _recon_rel_err(rows, X, res.H) <= \
+        _recon_rel_err(rows, W24, res.H) * 1.05 + 1e-5
+
+
+def test_foldin_sparse_matches_dense_path(trained):
+    """The SpMM cross-product and the dense GEMM must agree on the same
+    request (fp32 scatter-add vs dot_general)."""
+    proj = FoldInProjector(FactorArtifact.from_result(trained["bpp"]))
+    rows = jnp.asarray(A)[:7]
+    Xd = proj.project(rows)
+    Xs = proj.project(jsparse.BCOO.fromdense(rows))
+    np.testing.assert_allclose(np.asarray(Xs), np.asarray(Xd), atol=1e-4)
+
+
+def test_batched_bpp_matches_per_row_reference(trained):
+    """One batched SolveBPP(G, R) call must equal solving each row alone."""
+    from repro.core.bpp import solve_bpp
+    art = FactorArtifact.from_result(trained["bpp"])
+    G = jnp.asarray(art.gram, jnp.float32)
+    R = jnp.asarray(A)[:17] @ jnp.asarray(art.H).T
+    batched = solve_bpp(G, R)
+    per_row = jnp.concatenate([solve_bpp(G, R[i:i + 1])
+                               for i in range(R.shape[0])], axis=0)
+    np.testing.assert_allclose(np.asarray(batched), np.asarray(per_row),
+                               atol=1e-5)
+
+
+def test_foldin_raw_factor_and_validation(trained):
+    res = trained["bpp"]
+    # raw (k, n) factor instead of an artifact
+    proj = FoldInProjector(jnp.asarray(res.H), algo="bpp")
+    np.testing.assert_allclose(
+        np.asarray(proj.project(jnp.asarray(A)[:4])),
+        np.asarray(res.W)[:4], atol=5e-3)
+    with pytest.raises(ValueError, match="features"):
+        proj.project(jnp.ones((2, N + 1)))
+    with pytest.raises(ValueError, match="max_batch"):
+        FoldInProjector(res.H, max_batch=8).project(jnp.ones((9, N)))
+    with pytest.raises(ValueError, match="k, n"):
+        FoldInProjector(jnp.ones((3,)))
+    with pytest.raises(ValueError, match="sort_rows"):
+        from repro.backends import SparseOps
+        FoldInProjector(res.H, backend=SparseOps(spmm_impl="sorted"))
+
+
+# ------------------------------------------- the no-retrace invariant --
+
+def test_foldin_no_retrace_across_batch_sizes(trained):
+    """THE serving acceptance check: after one warm-up pass per bucket,
+    requests of any batch size ≤ max_batch must hit the jit cache — the
+    compilation count stays exactly flat (dense AND sparse paths)."""
+    proj = FoldInProjector(FactorArtifact.from_result(trained["bpp"]),
+                           max_batch=32)
+    assert proj.buckets == default_buckets(32) == (1, 2, 4, 8, 16, 32)
+    warm = proj.warmup(dense=True, sparse=True, nnz_per_row=4)
+    assert warm == proj.compile_count > 0
+    rng = np.random.RandomState(0)
+    for b in [1, 3, 5, 8, 13, 21, 32, 2, 31]:
+        proj.project(jnp.asarray(rng.rand(b, N).astype(np.float32)))
+    assert proj.compile_count == warm, "dense fold-in retraced after warmup"
+    for b, nnz in [(1, 1), (4, 13), (9, 2), (17, 68), (32, 128), (32, 5),
+                   (31, 90)]:
+        # any nnz up to bucket(b) * nnz_per_row is inside the warmed
+        # ladder — warmup compiles EVERY rung up to the declared density
+        assert nnz <= proj._bucket(b) * 4
+        idx = np.stack([rng.randint(0, b, nnz),
+                        rng.randint(0, N, nnz)], axis=1).astype(np.int32)
+        mat = jsparse.BCOO((jnp.asarray(rng.rand(nnz).astype(np.float32)),
+                            jnp.asarray(idx)), shape=(b, N))
+        proj.project(mat)
+    assert proj.compile_count == warm, "sparse fold-in retraced after warmup"
+
+
+def test_foldin_bucket_padding_is_invisible(trained):
+    """A padded batch must return exactly what the unpadded rows get in a
+    full bucket (zero rows fold to zero and are sliced off)."""
+    proj = FoldInProjector(FactorArtifact.from_result(trained["bpp"]),
+                           max_batch=16)
+    rows = jnp.asarray(A)[:16]
+    full = proj.project(rows)                         # exact-bucket batch
+    part = proj.project(rows[:5])                     # padded 5 -> 8
+    # tolerance: different batch shapes change the GEMM reduction order,
+    # and the NNLS solve amplifies those last-ulp differences slightly
+    np.testing.assert_allclose(np.asarray(part), np.asarray(full)[:5],
+                               atol=1e-4)
+
+
+# ----------------------------------------------------------------- topk --
+
+def _np_scores(W, X, G, metric):
+    W = np.asarray(W, np.float32)
+    X = np.asarray(X, np.float32)
+    G = np.eye(W.shape[1], dtype=np.float32) if G is None \
+        else np.asarray(G, np.float32)
+    s = X @ G @ W.T
+    if metric == "cosine":
+        wn = np.sqrt(np.maximum(np.sum((W @ G) * W, axis=1), 0.0))
+        qn = np.sqrt(np.maximum(np.sum((X @ G) * X, axis=1), 0.0))
+        s = s / np.maximum(wn, 1e-12)[None, :] / np.maximum(qn, 1e-12)[:, None]
+    return s
+
+
+@pytest.mark.parametrize("metric", ["dot", "cosine"])
+@pytest.mark.parametrize("use_gram", [True, False], ids=["gram", "latent"])
+def test_topk_matches_dense_reference(metric, use_gram):
+    rng = np.random.RandomState(3)
+    W = jnp.asarray(rng.rand(257, 5).astype(np.float32))   # odd m: pad path
+    X = jnp.asarray(rng.rand(4, 5).astype(np.float32))
+    G = jnp.asarray(rng.rand(5, 5).astype(np.float32))
+    G = G @ G.T                                             # PSD like HHᵀ
+    vals, idx = topk_rows(W, X, k=7, gram=G if use_gram else None,
+                          metric=metric, chunk=64)          # chunk < m
+    ref = _np_scores(W, X, G if use_gram else None, metric)
+    order = np.argsort(-ref, axis=1)[:, :7]
+    np.testing.assert_array_equal(np.asarray(idx), order)
+    np.testing.assert_allclose(
+        np.asarray(vals), np.take_along_axis(ref, order, axis=1), atol=1e-4)
+
+
+def test_topk_streams_any_chunking():
+    """Chunk size must not change results (fixed-memory streaming merge)."""
+    rng = np.random.RandomState(4)
+    W = jnp.asarray(rng.rand(100, 4).astype(np.float32))
+    X = jnp.asarray(rng.rand(3, 4).astype(np.float32))
+    ref_v, ref_i = topk_rows(W, X, k=5, chunk=100)
+    for chunk in (1, 7, 32, 4096):                    # incl. chunk > m
+        v, i = topk_rows(W, X, k=5, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+        np.testing.assert_allclose(np.asarray(v), np.asarray(ref_v),
+                                   atol=1e-5)
+
+
+def test_topk_handle_and_self_retrieval(trained):
+    """Served end to end: a training row's latent code must retrieve that
+    row of W as its own cosine nearest neighbour."""
+    res = trained["bpp"]
+    art = FactorArtifact.from_result(res)
+    codes = FoldInProjector(art).project(jnp.asarray(A)[:8])
+    vals, idx = TopK(art, metric="cosine", chunk=32).query(codes, k=3)
+    assert np.array_equal(np.asarray(idx)[:, 0], np.arange(8))
+    assert np.all(np.asarray(vals)[:, 0] > 0.999)     # cosine with itself
+    with pytest.raises(ValueError, match="exceeds"):
+        topk_rows(res.W, codes, k=M + 1)
+    with pytest.raises(ValueError, match="metric"):
+        topk_rows(res.W, codes, metric="euclid")
+
+
+# -------------------------------------------------------------- batcher --
+
+def test_batcher_coalesces_and_returns_per_request(trained):
+    proj = FoldInProjector(FactorArtifact.from_result(trained["bpp"]),
+                           max_batch=32)
+    proj.warmup()
+    rows = np.asarray(A)[:24]
+    direct = np.asarray(proj.project(jnp.asarray(rows)))
+    with MicroBatcher(proj.project, max_batch=32, max_delay_s=0.25) as mb:
+        futs = [mb.submit(rows[i]) for i in range(24)]
+        got = np.stack([f.result(timeout=30) for f in futs])
+    np.testing.assert_allclose(got, direct, atol=1e-4)
+    stats = mb.stats
+    assert stats.requests == 24
+    assert stats.max_batch_seen >= 2, "no coalescing happened"
+    assert stats.max_batch_seen <= 32
+
+
+def test_batcher_concurrent_submitters(trained):
+    art = FactorArtifact.from_result(trained["bpp"])
+    proj = FoldInProjector(art, max_batch=16)
+    proj.warmup()
+    rows = np.asarray(A)
+    direct = np.asarray(FoldInProjector(art, max_batch=M)
+                        .project(jnp.asarray(rows)))
+    results = {}
+    with MicroBatcher(proj.project, max_batch=16, max_delay_s=0.05) as mb:
+        def client(lo, hi):
+            futs = [(i, mb.submit(rows[i])) for i in range(lo, hi)]
+            for i, f in futs:
+                results[i] = f.result(timeout=30)
+        threads = [threading.Thread(target=client, args=(lo, lo + 24))
+                   for lo in (0, 24, 48)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert sorted(results) == list(range(72))
+    np.testing.assert_allclose(np.stack([results[i] for i in range(72)]),
+                               direct[:72], atol=1e-4)
+    assert mb.stats.requests == 72
+
+
+def test_batcher_delivers_exceptions_and_recovers():
+    calls = []
+
+    def flaky(batch):
+        calls.append(len(batch))
+        if len(calls) == 1:
+            raise RuntimeError("boom")
+        return np.asarray(batch) * 2.0
+
+    with MicroBatcher(flaky, max_batch=4, max_delay_s=0.02) as mb:
+        bad = mb.submit(np.ones(3))
+        with pytest.raises(RuntimeError, match="boom"):
+            bad.result(timeout=10)
+        ok = mb.submit(np.ones(3))
+        np.testing.assert_allclose(ok.result(timeout=10), 2 * np.ones(3))
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit(np.ones(3))

@@ -223,6 +223,38 @@ def test_sort_rows_single_orientation():
         blocksparse.local_spmm(cols_only, B, impl="sorted")
 
 
+def test_blockify_for_prunes_unused_orientation():
+    """The naive schedule's product hint must reach sort_rows(orient=...):
+    a copy promised to only run mm stores no transposed arrays (and vice
+    versa), while the default / both-products path keeps both — and the
+    one-orientation copies still produce correct products."""
+    from repro.backends import DenseOps, SparseOps
+    Ad = erdos_renyi_matrix(jax.random.PRNGKey(11), 32, 24, 0.2)
+    ops = SparseOps(spmm_impl="sorted", align=SORT_ALIGN)
+    row_copy = ops.blockify_for(Ad, 2, 1, products=("mm",))
+    col_copy = ops.blockify_for(Ad, 1, 2, products=("mm_t",))
+    both = ops.blockify_for(Ad, 2, 2)
+    assert row_copy.has_sorted_rows and not row_copy.has_sorted_cols
+    assert col_copy.has_sorted_cols and not col_copy.has_sorted_rows
+    assert both.is_sorted
+    with pytest.raises(ValueError, match="products"):
+        ops.blockify_for(Ad, 1, 1, products=("gram",))
+    # dense backends ignore the hint (delegates to plain blockify)
+    np.testing.assert_array_equal(
+        np.asarray(DenseOps().blockify_for(Ad, 2, 1, products=("mm",))),
+        np.asarray(Ad))
+    # the engine feeds the hint from the naive schedule; parity holds
+    from repro.core.engine import NMFSolver
+    key = jax.random.PRNGKey(0)
+    ref = NMFSolver(4, algo="mu", schedule="naive",
+                    backend=SparseOps(spmm_impl="scatter"),
+                    max_iters=4).fit(Ad, key=key)
+    got = NMFSolver(4, algo="mu", schedule="naive", backend=ops,
+                    max_iters=4).fit(Ad, key=key)
+    np.testing.assert_allclose(np.asarray(got.rel_errors),
+                               np.asarray(ref.rel_errors), atol=1e-5)
+
+
 def test_pad_nnz_drops_sort_metadata():
     """gspmd's nnz padding breaks the tile-aligned layout, so it must
     strip the sorted fields rather than ship a stale layout."""
