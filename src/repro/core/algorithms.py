@@ -1,26 +1,24 @@
-"""Local Update Computations (LUC) for AU-NMF (paper §4).
+"""Functional compatibility layer over the update-rule plugin API.
 
-Every AU-NMF algorithm updates the factors from the same four matrix
-products.  We express both half-updates in a single "row-factor" convention:
+The algorithm surface lives in ``repro.core.rules``: the ``UpdateRule``
+interface, the ``register_algorithm`` registry, and the built-in rules
+(``mu``, ``hals``, ``bpp``/``abpp``/``anls``, and the Gillis–Glineur
+accelerated ``amu``/``ahals`` — plus anything a project registers).  This
+module re-exports the primitive update computations and keeps the two
+closure-style helpers older call sites and benchmarks use:
 
-    X ∈ R_+^{r×k}  (rows of W, or columns of H transposed)
-    G ∈ R^{k×k}    (Gram of the *fixed* factor: HHᵀ or WᵀW)
-    R ∈ R^{r×k}    (cross product block: (AHᵀ) rows, or (WᵀA)ᵀ rows)
+  * ``get_update_fns(algo)``  → stateless ``(G, R, X) -> X`` closures
+  * ``make_fold_in(algo)``    → a jit-safe serving fold closure
 
-so ``update(G, R, X)`` works unchanged for the W-step and the H-step, and
-unchanged between serial and distributed (shard_map) execution — the paper's
-central design point: LUC is local, only the matrix products communicate.
-
-Implemented algorithms (paper §4.1–4.3):
-  * ``mu``    — Lee & Seung multiplicative update.
-  * ``hals``  — Cichocki et al. hierarchical ALS (sequential column sweep).
-  * ``bpp``   — exact ANLS via block principal pivoting (core/bpp.py).
+Both resolve through the registry, so any registered rule — by name or as
+an ``UpdateRule`` instance — works here too; no algorithm dispatch happens
+in this module.
 
 HALS normalisation: the paper's Algorithm normalises each column of W
 immediately after updating it (the H half-update has no normalisation).  In
 the distributed setting the column norm is a global reduction, which the
-paper charges as the extra ``k·log p`` latency of HALS.  ``hals`` therefore
-takes a ``norm_psum`` callable: identity for serial, ``lax.psum`` over the
+paper charges as the extra ``k·log p`` latency of HALS.  The rules thread a
+``norm_psum`` callable for it: identity for serial, ``lax.psum`` over the
 grid for distributed — keeping serial and distributed bit-identical.
 """
 
@@ -28,63 +26,14 @@ from __future__ import annotations
 
 from typing import Callable
 
-import jax
-import jax.numpy as jnp
+# Re-exported primitives (single numeric implementation, in rules.py).
+from repro.core.rules import (eps_for, update_bpp, update_hals,  # noqa: F401
+                              update_mu)
+from repro.core import rules as _rules
 
-from repro.core.bpp import solve_bpp
-
-_EPS = 1e-16
-
-
-def update_mu(G: jax.Array, R: jax.Array, X: jax.Array) -> jax.Array:
-    """X ← X ⊙ R / (X G + ε)   (paper eq. (3); F = 2rk² flops)."""
-    denom = X @ G + _EPS
-    return X * (R / denom)
-
-
-def update_hals(G: jax.Array, R: jax.Array, X: jax.Array, *,
-                normalize: bool = False,
-                norm_psum: Callable[[jax.Array], jax.Array] = lambda v: v,
-                ) -> jax.Array:
-    """Sequential HALS column sweep (paper eq. (5); F = 2rk² flops).
-
-    W-step (normalize=True):   w^i ← [w^i·G_ii + R^i − X G^i]_+ ;  w^i ← w^i/‖w^i‖
-    H-step (normalize=False):  h_i ← [h_i + (R^i − X G^i)/G_ii]_+
-
-    This is Cichocki & Phan's fast-HALS (their Algorithm 2).  The paper's
-    eq. (5) writes the unscaled form, which is the same rule under its
-    convention that W's columns are unit-normalised after every update
-    (then (WᵀW)_ii = 1); we keep the G_ii factors explicit so the sweep is
-    correct for *any* scaling — including the first iteration, where W is
-    not yet normalised.  Columns are updated in order so later columns see
-    earlier updates — the defining property of HALS as 2k-block BCD.
-    """
-    k = G.shape[0]
-
-    def col(i, X):
-        gii = G[i, i]
-        if normalize:
-            xi = X[:, i] * gii + R[:, i] - X @ G[:, i]
-            xi = jnp.maximum(xi, 0.0)
-            sq = norm_psum(jnp.sum(xi * xi))
-            nrm = jnp.sqrt(sq)
-            # Guard the all-zero column (paper's code resets to machine eps).
-            xi = jnp.where(nrm > 0, xi / jnp.maximum(nrm, _EPS), xi)
-        else:
-            xi = X[:, i] + (R[:, i] - X @ G[:, i]) / jnp.maximum(gii, _EPS)
-            xi = jnp.maximum(xi, 0.0)
-        return X.at[:, i].set(xi)
-
-    return jax.lax.fori_loop(0, k, col, X, unroll=False)
-
-
-def update_bpp(G: jax.Array, R: jax.Array, X: jax.Array, *,
-               max_iter: int | None = None) -> jax.Array:
-    """Exact NLS via block principal pivoting; X is only a shape/dtype hint."""
-    del X  # BPP re-solves from scratch (ANLS is memoryless per half-update)
-    return solve_bpp(G, R, max_iter=max_iter)
-
-
+#: name -> primitive LUC callable, for quick functional access; the full
+#: open set (including accelerated and custom rules) lives in the registry:
+#: ``rules.available_algorithms()``.
 ALGORITHMS: dict[str, Callable] = {
     "mu": update_mu,
     "hals": update_hals,
@@ -92,65 +41,47 @@ ALGORITHMS: dict[str, Callable] = {
 }
 
 
-def make_fold_in(algo: str, *, iters: int = 100,
+def make_fold_in(algo: "_rules.RuleSpec", *, iters: int = 100,
                  max_iter: int | None = None) -> Callable:
-    """Return ``fold(G, R, X0=None) -> X`` projecting rows onto a FIXED factor.
+    """Return ``fold(G, R, X0=None) -> X`` projecting rows onto a FIXED
+    factor — ``rules.get_rule(algo).fold_in`` as a closure.
 
-    Serving fold-in is one half-update of AU-NMF with the trained factor held
-    fixed — the paper's ``SolveBPP(HHᵀ, HAᵀ_new)`` applied to unseen rows:
-    ``G`` is the trained factor's k×k Gram, ``R`` the (rows, k)
-    cross-products, and the result ``X ≥ 0`` minimises ‖a_i − x_i H‖ per
-    row.  BPP solves the NNLS exactly in one call (``core.bpp.solve_bpp``);
-    HALS is iterated ``iters`` coordinate-descent sweeps (converges to the
-    same NNLS solution); MU is iterated ``iters`` multiplicative steps from
-    a strictly positive Jacobi init (R_i / G_ii), since the multiplicative
-    rule is only defined for positive iterates.
-
-    The returned closure is jit-safe: no data-dependent python control flow,
-    so ``repro.serve.foldin`` compiles it once per padded batch bucket.
+    Serving fold-in is one half-update of AU-NMF with the trained factor
+    held fixed — the paper's ``SolveBPP(HHᵀ, HAᵀ_new)`` applied to unseen
+    rows.  Exact rules (BPP) solve in one call; iterative rules run up to
+    ``iters`` sweeps (the accelerated family early-exits on its stall
+    criterion).  ``max_iter`` bounds BPP's pivot rounds.  The returned
+    closure is jit-safe, so ``repro.serve.foldin`` compiles it once per
+    padded batch bucket.
     """
-    algo = algo.lower()
-    if algo in ("bpp", "abpp", "anls"):
-        def fold(G, R, X0=None):
-            del X0          # exact solve, no warm start needed
-            return solve_bpp(G, R, max_iter=max_iter)
-        return fold
-    if algo == "hals":
-        def fold(G, R, X0=None):
-            X = jnp.zeros_like(R) if X0 is None else X0
-            body = lambda _, X: update_hals(G, R, X, normalize=False)
-            return jax.lax.fori_loop(0, iters, body, X)
-        return fold
-    if algo == "mu":
-        def fold(G, R, X0=None):
-            Rp = jnp.maximum(R, 0.0)        # nonneg data ⇒ R ≥ 0 already
-            if X0 is None:
-                d = jnp.maximum(jnp.diag(G), _EPS)
-                X0 = jnp.maximum(Rp / d, _EPS)
-            body = lambda _, X: update_mu(G, Rp, X)
-            return jax.lax.fori_loop(0, iters, body, X0)
-        return fold
-    raise ValueError(f"unknown NMF algorithm {algo!r}; choose from mu|hals|bpp")
+    rule = _rules.get_rule(algo)
+    # Exact-type check: a BPPRule SUBCLASS carries its own configuration
+    # and overrides — rebuild only the plain built-in, never a subclass.
+    if max_iter is not None and type(rule) is _rules.BPPRule:
+        rule = _rules.BPPRule(max_iter=max_iter, l1=rule.l1, l2=rule.l2)
+
+    def fold(G, R, X0=None):
+        return rule.fold_in(G, R, X0, iters=iters)
+
+    return fold
 
 
-def get_update_fns(algo: str, *, norm_psum=lambda v: v):
-    """Returns (update_w, update_h) closures for the chosen algorithm.
+def get_update_fns(algo: "_rules.RuleSpec", *, norm_psum=lambda v: v):
+    """Returns stateless ``(update_w, update_h)`` closures for ``algo``.
 
-    update_w normalises columns under HALS (paper's convention); update_h
-    never does.  Both have signature (G, R, X) -> X_new with X, R of shape
-    (rows, k).
+    update_w normalises columns under the HALS family (paper's convention);
+    update_h never does.  Both have signature (G, R, X) -> X_new with X, R
+    of shape (rows, k).  Rule state is dropped — stateful rules still run
+    correctly (their carried values are diagnostics), but schedules that
+    want the carry should call the rule's ``update_w``/``update_h``
+    directly, as ``core.engine`` does.
     """
-    algo = algo.lower()
-    if algo == "mu":
-        return update_mu, update_mu
-    if algo == "hals":
-        def w_up(G, R, X):
-            return update_hals(G, R, X, normalize=True, norm_psum=norm_psum)
+    rule = _rules.get_rule(algo)
 
-        def h_up(G, R, X):
-            return update_hals(G, R, X, normalize=False)
+    def update_w(G, R, X):
+        return rule.update_w(G, R, X, None, norm_psum=norm_psum)[0]
 
-        return w_up, h_up
-    if algo in ("bpp", "abpp", "anls"):
-        return update_bpp, update_bpp
-    raise ValueError(f"unknown NMF algorithm {algo!r}; choose from mu|hals|bpp")
+    def update_h(G, R, X):
+        return rule.update_h(G, R, X, None, norm_psum=norm_psum)[0]
+
+    return update_w, update_h

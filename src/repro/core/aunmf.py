@@ -49,29 +49,36 @@ def init_h(key: jax.Array, n: int, k: int, dtype=jnp.float32) -> jax.Array:
     return jax.random.uniform(key, (k, n), dtype=dtype)
 
 
-def init_w(key: jax.Array, m: int, k: int, algo: str, dtype=jnp.float32):
-    """W needs no init for HALS/BPP (first update ignores it additively /
-    re-solves); MU is multiplicative so W must start positive (paper's code
-    seeds it uniform as well)."""
-    if algo.lower() == "mu":
+def init_w(key: jax.Array, m: int, k: int, algo, dtype=jnp.float32):
+    """W needs no init for additive / re-solving rules (HALS, BPP, ...);
+    multiplicative rules (the MU family) declare ``positive_init`` and get
+    a strictly positive seed (paper's code seeds it uniform as well).
+    ``algo`` is anything ``rules.get_rule`` resolves — a registered name or
+    an ``UpdateRule`` instance."""
+    from repro.core import rules
+    if rules.get_rule(algo).positive_init:
         return jax.random.uniform(key, (m, k), dtype=dtype, minval=0.1, maxval=1.0)
     return jnp.zeros((m, k), dtype)
 
 
-def aunmf_step(A, W, H, update_w, update_h, normA_sq, *,
-               mm: Callable | None = None, mm_t: Callable | None = None,
-               gram: Callable | None = None):
-    """One full AU-NMF iteration; returns (W, H, sq_error).
+def aunmf_step_rule(A, W, H, rule, state, normA_sq, *,
+                    mm: Callable | None = None, mm_t: Callable | None = None,
+                    gram: Callable | None = None, norm_psum=lambda v: v):
+    """One full AU-NMF iteration through an ``UpdateRule``; returns
+    (W, H, sq_error, state).
 
-    ``mm``/``mm_t``/``gram`` are the ``repro.backends.LocalOps`` local
-    products (``mm(A, B) -> A @ B``, ``mm_t(A, B) -> Aᵀ @ B``,
-    ``gram(X) -> XᵀX``); the engine always supplies them from the selected
-    backend.  None falls back to plain XLA (with the BCOO-aware default for
-    sparse A: (AᵀW)ᵀ keeps A un-transposed) for direct callers.
+    ``rule`` is a ``repro.core.rules.UpdateRule`` and ``state`` its carry
+    pytree (None for stateless rules) — the engine threads it through the
+    compiled loop.  ``mm``/``mm_t``/``gram`` are the
+    ``repro.backends.LocalOps`` local products (``mm(A, B) -> A @ B``,
+    ``mm_t(A, B) -> Aᵀ @ B``, ``gram(X) -> XᵀX``); the engine always
+    supplies them from the selected backend.  None falls back to plain XLA
+    (with the BCOO-aware default for sparse A: (AᵀW)ᵀ keeps A
+    un-transposed) for direct callers.
     """
     HHt = gram(H.T) if gram is not None else H @ H.T
     AHt = mm(A, H.T) if mm is not None else A @ H.T
-    W = update_w(HHt, AHt, W)
+    W, state = rule.update_w(HHt, AHt, W, state, norm_psum=norm_psum)
     WtW = gram(W) if gram is not None else W.T @ W
     if mm_t is not None:
         WtA = mm_t(A, W).T
@@ -79,10 +86,23 @@ def aunmf_step(A, W, H, update_w, update_h, normA_sq, *,
         WtA = W.T @ A
     else:  # BCOO: (Aᵀ W)ᵀ via transposed matvec path
         WtA = (A.T @ W).T
-    Ht = update_h(WtW, WtA.T, H.T)
+    Ht, state = rule.update_h(WtW, WtA.T, H.T, state, norm_psum=norm_psum)
     H = Ht.T
     HHt_new = gram(H.T) if gram is not None else H @ H.T
     sq = sq_error_from_products(normA_sq, WtA, H, WtW, HHt_new)
+    return W, H, sq, state
+
+
+def aunmf_step(A, W, H, update_w, update_h, normA_sq, *,
+               mm: Callable | None = None, mm_t: Callable | None = None,
+               gram: Callable | None = None):
+    """Stateless legacy spelling of ``aunmf_step_rule``: plain
+    ``(G, R, X) -> X`` update closures (e.g. ``algorithms.get_update_fns``
+    output), no rule state; returns (W, H, sq_error)."""
+    from repro.core import rules
+    rule = rules._FunctionRule(update_w, update_h)
+    W, H, sq, _ = aunmf_step_rule(A, W, H, rule, None, normA_sq,
+                                  mm=mm, mm_t=mm_t, gram=gram)
     return W, H, sq
 
 

@@ -1,8 +1,15 @@
 """α-β-γ communication/computation cost model (paper §2.2, §5, Table III).
 
 Costs are per iteration.  ``F(m, n, k)`` is the algorithm-specific LUC flop
-count (paper §4): 2(m+n)k² for MU and HALS; data-dependent O(k³..k⁴) per
-column for BPP — we expose the paper's symbolic form plus an empirical knob.
+count (paper §4), supplied per rule by ``UpdateRule.luc_flops``: 2(m+n)k²
+for MU/HALS (× the inner budget for the accelerated variants);
+data-dependent O(k³..k⁴) per column for BPP — the paper's symbolic form
+plus an empirical knob.  Rules also declare their own collectives via
+``UpdateRule.extra_latency_words`` — the HALS family's per-column norm
+all-reduces are the k·log p latency term of the paper's Table — which the
+distributed schedule costs add on top of the matrix-product collectives.
+``algo`` everywhere accepts a registered name or an ``UpdateRule``
+instance, so custom rules' cost hooks flow through unchanged.
 
 These formulas drive benchmarks/bench_strong_scaling.py (Fig. 5 analog),
 bench_k_sweep.py (Fig. 6) and bench_cost_table.py (Table III), and are
@@ -14,6 +21,8 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+
+from repro.core import rules as _rules
 
 
 @dataclass(frozen=True)
@@ -45,18 +54,12 @@ class Machine:
             self.beta * self.collective_words(kind, n_words, p)
 
 
-def luc_flops(algo: str, m: int, n: int, k: int, *,
+def luc_flops(algo: "_rules.RuleSpec", m: int, n: int, k: int, *,
               bpp_iters: float = 1.0) -> float:
-    """F(m, n, k) of Table III.  For BPP the paper leaves C_BPP symbolic; we
-    model it as `bpp_iters` passes of a k×k solve per column: ~k³/3 + 2k²
-    flops per column per pivot round (empirically 1–3 rounds dominate)."""
-    algo = algo.lower()
-    if algo in ("mu", "hals"):
-        return 2.0 * (m + n) * k * k
-    if algo in ("bpp", "abpp", "anls"):
-        per_col = bpp_iters * (k ** 3 / 3.0 + 2.0 * k * k)
-        return (m + n) * per_col
-    raise ValueError(algo)
+    """F(m, n, k) of Table III — the rule's ``luc_flops`` hook.  For BPP the
+    paper leaves C_BPP symbolic; the built-in rule models it as `bpp_iters`
+    passes of a k×k solve per column (empirically 1–3 rounds dominate)."""
+    return _rules.get_rule(algo).luc_flops(m, n, k, bpp_iters=bpp_iters)
 
 
 @dataclass(frozen=True)
@@ -116,6 +119,11 @@ def schedule_cost(schedule: str, m: int, n: int, k: int, *, pr: int = 1,
     ``gspmd`` is modelled with the FAUN formulas — its *optimal* schedule —
     so the measured-HLO gap (see core/gspmd.py: 121× more wire bytes) reads
     directly as the auto-partitioner's overhead versus this prediction.
+
+    The rule's own collectives (``UpdateRule.extra_latency_words``: the
+    HALS family's k·log p per-column norm reductions, the accelerated
+    rules' stall-norm all-reduces) are charged on top of the schedule's
+    matrix-product collectives.
     """
     schedule = schedule.lower()
     if schedule == "serial":
@@ -144,9 +152,11 @@ def mpifaun_cost(m: int, n: int, k: int, pr: int, pc: int, *,
     words = (2 * 2 * k * k * (p - 1) / p
              + 2 * ((pr - 1) * n * k / p + (pc - 1) * m * k / p))
     messages = 6 * math.log2(max(p, 2))
+    # ... plus the rule's own collectives (HALS: k·log p column norms)
+    extra_msgs, extra_words = _rules.get_rule(algo).extra_latency_words(k, p)
     mem = ops.storage_words(m, n, nnz=nnz) / p + (m + n) * k / p \
         + 2 * m * k / pr + 2 * n * k / pc
-    return IterCost(flops, words, messages, mem,
+    return IterCost(flops, words + extra_words, messages + extra_msgs, mem,
                     ops.mm_traffic_words(m, n, k, nnz=nnz) / p)
 
 
@@ -161,8 +171,9 @@ def naive_cost(m: int, n: int, k: int, p: int, *, algo: str = "bpp",
                                               bpp_iters=bpp_iters)
     words = (m + n) * k * (p - 1) / p     # two full-factor all-gathers
     messages = 2 * math.log2(max(p, 2))
+    extra_msgs, extra_words = _rules.get_rule(algo).extra_latency_words(k, p)
     mem = 2.0 * ops.storage_words(m, n, nnz=nnz) / p + (m + n) * k
-    return IterCost(flops, words, messages, mem,
+    return IterCost(flops, words + extra_words, messages + extra_msgs, mem,
                     ops.mm_traffic_words(m, n, k, nnz=nnz) / p)
 
 

@@ -4,7 +4,7 @@ over a pluggable local-compute layer.
 Before this module the four drivers (core/aunmf.py, core/faun.py,
 core/naive.py, core/gspmd.py) each reimplemented factor init, device
 placement, the ``lax.scan`` loop, error tracking, and result packing.
-``NMFSolver`` owns that lifecycle once and composes two plug points:
+``NMFSolver`` owns that lifecycle once and composes three plug points:
 
 * **schedule** — who computes which block of the four matrix products and
   which collectives move the k-width panels:
@@ -26,6 +26,15 @@ placement, the ``lax.scan`` loop, error tracking, and result packing.
   ``backend=`` also accepts a LocalOps instance or subclass, or any name
   registered via ``repro.backends.register_backend`` — schedules consume
   only the LocalOps surface, so a custom backend works on every schedule.
+
+* **algo** — a ``repro.core.rules.UpdateRule``: the local update
+  computation both half-updates run, plus its serving fold-in, cost hooks,
+  and optional carried state.  Built-ins: ``mu``, ``hals``,
+  ``bpp``/``abpp``/``anls``, and the Gillis–Glineur accelerated
+  ``amu``/``ahals``; ``algo=`` also accepts an UpdateRule instance or any
+  name registered via ``repro.core.rules.register_algorithm`` — schedules
+  consume only the UpdateRule surface, so a custom rule works on every
+  schedule × backend cell (and in ``repro.serve`` fold-in) for free.
 
 Support matrix (✓ everywhere):
 
@@ -58,8 +67,8 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import backends as _backends
-from repro.core import algorithms
-from repro.core.aunmf import NMFResult, aunmf_step, init_h, init_w
+from repro.core import rules as _rules
+from repro.core.aunmf import NMFResult, aunmf_step_rule, init_h, init_w
 from repro.util.compat import make_mesh
 
 SCHEDULES = ("serial", "faun", "naive", "gspmd")
@@ -93,9 +102,12 @@ class StoppingCriterion:
 
 # ---------------------------------------------------------------------------
 # Schedules.  Each is an iteration body + a layout spec; the engine owns the
-# loop and the backend owns the local products.  The step contract is
-# step(Arep, W, Ht, normA_sq) -> (W, Ht, sq_err) over (m,k) W and (n,k) Ht
-# (transposed H), however Arep is represented.
+# loop, the backend owns the local products, and the rule owns the update
+# computation.  The step contract is
+# step(Arep, W, Ht, normA_sq, state) -> (W, Ht, sq_err, state) over (m,k) W
+# and (n,k) Ht (transposed H), however Arep is represented; ``state`` is the
+# rule's carry pytree (None for stateless rules), replicated on distributed
+# schedules.
 # ---------------------------------------------------------------------------
 
 class _Schedule:
@@ -131,9 +143,9 @@ class _GridSchedule(_Schedule):
     def arg_shardings(self):
         grid = self.grid
         in_sh = (grid.sharding(self._spec_A()), grid.sharding(grid.spec_W()),
-                 grid.sharding(grid.spec_Ht()), None)
+                 grid.sharding(grid.spec_Ht()), None, None)
         out_sh = (grid.sharding(grid.spec_W()), grid.sharding(grid.spec_Ht()),
-                  None)
+                  None, None)
         return in_sh, out_sh
 
 
@@ -151,20 +163,20 @@ class _SerialSchedule(_Schedule):
         return (1, 1)
 
     def cache_key(self):
-        return (self.name, self.s.algo, self.s.ops.cache_key())
+        return (self.name, self.s.rule.cache_key(), self.s.ops.cache_key())
 
     def prepare(self, A, W0, H0):
         A = self.s.ops.prepare(A)
         return A, W0, H0.T, self.s.ops.norm_sq(A)
 
     def build_step(self) -> Callable:
-        update_w, update_h = algorithms.get_update_fns(self.s.algo)
-        ops = self.s.ops
+        rule, ops = self.s.rule, self.s.ops
 
-        def step(A, W, Ht, normA_sq):
-            W, H, sq = aunmf_step(A, W, Ht.T, update_w, update_h, normA_sq,
-                                  mm=ops.mm, mm_t=ops.mm_t, gram=ops.gram)
-            return W, H.T, sq
+        def step(A, W, Ht, normA_sq, state):
+            W, H, sq, state = aunmf_step_rule(
+                A, W, Ht.T, rule, state, normA_sq,
+                mm=ops.mm, mm_t=ops.mm_t, gram=ops.gram)
+            return W, H.T, sq, state
 
         return step
 
@@ -187,7 +199,7 @@ class _FaunSchedule(_GridSchedule):
         self.s, self.grid = solver, grid
 
     def cache_key(self):
-        return (self.name, self.s.algo, self.s.ops.cache_key(),
+        return (self.name, self.s.rule.cache_key(), self.s.ops.cache_key(),
                 self.s.panel_dtype, self.grid)
 
     def prepare(self, A, W0, H0):
@@ -201,7 +213,7 @@ class _FaunSchedule(_GridSchedule):
 
     def build_step(self) -> Callable:
         from repro.core.faun import build_faun_step
-        return build_faun_step(self.grid, algo=self.s.algo, ops=self.s.ops,
+        return build_faun_step(self.grid, algo=self.s.rule, ops=self.s.ops,
                                panel_dtype=self.s.panel_dtype)
 
     def abstract_args(self, m, n, dtype, nnz):
@@ -226,8 +238,8 @@ class _NaiveSchedule(_Schedule):
         return (self.p, 1)
 
     def cache_key(self):
-        return (self.name, self.s.algo, self.s.ops.cache_key(), self.mesh,
-                self.axis)
+        return (self.name, self.s.rule.cache_key(), self.s.ops.cache_key(),
+                self.mesh, self.axis)
 
     def _specs_A(self) -> tuple[P, P]:
         """Row- and column-blocked specs, extended over any extra
@@ -257,11 +269,11 @@ class _NaiveSchedule(_Schedule):
 
     def build_step(self) -> Callable:
         from repro.core.naive import build_naive_step
-        base = build_naive_step(self.mesh, algo=self.s.algo, axis=self.axis,
+        base = build_naive_step(self.mesh, algo=self.s.rule, axis=self.axis,
                                 ops=self.s.ops)
 
-        def step(Arep, W, Ht, normA_sq):
-            return base(Arep[0], Arep[1], W, Ht, normA_sq)
+        def step(Arep, W, Ht, normA_sq, state):
+            return base(Arep[0], Arep[1], W, Ht, normA_sq, state)
 
         return step
 
@@ -276,8 +288,8 @@ class _NaiveSchedule(_Schedule):
         ax = self.axis
         spec_row, spec_col = self._specs_A()
         in_sh = ((sh(spec_row), sh(spec_col)), sh(P(ax, None)),
-                 sh(P(ax, None)), None)
-        out_sh = (sh(P(ax, None)), sh(P(ax, None)), None)
+                 sh(P(ax, None)), None, None)
+        out_sh = (sh(P(ax, None)), sh(P(ax, None)), None, None)
         return in_sh, out_sh
 
 
@@ -303,7 +315,8 @@ class _GspmdSchedule(_GridSchedule):
                 f"(use schedule='faun', which composes shard_map with them)")
 
     def cache_key(self):
-        return (self.name, self.s.algo, self.gops.cache_key(), self.grid)
+        return (self.name, self.s.rule.cache_key(), self.gops.cache_key(),
+                self.grid)
 
     def _spec_A(self):
         # Global-view sparse A is one 1×1 block with the flat triplet dim
@@ -327,7 +340,7 @@ class _GspmdSchedule(_GridSchedule):
 
     def build_step(self) -> Callable:
         from repro.core.gspmd import gspmd_iteration
-        return functools.partial(gspmd_iteration, algo=self.s.algo,
+        return functools.partial(gspmd_iteration, algo=self.s.rule,
                                  ops=self.gops)
 
     def abstract_args(self, m, n, dtype, nnz):
@@ -345,7 +358,8 @@ def _square_grid(p: int) -> tuple[int, int]:
 # ---------------------------------------------------------------------------
 
 class NMFSolver:
-    """One driver lifecycle for every AU-NMF schedule × local-compute backend.
+    """One driver lifecycle for every AU-NMF schedule × local-compute backend
+    × update rule.
 
     >>> solver = NMFSolver(k=16, algo="bpp", schedule="faun", grid=grid,
     ...                    backend="sparse", max_iters=200, tol=1e-4)
@@ -353,12 +367,19 @@ class NMFSolver:
 
     ``backend`` is a name registered in ``repro.backends`` ("dense",
     "pallas", "sparse", or your own via ``register_backend``) or a
-    ``LocalOps`` instance.  The legacy entry points (``aunmf.fit``,
-    ``faun.fit``, ``naive.fit``, ``gspmd.fit``) are thin wrappers over this
-    class.
+    ``LocalOps`` instance.  ``algo`` is likewise open: a name registered in
+    ``repro.core.rules`` ("mu", "hals", "bpp", the accelerated
+    "amu"/"ahals", aliases "abpp"/"anls", or your own via
+    ``register_algorithm``) or an ``UpdateRule`` instance —
+    ``NMFSolver(k, algo=MyRule())`` works exactly like a custom backend
+    instance.  Stateful rules' carry threads through the compiled loop and
+    surfaces as ``NMFResult.extras["rule_state"]``.  The legacy entry
+    points (``aunmf.fit``, ``faun.fit``, ``naive.fit``, ``gspmd.fit``) are
+    thin wrappers over this class.
     """
 
-    def __init__(self, k: int, *, algo: str = "bpp", schedule: str = "serial",
+    def __init__(self, k: int, *, algo: "_rules.RuleSpec" = "bpp",
+                 schedule: str = "serial",
                  backend: "_backends.BackendSpec" = "dense", grid=None,
                  mesh: Mesh | None = None, axis: str = "p",
                  max_iters: int = 30, tol: float | None = None,
@@ -367,7 +388,7 @@ class NMFSolver:
         if schedule not in SCHEDULES:
             raise ValueError(f"unknown schedule {schedule!r}; "
                              f"choose from {SCHEDULES}")
-        algorithms.get_update_fns(algo)      # validate early
+        self.rule = _rules.get_rule(algo)    # validates early
         self.ops = _backends.get_backend(backend)
         if panel_dtype is not None:
             if schedule != "faun":
@@ -377,7 +398,7 @@ class NMFSolver:
                 raise ValueError(f"backend {self.ops.name!r} does not "
                                  f"support low-precision panels "
                                  f"(panel_dtype)")
-        self.k, self.algo = k, algo
+        self.k, self.algo = k, self.rule.name
         self.panel_dtype, self.donate = panel_dtype, donate
         self.stopping = StoppingCriterion(max_iters=max_iters, tol=tol,
                                           stall_iters=stall_iters,
@@ -411,24 +432,28 @@ class NMFSolver:
         if H0 is None:
             H0 = init_h(key, n, self.k, dtype=dtype)
         if W0 is None:
-            W0 = init_w(jax.random.fold_in(key, 1), m, self.k, self.algo,
+            W0 = init_w(jax.random.fold_in(key, 1), m, self.k, self.rule,
                         dtype=dtype)
 
         Arep, W, Ht, normA_sq = self._schedule.prepare(A, W0, H0)
+        state0 = self.rule.init_state(m, n, self.k, dtype)
         crit = self.stopping
         run = _cached_run(self._schedule, crit, self.donate)
         if crit.adaptive:
-            W, Ht, rels, i = run(Arep, W, Ht, normA_sq)
+            W, Ht, rels, i, state = run(Arep, W, Ht, normA_sq, state0)
             iters_run = int(i)
             rels = rels[:iters_run]
         else:
-            W, Ht, rels = run(Arep, W, Ht, normA_sq, crit.max_iters)
+            W, Ht, rels, state = run(Arep, W, Ht, normA_sq, state0,
+                                     crit.max_iters)
             iters_run = crit.max_iters
         W, H = self._schedule.collect(W, Ht)
         return NMFResult(
             W=W, H=H, rel_errors=rels, algo=self.algo, iters=iters_run,
             extras={"schedule": self.schedule, "backend": self.backend,
-                    "stopped_early": iters_run < crit.max_iters})
+                    "stopped_early": iters_run < crit.max_iters,
+                    "rule_state": (None if state is None
+                                   else jax.device_get(state))})
 
     # -- AOT lowering (dry-run / roofline) ----------------------------------
 
@@ -436,7 +461,8 @@ class NMFSolver:
                    nnz: int | None = None):
         """AOT-lower one iteration for HLO accounting, without data."""
         step = self._schedule.build_step()
-        args = self._schedule.abstract_args(m, n, dtype, nnz)
+        args = self._schedule.abstract_args(m, n, dtype, nnz) \
+            + (self.rule.init_state(m, n, self.k, dtype),)
         shardings = self._schedule.arg_shardings()
         if shardings is None:
             jstep = jax.jit(step)
@@ -455,7 +481,7 @@ class NMFSolver:
         from repro.core import costmodel
         pr, pc = self._schedule.grid_shape()
         return costmodel.schedule_cost(
-            self.schedule, m, n, self.k, pr=pr, pc=pc, algo=self.algo,
+            self.schedule, m, n, self.k, pr=pr, pc=pc, algo=self.rule,
             backend=self.ops, nnz=nnz, bpp_iters=bpp_iters)
 
 
@@ -495,18 +521,19 @@ def _build_run(step, crit: StoppingCriterion, donate: bool):
 def _fixed_run(step, donate: bool):
     @functools.partial(jax.jit, static_argnames=("iters",),
                        donate_argnums=(1, 2) if donate else ())
-    def run(Arep, W, Ht, normA_sq, iters: int):
+    def run(Arep, W, Ht, normA_sq, state, iters: int):
         def body(carry, _):
-            W, Ht = carry
-            Wn, Htn, sq = step(Arep, W, Ht, normA_sq)
+            W, Ht, state = carry
+            Wn, Htn, sq, state = step(Arep, W, Ht, normA_sq, state)
             # Backends may emit fp32 from low-precision factors (fp32
             # accumulation); restore the carry dtype (no-op for fp32 runs).
             W, Ht = Wn.astype(W.dtype), Htn.astype(Ht.dtype)
             rel = jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq)
-            return (W, Ht), rel
+            return (W, Ht, state), rel
 
-        (W, Ht), rels = lax.scan(body, (W, Ht), None, length=iters)
-        return W, Ht, rels
+        (W, Ht, state), rels = lax.scan(body, (W, Ht, state), None,
+                                        length=iters)
+        return W, Ht, rels, state
 
     return run
 
@@ -516,14 +543,14 @@ def _adaptive_run(step, crit: StoppingCriterion, donate: bool):
     stall_n, stall_tol = crit.stall_iters, crit.stall_tol
 
     @functools.partial(jax.jit, donate_argnums=(1, 2) if donate else ())
-    def run(Arep, W, Ht, normA_sq):
+    def run(Arep, W, Ht, normA_sq, rstate):
         def cond(state):
-            _, _, _, i, _, _, done = state
+            i, done = state[3], state[6]
             return (i < max_iters) & jnp.logical_not(done)
 
         def body(state):
-            W, Ht, rels, i, best, stall, _ = state
-            Wn, Htn, sq = step(Arep, W, Ht, normA_sq)
+            W, Ht, rels, i, best, stall, _, rstate = state
+            Wn, Htn, sq, rstate = step(Arep, W, Ht, normA_sq, rstate)
             W, Ht = Wn.astype(W.dtype), Htn.astype(Ht.dtype)
             rel = jnp.sqrt(jnp.maximum(sq, 0.0) / normA_sq)
             rels = lax.dynamic_update_index_in_dim(rels, rel, i, 0)
@@ -534,12 +561,13 @@ def _adaptive_run(step, crit: StoppingCriterion, donate: bool):
                 done = done | (rel <= tol)
             if stall_n:
                 done = done | (stall >= stall_n)
-            return (W, Ht, rels, i + 1, jnp.minimum(best, rel), stall, done)
+            return (W, Ht, rels, i + 1, jnp.minimum(best, rel), stall, done,
+                    rstate)
 
         state = (W, Ht, jnp.full((max_iters,), jnp.nan, jnp.float32),
                  jnp.asarray(0, jnp.int32), jnp.asarray(jnp.inf, jnp.float32),
-                 jnp.asarray(0, jnp.int32), jnp.asarray(False))
-        W, Ht, rels, i, _, _, _ = lax.while_loop(cond, body, state)
-        return W, Ht, rels, i
+                 jnp.asarray(0, jnp.int32), jnp.asarray(False), rstate)
+        W, Ht, rels, i, _, _, _, rstate = lax.while_loop(cond, body, state)
+        return W, Ht, rels, i, rstate
 
     return run

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import algorithms
+from repro.core import rules as _rules
 from repro.core.aunmf import NMFResult
 from repro.util.compat import shard_map
 
@@ -71,8 +71,8 @@ def matmul_reducescatter(Y_loc: jax.Array, axis: str, *,
 # FAUN iteration body (runs inside shard_map; everything below is per-device)
 # ---------------------------------------------------------------------------
 
-def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, *, row_axes, col_axis,
-                   algo: str, ops=None, panel_dtype=None):
+def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, state, *, row_axes,
+                   col_axis, algo, ops=None, panel_dtype=None):
     """One AU-NMF iteration of Algorithm 3 on local blocks.
 
     A_blk  : (m/prE, n/pc)  local data block (prE = pod*pr on multi-pod),
@@ -80,17 +80,21 @@ def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, *, row_axes, col_axis,
                             (dense array, BlockCOO triplets, ...)
     W_blk  : (m/p, k)       local W rows
     Ht_blk : (n/p, k)       local Hᵀ rows  (H column block, transposed)
+    state  : the update rule's carry pytree (None for stateless rules),
+             replicated across the grid
     row_axes: mesh axis name(s) forming the grid-row dimension ("pod","pr")
     col_axis: mesh axis name for grid columns ("pc")
+    algo   : a registered algorithm name or ``repro.core.rules.UpdateRule``
     ops    : repro.backends.LocalOps supplying the local products
              (None = DenseOps, plain XLA)
 
-    Returns (W_blk, Ht_blk, sq_err).
+    Returns (W_blk, Ht_blk, sq_err, state).
     """
     all_axes = tuple(row_axes) + (col_axis,)
     if ops is None:
         from repro.backends import DenseOps
         ops = DenseOps()
+    rule = _rules.get_rule(algo)
     mm, mm_t, gram = ops.mm, ops.mm_t, ops.gram
     if panel_dtype is not None:
         # Beyond-paper: ship factor panels over the wire in bf16 (half the
@@ -100,10 +104,8 @@ def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, *, row_axes, col_axis,
     else:
         cast = lambda x: x
 
-    def norm_psum(v):  # HALS column-norm reduction over the whole grid
-        return lax.psum(v, all_axes)
-
-    update_w, update_h = algorithms.get_update_fns(algo, norm_psum=norm_psum)
+    def norm_psum(v):  # rule-level reductions (HALS column norms,
+        return lax.psum(v, all_axes)        # accelerated stall norms, ...)
 
     # Low-precision panel gathers: ship the bf16 *bit pattern* (u16) so CPU
     # XLA's f32-dot legalization cannot commute the widening convert back
@@ -132,7 +134,8 @@ def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, *, row_axes, col_axis,
             if panel_dtype is None else gather_low(Hj_t, row_axes[0])
     V = mm(cast(A_blk), Hj_t)                                     # (m/prE, k)
     AHt_blk = matmul_reducescatter(V, col_axis, scatter_axis=0)   # (m/p, k)
-    W_blk = update_w(HHt, AHt_blk, W_blk)
+    W_blk, state = rule.update_w(HHt, AHt_blk, W_blk, state,
+                                 norm_psum=norm_psum)
 
     # ---- H given W (paper lines 9–14) ----
     WtW = lax.psum(gram(W_blk), all_axes)                         # k×k
@@ -142,7 +145,8 @@ def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, *, row_axes, col_axis,
     WtA_t_blk = Yt
     for ax in row_axes:
         WtA_t_blk = matmul_reducescatter(WtA_t_blk, ax, scatter_axis=0)
-    Ht_blk = update_h(WtW, WtA_t_blk, Ht_blk)
+    Ht_blk, state = rule.update_h(WtW, WtA_t_blk, Ht_blk, state,
+                                  norm_psum=norm_psum)
 
     # ---- relative error from byproducts (one extra k×k Gram) ----
     HHt_new = lax.psum(gram(Ht_blk), all_axes)
@@ -151,7 +155,7 @@ def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, *, row_axes, col_axis,
         all_axes)
     quad = jnp.sum(WtW.astype(jnp.float32) * HHt_new.astype(jnp.float32))
     sq_err = normA_sq - 2.0 * cross + quad
-    return W_blk, Ht_blk, sq_err
+    return W_blk, Ht_blk, sq_err, state
 
 
 # ---------------------------------------------------------------------------
@@ -206,15 +210,17 @@ def make_faun_mesh(pr: int, pc: int, *, devices=None) -> FaunGrid:
     return FaunGrid(mesh=mesh)
 
 
-def build_faun_step(grid: FaunGrid, *, algo: str, ops=None,
+def build_faun_step(grid: FaunGrid, *, algo, ops=None,
                     backend: str | None = None, use_pallas: bool = False,
                     panel_dtype=None):
-    """Returns step(A, W, Ht, normA_sq) -> (W, Ht, sq_err) as a shard_mapped,
-    jit-compatible callable over *global* arrays.
+    """Returns step(A, W, Ht, normA_sq, state) -> (W, Ht, sq_err, state) as
+    a shard_mapped, jit-compatible callable over *global* arrays.
 
     ``ops`` is the ``repro.backends.LocalOps`` backend computing the local
     products (and defining A's blocked representation — for SparseOps, A
-    enters as a core.blocksparse.BlockCOO and never crosses the wire).
+    enters as a core.blocksparse.BlockCOO and never crosses the wire);
+    ``algo`` is a registered algorithm name or an UpdateRule instance,
+    whose carry pytree travels replicated (the ``P()`` specs).
     ``backend="dense"|"pallas"|"sparse"`` and ``use_pallas=True`` are the
     legacy spellings, resolved through the same registry.
     """
@@ -227,12 +233,12 @@ def build_faun_step(grid: FaunGrid, *, algo: str, ops=None,
 
     body = functools.partial(
         faun_iteration, row_axes=grid.row_axes, col_axis=grid.col_axis,
-        algo=algo, ops=ops, panel_dtype=panel_dtype)
+        algo=_rules.get_rule(algo), ops=ops, panel_dtype=panel_dtype)
 
     return shard_map(
         body, mesh=grid.mesh,
-        in_specs=(ops.spec_A(grid), grid.spec_W(), grid.spec_Ht(), P()),
-        out_specs=(grid.spec_W(), grid.spec_Ht(), P()),
+        in_specs=(ops.spec_A(grid), grid.spec_W(), grid.spec_Ht(), P(), P()),
+        out_specs=(grid.spec_W(), grid.spec_Ht(), P(), P()),
     )
 
 

@@ -19,34 +19,36 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import algorithms
+from repro.core import rules as _rules
 from repro.core.aunmf import NMFResult
 from repro.core.error import sq_error_from_products
 from repro.core.faun import FaunGrid
 
 
-def gspmd_iteration(A, W, Ht, normA_sq, *, algo: str, ops=None):
+def gspmd_iteration(A, W, Ht, normA_sq, state, *, algo, ops=None):
     """Global-view AU-NMF iteration; no explicit collectives anywhere.
 
     ``ops`` supplies the A-products on the *global* representation: dense
     arrays for DenseOps/PallasOps, or one nnz-sharded BlockCOO for
     SparseOps — XLA's partitioner then keeps the triplets local and
     all-reduces the k-width partial products (the engine's distributed
-    checks assert this in the lowered HLO).
+    checks assert this in the lowered HLO).  The update rule sees global
+    factors, so its reductions need no psum (``norm_psum`` stays identity);
+    ``state`` is the rule's carry pytree (None for stateless rules).
     """
     if ops is None:
         from repro.backends import DenseOps
         ops = DenseOps()
-    update_w, update_h = algorithms.get_update_fns(algo)
+    rule = _rules.get_rule(algo)
     H = Ht.T
     HHt = ops.gram(Ht)
     AHt = ops.mm(A, H.T)
-    W = update_w(HHt, AHt, W)
+    W, state = rule.update_w(HHt, AHt, W, state)
     WtW = ops.gram(W)
     WtA_t = ops.mm_t(A, W)
-    Ht = update_h(WtW, WtA_t, Ht)
+    Ht, state = rule.update_h(WtW, WtA_t, Ht, state)
     sq = sq_error_from_products(normA_sq, WtA_t.T, Ht.T, WtW, ops.gram(Ht))
-    return W, Ht, sq
+    return W, Ht, sq, state
 
 
 def fit(A, k: int, *, grid: FaunGrid, algo: str = "bpp", iters: int = 30,

@@ -27,39 +27,42 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import algorithms
+from repro.core import rules as _rules
 from repro.core.aunmf import NMFResult
 from repro.util.compat import shard_map
 
 
-def naive_iteration(Arow, Acol, W_blk, Ht_blk, normA_sq, *, axis: str,
-                    algo: str, ops=None):
+def naive_iteration(Arow, Acol, W_blk, Ht_blk, normA_sq, state, *, axis: str,
+                    algo, ops=None):
     """One iteration of Algorithm 2 on local blocks (inside shard_map).
 
     Arow: (m/p, n)   row block of A          W_blk: (m/p, k)
     Acol: (m, n/p)   column block of A       Ht_blk: (n/p, k)
-    (both A blocks in whatever representation ``ops`` understands)
+    (both A blocks in whatever representation ``ops`` understands);
+    ``state`` is the update rule's carry pytree (None for stateless rules),
+    replicated over the mesh.
     """
     if ops is None:
         from repro.backends import DenseOps
         ops = DenseOps()
+    rule = _rules.get_rule(algo)
 
     def norm_psum(v):
         return lax.psum(v, axis)
-
-    update_w, update_h = algorithms.get_update_fns(algo, norm_psum=norm_psum)
 
     # --- W given H: all-gather whole H, redundant Gram (paper lines 3-4) ---
     Ht = lax.all_gather(Ht_blk, axis, axis=0, tiled=True)     # (n, k)
     HHt = ops.gram(Ht)                                        # redundant k×k
     AHt_blk = ops.mm(Arow, Ht)                                # (m/p, k)
-    W_blk = update_w(HHt, AHt_blk, W_blk)
+    W_blk, state = rule.update_w(HHt, AHt_blk, W_blk, state,
+                                 norm_psum=norm_psum)
 
     # --- H given W: all-gather whole W, redundant Gram (lines 5-6) ---
     W = lax.all_gather(W_blk, axis, axis=0, tiled=True)       # (m, k)
     WtW = ops.gram(W)
     WtA_t_blk = ops.mm_t(Acol, W)                             # (n/p, k)
-    Ht_blk = update_h(WtW, WtA_t_blk, Ht_blk)
+    Ht_blk, state = rule.update_h(WtW, WtA_t_blk, Ht_blk, state,
+                                  norm_psum=norm_psum)
 
     # --- error from byproducts ---
     HHt_new = lax.psum(ops.gram(Ht_blk), axis)
@@ -67,19 +70,20 @@ def naive_iteration(Arow, Acol, W_blk, Ht_blk, normA_sq, *, axis: str,
                              * Ht_blk.astype(jnp.float32)), axis)
     quad = jnp.sum(WtW.astype(jnp.float32) * HHt_new.astype(jnp.float32))
     sq_err = normA_sq - 2.0 * cross + quad
-    return W_blk, Ht_blk, sq_err
+    return W_blk, Ht_blk, sq_err, state
 
 
-def build_naive_step(mesh: Mesh, *, algo: str, axis: str = "p", ops=None):
+def build_naive_step(mesh: Mesh, *, algo, axis: str = "p", ops=None):
     from repro.backends import get_backend
     ops = get_backend(ops if ops is not None else "dense")
-    body = functools.partial(naive_iteration, axis=axis, algo=algo, ops=ops)
+    body = functools.partial(naive_iteration, axis=axis,
+                             algo=_rules.get_rule(algo), ops=ops)
     extra = (None,) * (ops.block_leaf_ndim - 2)   # BlockCOO triplet dim
     return shard_map(
         body, mesh=mesh,
         in_specs=(P(axis, None, *extra), P(None, axis, *extra),
-                  P(axis, None), P(axis, None), P()),
-        out_specs=(P(axis, None), P(axis, None), P()),
+                  P(axis, None), P(axis, None), P(), P()),
+        out_specs=(P(axis, None), P(axis, None), P(), P()),
     )
 
 

@@ -21,6 +21,12 @@ immediately — the standard latency/throughput knob pair of serving systems.
 1-D rows); pass a custom callable to batch other request payloads.  The
 worker never dies on a failing batch — the exception is delivered to that
 batch's futures and the loop continues.
+
+``swap(projector)`` hot-reloads the serving artifact in a RUNNING batcher:
+the worker samples the projection callable once per coalesced batch, so the
+swap takes effect at the next batch boundary — a batch already in flight
+completes against the artifact it started with, and no queued request is
+ever dropped or duplicated.
 """
 
 from __future__ import annotations
@@ -88,6 +94,26 @@ class MicroBatcher:
             self._q.put((row, fut))
         return fut
 
+    def swap(self, projector) -> None:
+        """Atomically replace the projection target between coalesced
+        batches (artifact hot-reload).
+
+        ``projector`` is the new batched callable, or an object carrying
+        one as ``.project`` (a ``repro.serve.foldin.FoldInProjector`` built
+        from the freshly published ``FactorArtifact``).  Requests already
+        batched and dispatched resolve against the OLD artifact; every
+        batch collected after the swap runs the new one.  Queued requests
+        survive the swap untouched — the queue and the worker never stop.
+        """
+        project = getattr(projector, "project", projector)
+        if not callable(project):
+            raise TypeError(f"swap() needs a callable or an object with a "
+                            f".project method; got {type(projector).__name__}")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("MicroBatcher is closed")
+            self.project = project
+
     def close(self) -> None:
         """Drain outstanding requests, then stop the worker."""
         with self._lock:
@@ -134,8 +160,11 @@ class MicroBatcher:
                 return
             rows = [r for r, _ in batch]
             futs = [f for _, f in batch]
+            # Sample the projection target ONCE per batch: a concurrent
+            # swap() lands cleanly on the next batch boundary.
+            project = self.project
             try:
-                out = self.project(self.stack(rows))
+                out = project(self.stack(rows))
                 out = np.asarray(out)
             except Exception as e:       # noqa: BLE001 — deliver, don't die
                 for f in futs:

@@ -9,8 +9,10 @@ factor held FIXED: given new rows ``A_new`` (b, n) and the trained ``H``
 
 — exactly the paper's ``SolveBPP(HHᵀ, HAᵀ_new)`` (§4.3), which is also the
 incremental one-sided view at the core of DID (Gao & Chu 2018).  The
-``fold`` closure comes from ``core.algorithms.make_fold_in`` so serving
-reuses the training update rules verbatim (BPP exact, HALS/MU iterated).
+``fold`` closure is the update rule's own ``fold_in`` hook
+(``core.rules.UpdateRule``), so serving reuses the training update rules
+verbatim — BPP exact, HALS/MU iterated, the accelerated rules with their
+stall-based early exit, and any registered custom rule for free.
 
 The cross-product ``R`` is the only operation touching request data, and it
 routes through the same local-compute layer training uses:
@@ -38,7 +40,7 @@ import jax.numpy as jnp
 
 from repro import backends as _backends
 from repro.backends.sparse import SparseOps, _is_bcoo
-from repro.core import algorithms, blocksparse
+from repro.core import blocksparse, rules as _rules
 from repro.serve.artifact import FactorArtifact, _gram_fp32
 
 #: nnz padding floor for sparse requests (keeps the shape ladder short)
@@ -63,32 +65,36 @@ class FoldInProjector:
 
     ``factor`` is a ``FactorArtifact`` or a raw (k, n) array (the fixed
     factor itself — pass ``W.T`` to fold new *columns* of A, e.g. unseen
-    documents of a vocab×docs matrix).  ``backend`` computes the dense-row
-    cross product (any LocalOps name/instance; a ``SparseOps`` instance
-    instead configures the sparse path).  ``iters`` bounds the HALS/MU
-    fold iterations (ignored by exact BPP).
+    documents of a vocab×docs matrix).  ``algo`` is a registered algorithm
+    name or a ``core.rules.UpdateRule`` instance (default: the artifact's
+    training algorithm).  ``backend`` computes the dense-row cross product
+    (any LocalOps name/instance; a ``SparseOps`` instance instead
+    configures the sparse path).  ``iters`` bounds the iterative rules'
+    fold sweeps (ignored by exact BPP).
     """
 
-    def __init__(self, factor, *, algo: str | None = None,
+    def __init__(self, factor, *, algo: "_rules.RuleSpec | None" = None,
                  backend: "_backends.BackendSpec | None" = None,
                  iters: int = 100, max_batch: int = 256,
                  buckets: tuple[int, ...] | None = None):
         if isinstance(factor, FactorArtifact):
             H = jnp.asarray(factor.H)
-            algo = algo or factor.algo
+            algo = algo if algo is not None else factor.algo
             G = jnp.asarray(factor.gram, jnp.float32)
         else:
             H = jnp.asarray(factor)
             if H.ndim != 2:
                 raise ValueError(f"fixed factor must be (k, n), got shape "
                                  f"{H.shape}")
-            algo = algo or "bpp"
+            algo = algo if algo is not None else "bpp"
             G = _gram_fp32(H)
-        self.algo = algo
+        rule = _rules.get_rule(algo)
+        self.algo = rule.name
         self.k, self.n = H.shape
         self.Ht = H.T                        # (n, k) — the mm operand
         self.G = G
-        self._fold = algorithms.make_fold_in(algo, iters=iters)
+        self._fold = lambda G, R, X0=None: rule.fold_in(G, R, X0,
+                                                        iters=iters)
 
         ops = _backends.get_backend(backend if backend is not None
                                     else "dense")

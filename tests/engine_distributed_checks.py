@@ -97,6 +97,57 @@ def _():
                                        atol=1e-4, err_msg=str((algo, kwargs)))
 
 
+@check("accelerated_rules_match_serial_on_grids")
+def _():
+    # amu/ahals on real multi-device grids: the inner-sweep stall norms
+    # reduce over the grid (norm_psum), and the rule-state carry travels
+    # replicated through shard_map.  delta=0.0 pins the inner trip count,
+    # so serial and distributed runs are comparable to fp tolerance.
+    from repro.core.rules import AcceleratedHALSRule, AcceleratedMURule
+    H0 = aunmf.init_h(KEY, N, K)
+    grid = faun.make_faun_mesh(4, 2)
+    mesh = make_mesh((8,), ("p",))
+    for rule_cls in (AcceleratedMURule, AcceleratedHALSRule):
+        ref = NMFSolver(K, algo=rule_cls(inner_iters=3, delta=0.0),
+                        max_iters=8).fit(A, key=KEY, H0=H0)
+        assert int(ref.extras["rule_state"]["inner_w"]) == 24
+        for kwargs in [dict(schedule="faun", grid=grid),
+                       dict(schedule="naive", mesh=mesh),
+                       dict(schedule="gspmd", grid=grid)]:
+            dist = NMFSolver(K, algo=rule_cls(inner_iters=3, delta=0.0),
+                             max_iters=8, **kwargs).fit(A, key=KEY, H0=H0)
+            np.testing.assert_allclose(
+                np.asarray(ref.W), np.asarray(dist.W), atol=5e-4,
+                err_msg=str((rule_cls.name, kwargs)))
+            np.testing.assert_allclose(
+                np.asarray(ref.rel_errors), np.asarray(dist.rel_errors),
+                atol=1e-4, err_msg=str((rule_cls.name, kwargs)))
+            # identical inner accounting on every schedule
+            assert int(dist.extras["rule_state"]["inner_w"]) == 24, kwargs
+            assert int(dist.extras["rule_state"]["inner_h"]) == 24, kwargs
+
+
+@check("accelerated_stall_exit_agrees_across_grid")
+def _():
+    # With a live stall exit (delta > 0) the criterion is a psum-reduced
+    # GLOBAL norm, so all devices stop each inner loop in lockstep and the
+    # data-dependent sweep counts must match the serial run exactly.
+    from repro.core.rules import AcceleratedMURule
+    H0 = aunmf.init_h(KEY, N, K)
+    grid = faun.make_faun_mesh(2, 2)
+    ref = NMFSolver(K, algo=AcceleratedMURule(inner_iters=4, delta=0.05),
+                    max_iters=6).fit(A, key=KEY, H0=H0)
+    dist = NMFSolver(K, algo=AcceleratedMURule(inner_iters=4, delta=0.05),
+                     schedule="faun", grid=grid, max_iters=6) \
+        .fit(A, key=KEY, H0=H0)
+    assert int(dist.extras["rule_state"]["inner_w"]) == \
+        int(ref.extras["rule_state"]["inner_w"])
+    assert int(dist.extras["rule_state"]["inner_h"]) == \
+        int(ref.extras["rule_state"]["inner_h"])
+    np.testing.assert_allclose(np.asarray(ref.W), np.asarray(dist.W),
+                               atol=5e-4)
+
+
 @check("sorted_spmm_matches_scatter_on_multidevice_grids")
 def _():
     # Regression: inside shard_map the BlockCOO leaves are sliced to

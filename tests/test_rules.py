@@ -1,0 +1,435 @@
+"""The UpdateRule plugin API (core/rules.py): registry semantics, the
+accelerated MU/HALS rules, rule state threading through the compiled engine
+loops, dtype-aware epsilon guards, regularisation hooks, and per-rule cost
+hooks.
+
+The load-bearing checks mirror the PR 2 custom-backend suite: a custom
+``UpdateRule`` registered once must run on all four schedules (and in
+serving fold-in) with no further wiring, and the accelerated rules must be
+bit-identical to their plain counterparts at ``inner_iters=1``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aunmf, costmodel, rules
+from repro.core.engine import NMFSolver
+from repro.data.pipeline import lowrank_matrix
+from repro.serve.artifact import FactorArtifact
+from repro.serve.foldin import FoldInProjector
+
+KEY = jax.random.PRNGKey(0)
+A = lowrank_matrix(KEY, 96, 64, 6, noise=0.01)
+K = 6
+
+
+# ------------------------------------------------------------- registry --
+
+def test_registry_lists_builtins_and_aliases():
+    names = rules.available_algorithms()
+    for name in ("mu", "hals", "bpp", "abpp", "anls", "amu", "ahals"):
+        assert name in names, names
+    assert isinstance(rules.get_rule("BPP"), rules.BPPRule)   # case-blind
+    assert isinstance(rules.get_rule("abpp"), rules.BPPRule)  # paper alias
+    assert isinstance(rules.get_rule("anls"), rules.BPPRule)
+
+
+def test_unknown_algorithm_error_lists_registered_names():
+    with pytest.raises(ValueError, match="amu") as ei:
+        rules.get_rule("simplex")
+    assert "register_algorithm" in str(ei.value)
+    with pytest.raises(TypeError):
+        rules.get_rule(42)
+    with pytest.raises(ValueError, match="register_algorithm"):
+        NMFSolver(4, algo="nope")
+
+
+def test_register_algorithm_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        rules.register_algorithm("mu", rules.MURule)
+
+
+def test_solver_accepts_rule_instance_and_class():
+    ref = NMFSolver(4, algo="mu", max_iters=4).fit(A, key=KEY)
+    for spec in (rules.MURule(), rules.MURule):
+        res = NMFSolver(4, algo=spec, max_iters=4).fit(A, key=KEY)
+        assert res.algo == "mu"
+        np.testing.assert_array_equal(np.asarray(res.W), np.asarray(ref.W))
+
+
+# -------------------------------------------- accelerated rule semantics --
+
+@pytest.mark.parametrize("accel,plain", [("amu", "mu"), ("ahals", "hals")])
+def test_accelerated_matches_plain_at_inner_one(accel, plain):
+    """inner_iters=1 runs exactly one LUC sweep per half-update — the
+    accelerated rules must then be BIT-identical to their plain
+    counterparts."""
+    cls = type(rules.get_rule(accel))
+    res = NMFSolver(K, algo=cls(inner_iters=1), max_iters=8).fit(A, key=KEY)
+    ref = NMFSolver(K, algo=plain, max_iters=8).fit(A, key=KEY)
+    np.testing.assert_array_equal(np.asarray(res.W), np.asarray(ref.W))
+    np.testing.assert_array_equal(np.asarray(res.H), np.asarray(ref.H))
+
+
+@pytest.mark.parametrize("algo", ["mu", "amu"])
+def test_mu_family_monotone_objective(algo):
+    """Every MU sweep majorises-minimises the objective, so the accelerated
+    variant's extra inner sweeps must keep the per-iteration error
+    non-increasing too."""
+    res = NMFSolver(8, algo=algo, max_iters=30).fit(A, key=KEY)
+    r = np.asarray(res.rel_errors)
+    assert np.all(np.isfinite(r))
+    assert np.all(np.diff(r) <= 1e-5), f"{algo} not monotone: {r}"
+
+
+@pytest.mark.parametrize("accel,plain", [("amu", "mu"), ("ahals", "hals")])
+def test_accelerated_converges_at_least_as_well(accel, plain):
+    """The whole pitch of arXiv:1107.5194: with the same number of OUTER
+    iterations (the expensive matrix products), extra inner sweeps reach an
+    equal or lower objective."""
+    res = NMFSolver(K, algo=accel, max_iters=20).fit(A, key=KEY)
+    ref = NMFSolver(K, algo=plain, max_iters=20).fit(A, key=KEY)
+    assert float(res.rel_errors[-1]) <= float(ref.rel_errors[-1]) + 1e-5
+
+
+def test_accelerated_state_counts_inner_sweeps():
+    """delta=0 disables the stall exit, so the carried counters must report
+    exactly inner_iters sweeps per half-update; delta=1 stops right after
+    the mandatory first sweep that establishes the stall baseline."""
+    rule = rules.AcceleratedMURule(inner_iters=3, delta=0.0)
+    res = NMFSolver(K, algo=rule, max_iters=5).fit(A, key=KEY)
+    st = res.extras["rule_state"]
+    assert int(st["inner_w"]) == 15 and int(st["inner_h"]) == 15
+    lazy = rules.AcceleratedMURule(inner_iters=3, delta=1.0)
+    st2 = NMFSolver(K, algo=lazy, max_iters=5).fit(A, key=KEY) \
+        .extras["rule_state"]
+    assert int(st2["inner_w"]) == 5 and int(st2["inner_h"]) == 5
+    # stateless rules carry nothing
+    assert NMFSolver(K, algo="mu", max_iters=2).fit(A, key=KEY) \
+        .extras["rule_state"] is None
+
+
+def test_accelerated_validation():
+    with pytest.raises(ValueError, match="inner_iters"):
+        rules.AcceleratedMURule(inner_iters=0)
+    with pytest.raises(ValueError, match="delta"):
+        rules.AcceleratedHALSRule(delta=-0.1)
+    with pytest.raises(ValueError, match="l1"):
+        rules.MURule(l1=-1.0)
+
+
+# ----------------------------------- custom rules on the whole matrix --
+
+class _ScaledMURule(rules.MURule):
+    """MU with a relaxation exponent — a genuinely custom (if simple) rule
+    for the registry round-trip tests."""
+
+    name = "scaledmu"
+    trace_calls: list = []
+
+    def _update_w(self, G, R, X, state, *, norm_psum):
+        self.trace_calls.append("w")
+        X, state = super()._update_w(G, R, X, state, norm_psum=norm_psum)
+        return X, state
+
+    _update_h = _update_w
+
+
+@pytest.mark.parametrize("schedule", ["serial", "faun", "naive", "gspmd"])
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+def test_custom_rule_runs_on_every_schedule(schedule, backend):
+    """Mirror of the PR 2 custom-backend test: one register_algorithm call
+    must make the rule work on every schedule × backend cell."""
+    rules.register_algorithm("scaledmu", _ScaledMURule, overwrite=True)
+    try:
+        _ScaledMURule.trace_calls.clear()
+        ref = NMFSolver(4, algo="mu", max_iters=5).fit(A, key=KEY)
+        res = NMFSolver(4, algo="scaledmu", schedule=schedule,
+                        backend=backend, max_iters=5).fit(A, key=KEY)
+        assert res.algo == "scaledmu"
+        assert _ScaledMURule.trace_calls, "custom rule was never traced"
+        np.testing.assert_allclose(np.asarray(res.W), np.asarray(ref.W),
+                                   atol=2e-4)
+    finally:
+        rules._REGISTRY.pop("scaledmu", None)
+
+
+class _CountingRule(rules.BPPRule):
+    """Stateful custom rule: counts executed half-updates in its carry."""
+
+    name = "counting"
+
+    def init_state(self, m, n, k, dtype=jnp.float32):
+        return {"halves": jnp.zeros((), jnp.int32)}
+
+    def _update_w(self, G, R, X, state, *, norm_psum):
+        X, state = super()._update_w(G, R, X, state, norm_psum=norm_psum)
+        if state is not None:
+            state = {"halves": state["halves"] + 1}
+        return X, state
+
+    _update_h = _update_w
+
+
+@pytest.mark.parametrize("schedule", ["serial", "faun", "naive", "gspmd"])
+def test_custom_rule_state_threads_through_schedules(schedule):
+    """init_state's carry must survive the engine's lax.scan on every
+    schedule — 2 half-updates per iteration, exactly."""
+    res = NMFSolver(4, algo=_CountingRule(), schedule=schedule,
+                    max_iters=6).fit(A, key=KEY)
+    assert int(res.extras["rule_state"]["halves"]) == 12
+
+
+def test_custom_rule_state_threads_through_while_loop():
+    """Adaptive stopping compiles to lax.while_loop; the rule carry must
+    ride along and reflect the actual (early-stopped) iteration count."""
+    A0 = lowrank_matrix(jax.random.fold_in(KEY, 5), 80, 60, 4, noise=0.0)
+    res = NMFSolver(8, algo=_CountingRule(), max_iters=300,
+                    tol=1e-4).fit(A0, key=KEY)
+    assert res.extras["stopped_early"]
+    assert int(res.extras["rule_state"]["halves"]) == 2 * res.iters
+
+
+def test_custom_rule_serves_fold_in():
+    """A custom rule works in serving fold-in for free (the base-class
+    fold_in iterates the rule's own sweeps)."""
+    res = NMFSolver(K, algo="mu", max_iters=200).fit(A, key=KEY)
+    proj = FoldInProjector(jnp.asarray(res.H), algo=_ScaledMURule(),
+                           iters=200)
+    X = proj.project(jnp.asarray(A)[:6])
+    assert proj.algo == "scaledmu"
+    np.testing.assert_allclose(np.asarray(X), np.asarray(res.W)[:6],
+                               atol=5e-2 * float(np.abs(res.W).max()))
+
+
+# --------------------------------------- amu/ahals × schedule × backend --
+
+@pytest.mark.parametrize("schedule", ["serial", "faun", "naive", "gspmd"])
+@pytest.mark.parametrize("backend", ["dense", "pallas", "sparse"])
+@pytest.mark.parametrize("algo", ["amu", "ahals"])
+def test_accelerated_schedule_backend_matrix(schedule, backend, algo):
+    """amu/ahals must run on every schedule × backend cell and agree with
+    their serial dense run (single device; the multi-device grids run in
+    engine_distributed_checks.py)."""
+    from repro.data.pipeline import erdos_renyi_matrix
+    Ad = erdos_renyi_matrix(KEY, 48, 36, 0.3)
+    ref = NMFSolver(5, algo=algo, max_iters=6).fit(Ad, key=KEY)
+    res = NMFSolver(5, algo=algo, schedule=schedule, backend=backend,
+                    max_iters=6).fit(Ad, key=KEY)
+    assert res.extras["schedule"] == schedule
+    assert res.extras["backend"] == backend
+    np.testing.assert_allclose(np.asarray(res.W), np.asarray(ref.W),
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(res.rel_errors),
+                               np.asarray(ref.rel_errors), atol=1e-5)
+
+
+# ------------------------------------------------- serving fold-in --
+
+@pytest.mark.parametrize("algo,row_atol", [("amu", 5e-2), ("ahals", 5e-3)])
+def test_accelerated_fold_in_recovers_training_rows(algo, row_atol):
+    """Folding training rows back in with the trained H must recover the
+    corresponding W rows through the accelerated rules' fold path (their
+    stall-based early exit included)."""
+    A0 = lowrank_matrix(KEY, 96, 64, K, noise=0.0)
+    res = NMFSolver(K, algo=algo, max_iters=400, tol=1e-5).fit(A0, key=KEY)
+    art = FactorArtifact.from_result(res)
+    assert art.algo == algo
+    proj = FoldInProjector(art, iters=300, max_batch=32)
+    rows = jnp.asarray(A0)[:16]
+    X = proj.project(rows)
+    W16 = np.asarray(res.W)[:16]
+    scale = max(float(np.abs(W16).max()), 1.0)
+    np.testing.assert_allclose(np.asarray(X), W16, atol=row_atol * scale)
+
+
+# ------------------------------------------------------------ eps guards --
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_mu_eps_guard_survives_low_precision(dt):
+    """Regression: a fixed 1e-16 underflows to zero under fp16 (and is an
+    ineffective no-op addend under bf16), turning the zero-denominator
+    guard back into 0/0 = NaN.  A zero factor row must stay exactly zero,
+    finite, on every dtype."""
+    G = jnp.eye(4, dtype=dt)
+    R = jnp.full((3, 4), 50.0, dt)
+    X = jnp.zeros((3, 4), dt)                      # collapsed rows: XG = 0
+    out = rules.update_mu(G, R, X)
+    assert out.dtype == dt
+    assert np.all(np.isfinite(np.asarray(out, np.float32))), out
+    np.testing.assert_array_equal(np.asarray(out, np.float32), 0.0)
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16, jnp.float16])
+def test_hals_eps_guard_survives_low_precision(dt):
+    """The HALS sweep divides by G_ii and by column norms; zero diagonals
+    and all-zero columns must both stay finite on low-precision carries."""
+    G = jnp.zeros((4, 4), dt)                      # worst case: G_ii = 0
+    R = jnp.zeros((3, 4), dt)
+    X = jnp.zeros((3, 4), dt)
+    for normalize in (False, True):
+        out = rules.update_hals(G, R, X, normalize=normalize)
+        assert np.all(np.isfinite(np.asarray(out, np.float32))), (normalize,
+                                                                  out)
+
+
+@pytest.mark.parametrize("algo", ["mu", "hals"])
+def test_bf16_fit_regression(algo):
+    """End-to-end bf16 MU/HALS training stays finite (the ISSUE's bf16
+    regression check, now covering HALS too)."""
+    Ab = lowrank_matrix(KEY, 64, 48, 4, noise=0.01).astype(jnp.bfloat16)
+    res = NMFSolver(4, algo=algo, max_iters=6).fit(Ab, key=KEY)
+    assert res.W.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(res.rel_errors, np.float32)).all()
+
+
+def test_eps_for_is_dtype_aware():
+    for dt in (jnp.float32, jnp.bfloat16, jnp.float16):
+        eps = rules.eps_for(dt)
+        assert float(jnp.asarray(eps, dt)) > 0.0, dt   # survives the dtype
+    assert rules.eps_for(jnp.float16) > rules.eps_for(jnp.float32)
+
+
+# -------------------------------------------------------- regularisation --
+
+def test_l2_regularisation_shrinks_factors():
+    plain = NMFSolver(K, algo="bpp", max_iters=15).fit(A, key=KEY)
+    ridge = NMFSolver(K, algo=rules.BPPRule(l2=5.0), max_iters=15) \
+        .fit(A, key=KEY)
+    assert float(jnp.linalg.norm(ridge.W)) < float(jnp.linalg.norm(plain.W))
+    assert float(jnp.linalg.norm(ridge.H)) < float(jnp.linalg.norm(plain.H))
+    assert np.isfinite(np.asarray(ridge.rel_errors)).all()
+
+
+@pytest.mark.parametrize("cls", [rules.HALSRule, rules.BPPRule])
+def test_l1_regularisation_sparsifies(cls):
+    plain = NMFSolver(K, algo=cls(), max_iters=15).fit(A, key=KEY)
+    sparse = NMFSolver(K, algo=cls(l1=0.5), max_iters=15).fit(A, key=KEY)
+    nz = lambda M: float(np.mean(np.asarray(M) <= 1e-6))
+    assert nz(sparse.H) > nz(plain.H), (nz(sparse.H), nz(plain.H))
+    assert float(jnp.min(sparse.W)) >= 0.0 and float(jnp.min(sparse.H)) >= 0.0
+
+
+def test_l1_regularisation_shrinks_mu():
+    """The multiplicative rule can't reach exact zeros in finitely many
+    sweeps (entries decay geometrically) — its clamped sparse-MU form must
+    still shrink the factors and keep iterates positive and finite."""
+    plain = NMFSolver(K, algo="mu", max_iters=15).fit(A, key=KEY)
+    sparse = NMFSolver(K, algo=rules.MURule(l1=2.0), max_iters=15) \
+        .fit(A, key=KEY)
+    # the l1 pressure shrinks the fit itself (scale can shift between the
+    # two factors, so compare the product, not either factor alone)
+    assert float(jnp.linalg.norm(sparse.W @ sparse.H)) < \
+        float(jnp.linalg.norm(plain.W @ plain.H))
+    assert float(jnp.min(sparse.H)) >= 0.0
+    assert np.isfinite(np.asarray(sparse.rel_errors)).all()
+
+
+# ------------------------------------------------------------ cost hooks --
+
+def test_luc_flops_per_rule():
+    m, n, k = 10_000, 8_000, 16
+    base = costmodel.luc_flops("mu", m, n, k)
+    assert base == 2.0 * (m + n) * k * k
+    assert costmodel.luc_flops("hals", m, n, k) == base
+    accel = rules.AcceleratedMURule(inner_iters=4)
+    assert costmodel.luc_flops(accel, m, n, k) == 4 * base
+    assert costmodel.luc_flops("ahals", m, n, k) == \
+        rules.get_rule("ahals").inner_iters * base
+    assert costmodel.luc_flops("bpp", m, n, k) == \
+        costmodel.luc_flops("abpp", m, n, k) > base
+
+
+def test_accelerated_cost_honest_when_stall_exit_is_dead():
+    """At inner_iters=1 (or delta=0) the accelerated rules execute exactly
+    like their plain counterparts — no stall norms computed — and
+    predict_cost must not charge phantom stall-norm collectives."""
+    m, n, k, pr, pc = 100_000, 80_000, 32, 2, 2
+    mu = costmodel.schedule_cost("faun", m, n, k, pr=pr, pc=pc, algo="mu")
+    one = costmodel.schedule_cost(
+        "faun", m, n, k, pr=pr, pc=pc,
+        algo=rules.AcceleratedMURule(inner_iters=1))
+    assert one.messages == mu.messages and one.words == mu.words
+    pinned = costmodel.schedule_cost(
+        "faun", m, n, k, pr=pr, pc=pc,
+        algo=rules.AcceleratedMURule(inner_iters=4, delta=0.0))
+    assert pinned.messages == mu.messages      # fori_loop: no stall norms
+    live = costmodel.schedule_cost(
+        "faun", m, n, k, pr=pr, pc=pc,
+        algo=rules.AcceleratedMURule(inner_iters=4, delta=0.01))
+    assert live.messages > mu.messages         # stall exit live: charged
+
+
+def test_make_fold_in_preserves_bpp_subclasses():
+    """max_iter rebuilds only the PLAIN BPPRule; a subclass keeps its own
+    overridden fold behaviour."""
+    from repro.core import algorithms
+
+    calls = []
+
+    class TracingBPP(rules.BPPRule):
+        name = "tracingbpp"
+
+        def fold_in(self, G, R, X0=None, *, iters=100):
+            calls.append("fold")
+            return super().fold_in(G, R, X0, iters=iters)
+
+    G = jnp.eye(3) * 2.0
+    R = jnp.ones((4, 3))
+    algorithms.make_fold_in(TracingBPP(max_iter=5), max_iter=9)(G, R)
+    assert calls == ["fold"]                   # subclass override survived
+
+
+def test_hals_latency_term_charged_in_schedule_cost():
+    """The paper's Table charges HALS an extra k·log p normalisation
+    latency; predict_cost must now reflect it (and the accelerated rules'
+    stall-norm reductions on top)."""
+    m, n, k, pr, pc = 100_000, 80_000, 32, 8, 8
+    mu = costmodel.schedule_cost("faun", m, n, k, pr=pr, pc=pc, algo="mu")
+    hals = costmodel.schedule_cost("faun", m, n, k, pr=pr, pc=pc,
+                                   algo="hals")
+    assert hals.messages == mu.messages + k * np.log2(pr * pc)
+    assert hals.words > mu.words
+    ahals = costmodel.schedule_cost("faun", m, n, k, pr=pr, pc=pc,
+                                    algo="ahals")
+    assert ahals.messages > hals.messages
+    # serial: no grid, no extra latency
+    ser = costmodel.schedule_cost("serial", m, n, k, algo="hals")
+    assert ser.messages == 0 and ser.words == 0
+    # naive charges it too
+    nv_mu = costmodel.schedule_cost("naive", m, n, k, pr=64, algo="mu")
+    nv_h = costmodel.schedule_cost("naive", m, n, k, pr=64, algo="hals")
+    assert nv_h.messages > nv_mu.messages
+
+
+def test_solver_predict_cost_uses_rule_hooks():
+    s_mu = NMFSolver(16, algo="mu", schedule="faun")
+    s_am = NMFSolver(16, algo=rules.AcceleratedMURule(inner_iters=3),
+                     schedule="faun")
+    assert s_am.predict_cost(10_000, 8_000).flops > \
+        s_mu.predict_cost(10_000, 8_000).flops
+
+
+# ------------------------------------------------------- legacy shims --
+
+def test_get_update_fns_and_make_fold_in_accept_any_rule():
+    from repro.core import algorithms
+    uw, uh = algorithms.get_update_fns("amu")
+    G = jnp.eye(4) * 2.0
+    R = jnp.ones((5, 4))
+    X = jnp.full((5, 4), 0.3)
+    out = uw(G, R, X)
+    assert out.shape == X.shape
+    fold = algorithms.make_fold_in(rules.AcceleratedHALSRule(), iters=50)
+    Xf = fold(G, R)
+    assert Xf.shape == R.shape
+    assert np.all(np.asarray(Xf) >= 0.0)
+
+
+def test_init_w_uses_positive_init_flag():
+    w_mu = aunmf.init_w(KEY, 8, 3, "amu")          # MU family: positive
+    assert float(jnp.min(w_mu)) > 0.0
+    w_h = aunmf.init_w(KEY, 8, 3, rules.AcceleratedHALSRule())
+    assert float(jnp.max(jnp.abs(w_h))) == 0.0     # additive: zeros

@@ -310,6 +310,68 @@ def test_batcher_concurrent_submitters(trained):
     assert mb.stats.requests == 72
 
 
+def test_batcher_swap_hot_reload_no_lost_requests():
+    """Artifact hot-reload: swap() replaces the projector between coalesced
+    batches.  Every submitted request must resolve exactly once — against
+    either the old or the new artifact, never dropped, never duplicated —
+    and traffic after the swap runs the new artifact."""
+    tag_a = lambda batch: np.asarray(batch) + 1000.0
+    tag_b = lambda batch: np.asarray(batch) + 2000.0
+    rows = np.arange(120, dtype=np.float32).reshape(120, 1)
+    with MicroBatcher(tag_a, max_batch=8, max_delay_s=1e-3) as mb:
+        futs = []
+        for i in range(120):
+            futs.append((i, mb.submit(rows[i])))
+            if i == 60:
+                mb.swap(tag_b)              # mid-traffic hot swap
+        got = {i: float(f.result(timeout=30)[0]) for i, f in futs}
+    assert len(got) == 120                              # none dropped
+    assert mb.stats.requests == 120                     # none duplicated
+    for i, v in got.items():
+        assert v in (i + 1000.0, i + 2000.0), (i, v)    # one artifact or the
+    # the swap actually took effect for late traffic     # other, never mixed
+    late = [got[i] for i in range(110, 120)]
+    assert all(v >= 2000.0 for v in late), late
+
+
+def test_batcher_swap_in_flight_batch_completes_against_old(trained):
+    """A batch dispatched before the swap finishes on the OLD projector; the
+    next batch runs the new one.  swap() also accepts a FoldInProjector."""
+    import time
+
+    released = threading.Event()
+    first_done = threading.Event()
+
+    def slow_old(batch):
+        first_done.set()
+        released.wait(timeout=30)           # hold the batch in flight
+        return np.asarray(batch) + 1000.0
+
+    proj_new = FoldInProjector(FactorArtifact.from_result(trained["bpp"]),
+                               max_batch=8)
+    with MicroBatcher(slow_old, max_batch=1, max_delay_s=1e-4) as mb:
+        f_old = mb.submit(np.zeros(3, np.float32))
+        assert first_done.wait(timeout=10)
+        mb.swap(proj_new)                   # while the old batch is in flight
+        f_new = mb.submit(np.asarray(A)[0])
+        released.set()
+        old = f_old.result(timeout=30)
+        new = f_new.result(timeout=30)
+    np.testing.assert_allclose(old, 1000.0 * np.ones(3))   # old artifact
+    assert new.shape == (K,)                               # new: real fold-in
+    np.testing.assert_allclose(
+        new, np.asarray(proj_new.project(jnp.asarray(A)[:1]))[0], atol=1e-5)
+
+
+def test_batcher_swap_validation():
+    mb = MicroBatcher(lambda b: np.asarray(b), max_batch=2)
+    with pytest.raises(TypeError, match="callable"):
+        mb.swap(object())
+    mb.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.swap(lambda b: b)
+
+
 def test_batcher_delivers_exceptions_and_recovers():
     calls = []
 
