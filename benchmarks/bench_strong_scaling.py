@@ -12,7 +12,12 @@ The sparse section runs the SAME protocol on an Erdős–Rényi matrix through
 flops instead of 4mnk), and anchors the model with a *measured* column: the
 wall time of real engine iterations on the sparse backend at p=1 next to
 the model's prediction at the measured sparse γ — the honesty check that
-the nnz-aware cost threading isn't just formulas."""
+the nnz-aware cost threading isn't just formulas.
+
+The dense sweep also carries ``panel_compression="int8"`` columns (the
+model's compressed word counts and times), anchored by a
+predicted-vs-measured wire-bytes row: the compiled compressed faun step's
+actual collective operand bytes on a 4×2 host mesh next to the model's."""
 
 import time
 
@@ -58,12 +63,16 @@ def main(emit):
             f = costmodel.mpifaun_cost(M, N, K, pr, pc, algo=algo,
                                        bpp_iters=2.0)
             t_f = f.time(mach)
+            fc = costmodel.mpifaun_cost(M, N, K, pr, pc, algo=algo,
+                                        bpp_iters=2.0, compression="int8")
+            t_fc = fc.time(mach)
             nv = costmodel.naive_cost(M, N, K, p, algo=algo, bpp_iters=2.0)
             t_n = nv.time(mach)
-            rows.append((p, algo, t_f, t_n))
+            rows.append((p, algo, t_f, t_n, t_fc, fc.words / f.words))
             emit(f"fig5_p{p}_{algo}", t_f * 1e6,
                  f"naive={t_n * 1e6:.0f}us speedup_naive/faun="
-                 f"{t_n / t_f:.2f}")
+                 f"{t_n / t_f:.2f};int8={t_fc * 1e6:.0f}us;"
+                 f"int8_words_ratio={fc.words / f.words:.3f}")
         t_bpp = [r for r in rows if r[0] == p and r[1] == "bpp"][-1][2]
         if prev_faun is not None:
             emit(f"fig5_scaling_p{p}", 0.0,
@@ -75,6 +84,7 @@ def main(emit):
     emit("fig5_naive_slowdown_at_1536", 0.0,
          f"{big[3] / big[2]:.2f}x (paper reports ~4.2x sparse / 1.6x dense)")
 
+    _wire_bytes_section(emit)
     sparse_rows = _sparse_section(emit, gamma)
 
     import os
@@ -82,9 +92,9 @@ def main(emit):
                        "fig5_strong_scaling.csv")
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
-        f.write("p,algo,faun_s,naive_s\n")
-        for p, algo, tf_, tn in rows:
-            f.write(f"{p},{algo},{tf_:.6f},{tn:.6f}\n")
+        f.write("p,algo,faun_s,naive_s,faun_int8_s,int8_words_ratio\n")
+        for p, algo, tf_, tn, tfc, ratio in rows:
+            f.write(f"{p},{algo},{tf_:.6f},{tn:.6f},{tfc:.6f},{ratio:.4f}\n")
     out_sp = os.path.join(os.path.dirname(__file__), "results",
                           "fig5_sparse_scaling.csv")
     with open(out_sp, "w") as f:
@@ -93,6 +103,57 @@ def main(emit):
             f.write(",".join("" if x is None else f"{x:.6g}" if
                              isinstance(x, float) else str(x)
                              for x in r) + "\n")
+
+
+_WIRE_M, _WIRE_N, _WIRE_K = 512, 256, 16
+
+_WIRE_SCRIPT = """
+import jax
+from repro.core import faun
+from repro.core.engine import NMFSolver
+from repro.roofline.hlo import collective_stats
+
+grid = faun.make_faun_mesh(4, 2)
+for compression in (None, "int8"):
+    solver = NMFSolver({k}, algo="mu", schedule="faun", grid=grid,
+                       panel_compression=compression)
+    txt = solver.lower_step({m}, {n}).compile().as_text()
+    print(sum(collective_stats(txt).wire_bytes.values()))
+"""
+
+
+def _wire_bytes_section(emit):
+    """Predicted-vs-measured communicated bytes for the compressed wire:
+    the cost model's word counts next to the actual collective operand
+    bytes of the compiled faun step on a 4×2 host mesh (a subprocess, so
+    the forced 8-device CPU topology doesn't leak into this process)."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    script = _WIRE_SCRIPT.format(m=_WIRE_M, n=_WIRE_N, k=_WIRE_K)
+    try:
+        out = subprocess.run([sys.executable, "-c", script], env=env,
+                             capture_output=True, text=True, timeout=600,
+                             check=True).stdout.split()
+        meas_exact, meas_int8 = (int(float(x)) for x in out[-2:])
+    except (subprocess.SubprocessError, ValueError) as e:
+        emit("fig5_wire_bytes", 0.0, f"SKIPPED:{type(e).__name__}")
+        return
+    pred_exact = 4.0 * costmodel.mpifaun_cost(
+        _WIRE_M, _WIRE_N, _WIRE_K, 4, 2, algo="mu").words
+    pred_int8 = 4.0 * costmodel.mpifaun_cost(
+        _WIRE_M, _WIRE_N, _WIRE_K, 4, 2, algo="mu",
+        compression="int8").words
+    emit("fig5_wire_bytes_exact", 0.0,
+         f"predicted={pred_exact:.0f};measured_hlo={meas_exact}")
+    emit("fig5_wire_bytes_int8", 0.0,
+         f"predicted={pred_int8:.0f};measured_hlo={meas_int8};"
+         f"ratio_pred={pred_int8 / pred_exact:.3f};"
+         f"ratio_meas={meas_int8 / max(meas_exact, 1):.3f}")
 
 
 def _measured_sparse_iter_s(A_blk, nnz):

@@ -27,6 +27,13 @@ The algorithm axis includes the Gillis–Glineur accelerated ``amu`` /
 about (extra cheap inner sweeps per expensive matrix-product iteration),
 which the paper's fixed-iteration protocol cannot show.
 
+A compressed section runs the same protocol on the faun schedule, exact vs
+``panel_compression="int8"`` — time-to-tolerance is exactly the metric the
+compressed collectives must not regress (error feedback promises the same
+fixed point; this measures the iteration overhead it costs to get there).
+Rows land in the same CSV under the ``faun_exact`` / ``faun_int8``
+backend labels.
+
 Set ``REPRO_TTOL_SMALL=1`` to run the CI-sized shapes (same protocol,
 minutes instead of tens of minutes on CPU).
 """
@@ -111,6 +118,29 @@ def main(emit):
                 emit(f"ttol_{name}_{algo}_{backend}", dt * 1e6,
                      f"iters={res.iters};reached={reached};"
                      f"rel_err={final:.5f}")
+        # compressed vs exact on the faun schedule: same tolerance target,
+        # reporting the iteration overhead error feedback costs (the
+        # engine-level parity assert lives in engine_distributed_checks)
+        from repro.core.faun import make_faun_mesh
+        grid = make_faun_mesh(1, 1)
+        for algo in ["mu", "hals", "bpp"]:
+            stats = {}
+            for label, compression in (("faun_exact", None),
+                                       ("faun_int8", "int8")):
+                solver = NMFSolver(K, algo=algo, schedule="faun", grid=grid,
+                                   max_iters=MAX_ITERS, tol=target,
+                                   panel_compression=compression)
+                res, dt = _fit_timed(solver, A, key)
+                final = float(np.asarray(res.rel_errors)[-1])
+                reached = final <= target
+                stats[label] = res.iters
+                rows.append((name, algo, label, dt, res.iters, reached,
+                             final))
+                emit(f"ttol_{name}_{algo}_{label}", dt * 1e6,
+                     f"iters={res.iters};reached={reached};"
+                     f"rel_err={final:.5f}")
+            emit(f"ttol_{name}_{algo}_int8_iter_overhead", 0.0,
+                 f"iters_ratio={stats['faun_int8'] / max(stats['faun_exact'], 1):.2f}")
     import os
     out = os.path.join(os.path.dirname(__file__), "results",
                        "time_to_tol.csv")

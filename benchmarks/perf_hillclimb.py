@@ -3,7 +3,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # (must precede any jax import — same rule as the dry-run)
 
 """§Perf hillclimb driver: hypothesis → change → re-lower → measure, on the
-three selected cells (see EXPERIMENTS.md §Perf for the narrative):
+three selected cells:
 
   A. llama4-maverick × train_4k   — worst useful-flops ratio in the baseline
   B. qwen2-72b × train_4k         — largest absolute collective term

@@ -162,7 +162,6 @@ def get_reduced_config(arch: str) -> ModelConfig:
 def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
     """Whether (arch, shape) is a runnable dry-run cell, else the skip reason."""
     if shape.name == "long_500k" and not cfg.subquadratic:
-        return False, ("pure full-attention arch: 524k dense attention is the "
-                       "quadratic cost long_500k exists to exclude (DESIGN.md "
-                       "§Arch-applicability)")
+        return False, ("pure full-attention arch: 524k dense attention is "
+                       "the quadratic cost long_500k exists to exclude")
     return True, ""

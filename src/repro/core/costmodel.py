@@ -105,7 +105,7 @@ def serial_cost(m: int, n: int, k: int, *, algo: str = "bpp",
 def schedule_cost(schedule: str, m: int, n: int, k: int, *, pr: int = 1,
                   pc: int = 1, algo: str = "bpp", dense: bool = True,
                   nnz: float = 0.0, bpp_iters: float = 1.0,
-                  backend=None) -> IterCost:
+                  backend=None, compression: str | None = None) -> IterCost:
     """One entry point for every engine schedule, threading nnz through.
 
     ``backend`` is a ``repro.backends`` name or LocalOps instance; its
@@ -124,6 +124,12 @@ def schedule_cost(schedule: str, m: int, n: int, k: int, *, pr: int = 1,
     HALS family's k·log p per-column norm reductions, the accelerated
     rules' stall-norm all-reduces) are charged on top of the schedule's
     matrix-product collectives.
+
+    ``compression="int8"`` scales the panel words by the int8/fp32 ratio
+    (¼) and adds the fp32 scale-vector sidecars + pmax reductions, matching
+    the wire format of ``NMFSolver(panel_compression="int8")`` (see
+    repro.distributed.compression; serial has no collectives, so
+    compression is a no-op there).
     """
     schedule = schedule.lower()
     if schedule == "serial":
@@ -131,17 +137,31 @@ def schedule_cost(schedule: str, m: int, n: int, k: int, *, pr: int = 1,
                            bpp_iters=bpp_iters, backend=backend)
     if schedule in ("faun", "gspmd"):
         return mpifaun_cost(m, n, k, pr, pc, algo=algo, dense=dense, nnz=nnz,
-                            bpp_iters=bpp_iters, backend=backend)
+                            bpp_iters=bpp_iters, backend=backend,
+                            compression=compression)
     if schedule == "naive":
         return naive_cost(m, n, k, pr * pc, algo=algo, dense=dense, nnz=nnz,
-                          bpp_iters=bpp_iters, backend=backend)
+                          bpp_iters=bpp_iters, backend=backend,
+                          compression=compression)
     raise ValueError(f"unknown schedule {schedule!r}")
 
 
 def mpifaun_cost(m: int, n: int, k: int, pr: int, pc: int, *,
                  algo: str = "bpp", dense: bool = True, nnz: float = 0.0,
-                 bpp_iters: float = 1.0, backend=None) -> IterCost:
-    """Per-iteration cost of Algorithm 3 (paper §5.2.1–5.2.3)."""
+                 bpp_iters: float = 1.0, backend=None,
+                 compression: str | None = None) -> IterCost:
+    """Per-iteration cost of Algorithm 3 (paper §5.2.1–5.2.3).
+
+    With ``compression="int8"`` the four panel collectives ship int8
+    payloads (¼ of the fp32 words) plus a per-row fp32 scale sidecar:
+    all-gathers gather the sidecar alongside (one scale word per gathered
+    row), reduce-scatters share theirs via a pmax all-reduce (2× the
+    gather's sidecar words).  The two k×k Gram all-reduces move the same
+    word count as exact (int32 payload) plus a pmax of their k-row scales;
+    every compressed collective splits into payload + sidecar, doubling the
+    message term.  The k-word column-scale pmax each collective also ships
+    is negligible against the row sidecars and is not modelled.
+    """
     ops = _resolve_ops(backend, dense)
     p = pr * pc
     mm_flops = ops.mm_flops(m, n, k, nnz=nnz) / p
@@ -149,9 +169,22 @@ def mpifaun_cost(m: int, n: int, k: int, pr: int, pc: int, *,
     flops = mm_flops + gram_flops + luc_flops(algo, m / p, n / p, k,
                                               bpp_iters=bpp_iters)
     # words: 2 all-reduces of k², 2 all-gathers + 2 reduce-scatters of panels
-    words = (2 * 2 * k * k * (p - 1) / p
-             + 2 * ((pr - 1) * n * k / p + (pc - 1) * m * k / p))
-    messages = 6 * math.log2(max(p, 2))
+    gram_words = 2 * 2 * k * k * (p - 1) / p
+    panel_h = (pr - 1) * n * k / p        # all-gather Ht / reduce-scatter WᵀA
+    panel_w = (pc - 1) * m * k / p        # all-gather W / reduce-scatter AHᵀ
+    if compression is None:
+        words = gram_words + 2 * (panel_h + panel_w)
+        messages = 6 * math.log2(max(p, 2))
+    else:
+        from repro.distributed.compression import compressed_words
+        words = (gram_words + 2 * 2 * k * (p - 1) / p      # + gram scale pmax
+                 + compressed_words(panel_h, rows=(pr - 1) * n / p)
+                 + compressed_words(panel_w, rows=(pc - 1) * m / p)
+                 + compressed_words(panel_w, rows=(pc - 1) * m / p,
+                                    scatter=True)
+                 + compressed_words(panel_h, rows=(pr - 1) * n / p,
+                                    scatter=True))
+        messages = 12 * math.log2(max(p, 2))
     # ... plus the rule's own collectives (HALS: k·log p column norms)
     extra_msgs, extra_words = _rules.get_rule(algo).extra_latency_words(k, p)
     mem = ops.storage_words(m, n, nnz=nnz) / p + (m + n) * k / p \
@@ -162,8 +195,14 @@ def mpifaun_cost(m: int, n: int, k: int, pr: int, pc: int, *,
 
 def naive_cost(m: int, n: int, k: int, p: int, *, algo: str = "bpp",
                dense: bool = True, nnz: float = 0.0,
-               bpp_iters: float = 1.0, backend=None) -> IterCost:
-    """Per-iteration cost of Algorithm 2 (paper §5.1.1–5.1.3)."""
+               bpp_iters: float = 1.0, backend=None,
+               compression: str | None = None) -> IterCost:
+    """Per-iteration cost of Algorithm 2 (paper §5.1.1–5.1.3).
+
+    ``compression="int8"`` quarters the two full-factor all-gathers' words
+    and adds one fp32 scale word per gathered row (no reduce-scatters here,
+    so no pmax sidecars); payload + sidecar doubles the message term.
+    """
     ops = _resolve_ops(backend, dense)
     mm_flops = ops.mm_flops(m, n, k, nnz=nnz) / p
     gram_flops = (m + n) * k * k          # redundant on every processor
@@ -171,6 +210,10 @@ def naive_cost(m: int, n: int, k: int, p: int, *, algo: str = "bpp",
                                               bpp_iters=bpp_iters)
     words = (m + n) * k * (p - 1) / p     # two full-factor all-gathers
     messages = 2 * math.log2(max(p, 2))
+    if compression is not None:
+        from repro.distributed.compression import compressed_words
+        words = compressed_words(words, rows=(m + n) * (p - 1) / p)
+        messages *= 2
     extra_msgs, extra_words = _rules.get_rule(algo).extra_latency_words(k, p)
     mem = 2.0 * ops.storage_words(m, n, nnz=nnz) / p + (m + n) * k
     return IterCost(flops, words + extra_words, messages + extra_msgs, mem,

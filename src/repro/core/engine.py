@@ -53,6 +53,10 @@ On top of the unified loop every schedule gets the same stopping-criterion
 subsystem: fixed iterations (the paper's benchmark protocol), relative-error
 tolerance, and stall detection — adaptive stopping compiles to a
 ``lax.while_loop`` so distributed runs halt early without host round-trips.
+The distributed schedules also share ``panel_compression="int8"``:
+error-feedback int8 quantisation of the panel collectives
+(repro.distributed.compression), with the residuals carried through the
+same compiled loops.
 """
 
 from __future__ import annotations
@@ -120,6 +124,19 @@ class _Schedule:
     def collect(self, W, Ht):
         return W, Ht.T
 
+    def init_carry(self, m, n, dtype):
+        """The step loop's carried state: the rule's carry pytree, extended
+        to ``(rule_state, residuals)`` by schedules running compressed
+        panel collectives (error feedback is engine state, PR 5's carry
+        mechanism)."""
+        return self.s.rule.init_state(m, n, self.s.k, dtype)
+
+    def split_state(self, state):
+        """(rule_state, residuals-or-None) from the loop carry."""
+        if self.s.panel_compression is not None and self.name != "serial":
+            return state
+        return state, None
+
     def _factor_abstract_args(self, m, n, dtype):
         k = self.s.k
         return (jax.ShapeDtypeStruct((m, k), dtype),
@@ -140,10 +157,13 @@ class _GridSchedule(_Schedule):
     def grid_shape(self) -> tuple[int, int]:
         return (self.grid.pr, self.grid.pc)
 
+    def _state_sharding(self):
+        return None
+
     def arg_shardings(self):
         grid = self.grid
         in_sh = (grid.sharding(self._spec_A()), grid.sharding(grid.spec_W()),
-                 grid.sharding(grid.spec_Ht()), None, None)
+                 grid.sharding(grid.spec_Ht()), None, self._state_sharding())
         out_sh = (grid.sharding(grid.spec_W()), grid.sharding(grid.spec_Ht()),
                   None, None)
         return in_sh, out_sh
@@ -200,7 +220,7 @@ class _FaunSchedule(_GridSchedule):
 
     def cache_key(self):
         return (self.name, self.s.rule.cache_key(), self.s.ops.cache_key(),
-                self.s.panel_dtype, self.grid)
+                self.s.panel_dtype, self.s.panel_compression, self.grid)
 
     def prepare(self, A, W0, H0):
         grid, ops = self.grid, self.s.ops
@@ -211,10 +231,27 @@ class _FaunSchedule(_GridSchedule):
         Ht = jax.device_put(H0.T, grid.sharding(grid.spec_Ht()))
         return Arep, W, Ht, normA_sq
 
+    def init_carry(self, m, n, dtype):
+        state = super().init_carry(m, n, dtype)
+        if self.s.panel_compression is None:
+            return state
+        from repro.core.faun import faun_residual_spec, init_faun_residuals
+        sh = self.grid.sharding(faun_residual_spec(self.grid))
+        res = jax.tree.map(lambda r: jax.device_put(r, sh),
+                           init_faun_residuals(self.grid, m, n, self.s.k))
+        return (state, res)
+
+    def _state_sharding(self):
+        if self.s.panel_compression is None:
+            return None
+        from repro.core.faun import faun_residual_spec
+        return (None, self.grid.sharding(faun_residual_spec(self.grid)))
+
     def build_step(self) -> Callable:
         from repro.core.faun import build_faun_step
         return build_faun_step(self.grid, algo=self.s.rule, ops=self.s.ops,
-                               panel_dtype=self.s.panel_dtype)
+                               panel_dtype=self.s.panel_dtype,
+                               panel_compression=self.s.panel_compression)
 
     def abstract_args(self, m, n, dtype, nnz):
         grid = self.grid
@@ -239,7 +276,7 @@ class _NaiveSchedule(_Schedule):
 
     def cache_key(self):
         return (self.name, self.s.rule.cache_key(), self.s.ops.cache_key(),
-                self.mesh, self.axis)
+                self.s.panel_compression, self.mesh, self.axis)
 
     def _specs_A(self) -> tuple[P, P]:
         """Row- and column-blocked specs, extended over any extra
@@ -267,10 +304,21 @@ class _NaiveSchedule(_Schedule):
         Ht = jax.device_put(H0.T, sh(P(ax, None)))
         return (Arow, Acol), W, Ht, normA_sq
 
+    def init_carry(self, m, n, dtype):
+        state = super().init_carry(m, n, dtype)
+        if self.s.panel_compression is None:
+            return state
+        from repro.core.naive import init_naive_residuals, naive_residual_spec
+        sh = NamedSharding(self.mesh, naive_residual_spec(self.axis))
+        res = jax.tree.map(lambda r: jax.device_put(r, sh),
+                           init_naive_residuals(self.p, m, n, self.s.k))
+        return (state, res)
+
     def build_step(self) -> Callable:
         from repro.core.naive import build_naive_step
         base = build_naive_step(self.mesh, algo=self.s.rule, axis=self.axis,
-                                ops=self.s.ops)
+                                ops=self.s.ops,
+                                panel_compression=self.s.panel_compression)
 
         def step(Arep, W, Ht, normA_sq, state):
             return base(Arep[0], Arep[1], W, Ht, normA_sq, state)
@@ -287,8 +335,12 @@ class _NaiveSchedule(_Schedule):
         sh = lambda spec: NamedSharding(self.mesh, spec)
         ax = self.axis
         spec_row, spec_col = self._specs_A()
+        state_sh = None
+        if self.s.panel_compression is not None:
+            from repro.core.naive import naive_residual_spec
+            state_sh = (None, sh(naive_residual_spec(ax)))
         in_sh = ((sh(spec_row), sh(spec_col)), sh(P(ax, None)),
-                 sh(P(ax, None)), None, None)
+                 sh(P(ax, None)), None, state_sh)
         out_sh = (sh(P(ax, None)), sh(P(ax, None)), None, None)
         return in_sh, out_sh
 
@@ -316,7 +368,7 @@ class _GspmdSchedule(_GridSchedule):
 
     def cache_key(self):
         return (self.name, self.s.rule.cache_key(), self.gops.cache_key(),
-                self.grid)
+                self.s.panel_compression, self.grid)
 
     def _spec_A(self):
         # Global-view sparse A is one 1×1 block with the flat triplet dim
@@ -338,10 +390,21 @@ class _GspmdSchedule(_GridSchedule):
         Ht = jax.device_put(H0.T, grid.sharding(grid.spec_Ht()))
         return Arep, W, Ht, normA_sq
 
+    def init_carry(self, m, n, dtype):
+        state = super().init_carry(m, n, dtype)
+        if self.s.panel_compression is None:
+            return state
+        from repro.core.gspmd import init_gspmd_residuals
+        return (state, init_gspmd_residuals(m, n, self.s.k))
+
     def build_step(self) -> Callable:
         from repro.core.gspmd import gspmd_iteration
+        compress = None
+        if self.s.panel_compression is not None:
+            from repro.distributed.compression import get_compressor
+            compress = get_compressor(self.s.panel_compression)
         return functools.partial(gspmd_iteration, algo=self.s.rule,
-                                 ops=self.gops)
+                                 ops=self.gops, compress=compress)
 
     def abstract_args(self, m, n, dtype, nnz):
         Aabs = self.gops.abstract_global_A(m, n, dtype, nnz, self.grid.p)
@@ -376,6 +439,15 @@ class NMFSolver:
     surfaces as ``NMFResult.extras["rule_state"]``.  The legacy entry
     points (``aunmf.fit``, ``faun.fit``, ``naive.fit``, ``gspmd.fit``) are
     thin wrappers over this class.
+
+    ``panel_compression="int8"`` compresses the distributed schedules' panel
+    collectives (Gram all-reduces, panel all-gathers and reduce-scatters)
+    to int8 payloads with two-sided fp32 scales and error feedback — the
+    quantisation residuals ride the engine's state carry and surface as
+    ``NMFResult.extras["panel_residuals"]`` (see
+    ``repro.distributed.compression``; gspmd emulates the numerics only).
+    The default ``None`` keeps the exact wire format bit-identically.  It
+    does not compose with ``panel_dtype`` (both rewrite the wire format).
     """
 
     def __init__(self, k: int, *, algo: "_rules.RuleSpec" = "bpp",
@@ -384,11 +456,12 @@ class NMFSolver:
                  mesh: Mesh | None = None, axis: str = "p",
                  max_iters: int = 30, tol: float | None = None,
                  stall_iters: int = 0, stall_tol: float = 1e-6,
-                 panel_dtype=None, donate: bool = False):
+                 panel_dtype=None, panel_compression: str | None = None,
+                 donate: bool = False):
         if schedule not in SCHEDULES:
             raise ValueError(f"unknown schedule {schedule!r}; "
                              f"choose from {SCHEDULES}")
-        self.rule = _rules.get_rule(algo)    # validates early
+        self.rule = self._base_rule = _rules.get_rule(algo)  # validates early
         self.ops = _backends.get_backend(backend)
         if panel_dtype is not None:
             if schedule != "faun":
@@ -398,8 +471,31 @@ class NMFSolver:
                 raise ValueError(f"backend {self.ops.name!r} does not "
                                  f"support low-precision panels "
                                  f"(panel_dtype)")
+        if panel_compression is not None:
+            from repro.distributed.compression import COMPRESSIONS
+            if panel_compression not in COMPRESSIONS:
+                raise ValueError(
+                    f"unknown panel_compression {panel_compression!r}; "
+                    f"choose from {COMPRESSIONS} or None")
+            if schedule == "serial":
+                raise ValueError(
+                    "panel_compression compresses the distributed panel "
+                    "collectives; the serial schedule has none — use "
+                    "schedule='faun' (a 1×1 grid exercises the quantisation "
+                    "numerics single-device)")
+            if panel_dtype is not None:
+                # Both knobs rewrite the panel wire format: panel_dtype
+                # ships bf16 bit patterns, panel_compression ships int8 +
+                # scales.  Composing them would quantise an already-rounded
+                # panel while the cost model could only account for one —
+                # refuse instead of silently picking an order.
+                raise ValueError(
+                    "panel_dtype and panel_compression both rewrite the "
+                    "panel wire format and do not compose; pick one "
+                    "(int8 compression already halves bf16's panel bytes)")
         self.k, self.algo = k, self.rule.name
         self.panel_dtype, self.donate = panel_dtype, donate
+        self.panel_compression = panel_compression
         self.stopping = StoppingCriterion(max_iters=max_iters, tol=tol,
                                           stall_iters=stall_iters,
                                           stall_tol=stall_tol)
@@ -427,6 +523,10 @@ class NMFSolver:
             W0: jax.Array | None = None) -> NMFResult:
         m, n = A.shape
         dtype = getattr(A, "dtype", jnp.float32)
+        # Rules that size themselves from the problem (inner_iters=None)
+        # specialise here, where the global dims are first known; the
+        # prepared rule feeds the run-cache key, so shape changes recompile.
+        self.rule = self._base_rule.prepare_global(m, n, self.k)
         if key is None:
             key = jax.random.PRNGKey(0)
         if H0 is None:
@@ -436,7 +536,7 @@ class NMFSolver:
                         dtype=dtype)
 
         Arep, W, Ht, normA_sq = self._schedule.prepare(A, W0, H0)
-        state0 = self.rule.init_state(m, n, self.k, dtype)
+        state0 = self._schedule.init_carry(m, n, dtype)
         crit = self.stopping
         run = _cached_run(self._schedule, crit, self.donate)
         if crit.adaptive:
@@ -448,21 +548,25 @@ class NMFSolver:
                                      crit.max_iters)
             iters_run = crit.max_iters
         W, H = self._schedule.collect(W, Ht)
-        return NMFResult(
-            W=W, H=H, rel_errors=rels, algo=self.algo, iters=iters_run,
-            extras={"schedule": self.schedule, "backend": self.backend,
-                    "stopped_early": iters_run < crit.max_iters,
-                    "rule_state": (None if state is None
-                                   else jax.device_get(state))})
+        rule_state, residuals = self._schedule.split_state(state)
+        extras = {"schedule": self.schedule, "backend": self.backend,
+                  "stopped_early": iters_run < crit.max_iters,
+                  "rule_state": (None if rule_state is None
+                                 else jax.device_get(rule_state))}
+        if residuals is not None:
+            extras["panel_residuals"] = jax.device_get(residuals)
+        return NMFResult(W=W, H=H, rel_errors=rels, algo=self.algo,
+                         iters=iters_run, extras=extras)
 
     # -- AOT lowering (dry-run / roofline) ----------------------------------
 
     def lower_step(self, m: int, n: int, *, dtype=jnp.float32,
                    nnz: int | None = None):
         """AOT-lower one iteration for HLO accounting, without data."""
+        self.rule = self._base_rule.prepare_global(m, n, self.k)
         step = self._schedule.build_step()
         args = self._schedule.abstract_args(m, n, dtype, nnz) \
-            + (self.rule.init_state(m, n, self.k, dtype),)
+            + (self._schedule.init_carry(m, n, dtype),)
         shardings = self._schedule.arg_shardings()
         if shardings is None:
             jstep = jax.jit(step)
@@ -477,12 +581,15 @@ class NMFSolver:
                      bpp_iters: float = 1.0):
         """α-β-γ per-iteration cost prediction for this solver's schedule,
         with the A-product flops supplied by the backend (dense m·n·k vs
-        sparse 2·nnz·k per product)."""
+        sparse 2·nnz·k per product) and the communicated words scaled for
+        ``panel_compression``."""
         from repro.core import costmodel
         pr, pc = self._schedule.grid_shape()
+        rule = self._base_rule.prepare_global(m, n, self.k)
         return costmodel.schedule_cost(
-            self.schedule, m, n, self.k, pr=pr, pc=pc, algo=self.rule,
-            backend=self.ops, nnz=nnz, bpp_iters=bpp_iters)
+            self.schedule, m, n, self.k, pr=pr, pc=pc, algo=rule,
+            backend=self.ops, nnz=nnz, bpp_iters=bpp_iters,
+            compression=self.panel_compression)
 
 
 # ---------------------------------------------------------------------------

@@ -72,7 +72,8 @@ def matmul_reducescatter(Y_loc: jax.Array, axis: str, *,
 # ---------------------------------------------------------------------------
 
 def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, state, *, row_axes,
-                   col_axis, algo, ops=None, panel_dtype=None):
+                   col_axis, algo, ops=None, panel_dtype=None,
+                   compress=None):
     """One AU-NMF iteration of Algorithm 3 on local blocks.
 
     A_blk  : (m/prE, n/pc)  local data block (prE = pod*pr on multi-pod),
@@ -81,12 +82,17 @@ def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, state, *, row_axes,
     W_blk  : (m/p, k)       local W rows
     Ht_blk : (n/p, k)       local Hᵀ rows  (H column block, transposed)
     state  : the update rule's carry pytree (None for stateless rules),
-             replicated across the grid
+             replicated across the grid; under ``compress`` the carry is
+             ``(rule_state, residuals)`` with the error-feedback residuals
+             stacked over leading mesh-axis dims (device-local)
     row_axes: mesh axis name(s) forming the grid-row dimension ("pod","pr")
     col_axis: mesh axis name for grid columns ("pc")
     algo   : a registered algorithm name or ``repro.core.rules.UpdateRule``
     ops    : repro.backends.LocalOps supplying the local products
              (None = DenseOps, plain XLA)
+    compress: a ``repro.distributed.compression`` panel compressor (None =
+             the exact collectives, bit-identical to the pre-compression
+             path)
 
     Returns (W_blk, Ht_blk, sq_err, state).
     """
@@ -95,6 +101,14 @@ def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, state, *, row_axes,
         from repro.backends import DenseOps
         ops = DenseOps()
     rule = _rules.get_rule(algo)
+    res = None
+    if compress is not None:
+        # Unstack the per-device residual carry: leaves arrive with
+        # singleton leading mesh-axis dims (one per grid axis).
+        state, res_stacked = state
+        n_lead = len(all_axes)
+        res = {key: v.reshape(v.shape[n_lead:])
+               for key, v in res_stacked.items()}
     mm, mm_t, gram = ops.mm, ops.mm_t, ops.gram
     if panel_dtype is not None:
         # Beyond-paper: ship factor panels over the wire in bf16 (half the
@@ -126,25 +140,53 @@ def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, state, *, row_axes,
         def gather_low(x, axis):
             return allgather_panel(x, axis, concat_axis=0)
 
+    # The four panel collectives route through one indirection: exact
+    # psum / all-gather / psum_scatter, or the int8 + error-feedback
+    # equivalents (each threading its residual through ``res``).
+    if compress is None:
+        def panel_allreduce(x, axes, _key):
+            return lax.psum(x, tuple(axes))
+
+        def panel_allgather(x, axes, _key):
+            g = gather_low(x, axes[0])
+            for ax in axes[1:]:
+                g = allgather_panel(g, ax, concat_axis=0) \
+                    if panel_dtype is None else gather_low(g, ax)
+            return g
+
+        def panel_reduce_scatter(x, axes, _key):
+            # Scatter outer-to-inner to land in the staged block layout.
+            for ax in axes:
+                x = matmul_reducescatter(x, ax, scatter_axis=0)
+            return x
+    else:
+        def panel_allreduce(x, axes, key):
+            y, res[key] = compress.allreduce(x, tuple(axes), res[key])
+            return y
+
+        def panel_allgather(x, axes, key):
+            y, res[key] = compress.all_gather(x, tuple(axes), res[key])
+            return y
+
+        def panel_reduce_scatter(x, axes, key):
+            y, res[key] = compress.reduce_scatter(x, tuple(axes), res[key])
+            return y
+
     # ---- W given H (paper lines 3–8) ----
-    HHt = lax.psum(gram(Ht_blk), all_axes)                        # k×k
-    Hj_t = gather_low(Ht_blk, row_axes[-1])
-    if len(row_axes) == 2:  # multi-pod: finish the gather across pods
-        Hj_t = allgather_panel(Hj_t, row_axes[0], concat_axis=0) \
-            if panel_dtype is None else gather_low(Hj_t, row_axes[0])
+    HHt = panel_allreduce(gram(Ht_blk), all_axes, "gram_w")       # k×k
+    # Gather innermost-axis first (multi-pod finishes across pods).
+    Hj_t = panel_allgather(Ht_blk, tuple(reversed(row_axes)), "gather_h")
     V = mm(cast(A_blk), Hj_t)                                     # (m/prE, k)
-    AHt_blk = matmul_reducescatter(V, col_axis, scatter_axis=0)   # (m/p, k)
+    AHt_blk = panel_reduce_scatter(V, (col_axis,), "rs_w")        # (m/p, k)
     W_blk, state = rule.update_w(HHt, AHt_blk, W_blk, state,
                                  norm_psum=norm_psum)
 
     # ---- H given W (paper lines 9–14) ----
-    WtW = lax.psum(gram(W_blk), all_axes)                         # k×k
-    Wi = gather_low(W_blk, col_axis)                              # (m/prE, k)
+    WtW = panel_allreduce(gram(W_blk), all_axes, "gram_h")        # k×k
+    Wi = panel_allgather(W_blk, (col_axis,), "gather_w")          # (m/prE, k)
     Yt = mm_t(cast(A_blk), Wi)                                    # (n/pc, k)
     # Scatter outer-to-inner (pod, then pr) to land in the (pc,pod,pr) layout.
-    WtA_t_blk = Yt
-    for ax in row_axes:
-        WtA_t_blk = matmul_reducescatter(WtA_t_blk, ax, scatter_axis=0)
+    WtA_t_blk = panel_reduce_scatter(Yt, tuple(row_axes), "rs_h")
     Ht_blk, state = rule.update_h(WtW, WtA_t_blk, Ht_blk, state,
                                   norm_psum=norm_psum)
 
@@ -155,6 +197,9 @@ def faun_iteration(A_blk, W_blk, Ht_blk, normA_sq, state, *, row_axes,
         all_axes)
     quad = jnp.sum(WtW.astype(jnp.float32) * HHt_new.astype(jnp.float32))
     sq_err = normA_sq - 2.0 * cross + quad
+    if compress is not None:
+        state = (state, {key: v.reshape((1,) * len(all_axes) + v.shape)
+                         for key, v in res.items()})
     return W_blk, Ht_blk, sq_err, state
 
 
@@ -202,6 +247,32 @@ class FaunGrid:
         return NamedSharding(self.mesh, spec)
 
 
+def faun_residual_spec(grid: FaunGrid) -> P:
+    """PartitionSpec of one stacked error-feedback residual leaf: every
+    leaf is a per-device (rows, k) panel stacked over leading mesh-axis
+    dims (one per grid axis), so residuals travel device-local through
+    shard_map instead of replicated like rule state."""
+    return P(*grid.row_axes, grid.col_axis, None, None)
+
+
+def init_faun_residuals(grid: FaunGrid, m: int, n: int, k: int):
+    """Zero error-feedback residuals for the six compressed collectives of
+    one FAUN iteration, keyed like ``faun_iteration`` consumes them.  Leaf
+    layout: (*mesh_axis_sizes, local_rows, k) fp32."""
+    lead = tuple(grid.mesh.shape[a] for a in grid.row_axes) \
+        + (grid.mesh.shape[grid.col_axis],)
+    pr, pc, p = grid.pr, grid.pc, grid.p
+    z = lambda *s: jnp.zeros(lead + s, jnp.float32)
+    return {
+        "gram_w": z(k, k),            # HHᵀ all-reduce
+        "gather_h": z(n // p, k),     # H panel all-gather
+        "rs_w": z(m // pr, k),        # A·Hᵀ reduce-scatter
+        "gram_h": z(k, k),            # WᵀW all-reduce
+        "gather_w": z(m // p, k),     # W panel all-gather
+        "rs_h": z(n // pc, k),        # WᵀA reduce-scatter
+    }
+
+
 def make_faun_mesh(pr: int, pc: int, *, devices=None) -> FaunGrid:
     devices = devices if devices is not None else jax.devices()
     assert len(devices) >= pr * pc, (len(devices), pr, pc)
@@ -212,7 +283,7 @@ def make_faun_mesh(pr: int, pc: int, *, devices=None) -> FaunGrid:
 
 def build_faun_step(grid: FaunGrid, *, algo, ops=None,
                     backend: str | None = None, use_pallas: bool = False,
-                    panel_dtype=None):
+                    panel_dtype=None, panel_compression: str | None = None):
     """Returns step(A, W, Ht, normA_sq, state) -> (W, Ht, sq_err, state) as
     a shard_mapped, jit-compatible callable over *global* arrays.
 
@@ -223,6 +294,11 @@ def build_faun_step(grid: FaunGrid, *, algo, ops=None,
     whose carry pytree travels replicated (the ``P()`` specs).
     ``backend="dense"|"pallas"|"sparse"`` and ``use_pallas=True`` are the
     legacy spellings, resolved through the same registry.
+
+    With ``panel_compression="int8"`` the step's carry is
+    ``(rule_state, residuals)`` — build the residual half with
+    ``init_faun_residuals(grid, m, n, k)`` — and the panel collectives move
+    int8 payloads with fp32 row-scale sidecars and error feedback.
     """
     from repro.backends import get_backend
     if ops is None:
@@ -230,22 +306,31 @@ def build_faun_step(grid: FaunGrid, *, algo, ops=None,
     if panel_dtype is not None and not ops.supports_panel_dtype:
         raise ValueError(f"low-precision panels are not supported on the "
                          f"{ops.name!r} backend")
+    compress = None
+    state_spec = P()
+    if panel_compression is not None:
+        from repro.distributed.compression import get_compressor
+        compress = get_compressor(panel_compression, dict(grid.mesh.shape))
+        state_spec = (P(), faun_residual_spec(grid))
 
     body = functools.partial(
         faun_iteration, row_axes=grid.row_axes, col_axis=grid.col_axis,
-        algo=_rules.get_rule(algo), ops=ops, panel_dtype=panel_dtype)
+        algo=_rules.get_rule(algo), ops=ops, panel_dtype=panel_dtype,
+        compress=compress)
 
     return shard_map(
         body, mesh=grid.mesh,
-        in_specs=(ops.spec_A(grid), grid.spec_W(), grid.spec_Ht(), P(), P()),
-        out_specs=(grid.spec_W(), grid.spec_Ht(), P(), P()),
+        in_specs=(ops.spec_A(grid), grid.spec_W(), grid.spec_Ht(), P(),
+                  state_spec),
+        out_specs=(grid.spec_W(), grid.spec_Ht(), P(), state_spec),
     )
 
 
 def fit(A, k: int, *, grid: FaunGrid, algo: str = "bpp", iters: int = 30,
         key: jax.Array | None = None, H0: jax.Array | None = None,
         W0: jax.Array | None = None, use_pallas: bool = False,
-        panel_dtype=None, donate: bool = True) -> NMFResult:
+        panel_dtype=None, panel_compression: str | None = None,
+        donate: bool = True) -> NMFResult:
     """Distributed AU-NMF.  Bit-compatible with core.aunmf.fit given the same
     (W0, H0) up to collective reduction-order rounding.
 
@@ -257,17 +342,19 @@ def fit(A, k: int, *, grid: FaunGrid, algo: str = "bpp", iters: int = 30,
     backend = "pallas" if use_pallas else infer_backend(A)
     solver = NMFSolver(k, algo=algo, schedule="faun", backend=backend,
                        grid=grid, max_iters=iters, panel_dtype=panel_dtype,
-                       donate=donate)
+                       panel_compression=panel_compression, donate=donate)
     return solver.fit(A, key=key, H0=H0, W0=W0)
 
 
 def lower_step(grid: FaunGrid, m: int, n: int, k: int, *, algo: str = "bpp",
                dtype=jnp.float32, use_pallas: bool = False, panel_dtype=None,
+               panel_compression: str | None = None,
                backend: str | None = None, nnz: int | None = None):
     """AOT-lower one FAUN iteration for dry-run / roofline analysis."""
     from repro.core.engine import NMFSolver
     if backend is None:
         backend = "pallas" if use_pallas else "dense"
     solver = NMFSolver(k, algo=algo, schedule="faun", backend=backend,
-                       grid=grid, panel_dtype=panel_dtype)
+                       grid=grid, panel_dtype=panel_dtype,
+                       panel_compression=panel_compression)
     return solver.lower_step(m, n, dtype=dtype, nnz=nnz)

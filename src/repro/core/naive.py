@@ -33,32 +33,46 @@ from repro.util.compat import shard_map
 
 
 def naive_iteration(Arow, Acol, W_blk, Ht_blk, normA_sq, state, *, axis: str,
-                    algo, ops=None):
+                    algo, ops=None, compress=None):
     """One iteration of Algorithm 2 on local blocks (inside shard_map).
 
     Arow: (m/p, n)   row block of A          W_blk: (m/p, k)
     Acol: (m, n/p)   column block of A       Ht_blk: (n/p, k)
     (both A blocks in whatever representation ``ops`` understands);
     ``state`` is the update rule's carry pytree (None for stateless rules),
-    replicated over the mesh.
+    replicated over the mesh.  Under ``compress`` the carry is
+    ``(rule_state, residuals)``: the two full-factor all-gathers — the
+    schedule's only panel collectives — move int8 payloads with error
+    feedback, and the residuals travel device-local (stacked leading mesh
+    dim).
     """
     if ops is None:
         from repro.backends import DenseOps
         ops = DenseOps()
     rule = _rules.get_rule(algo)
+    res = None
+    if compress is not None:
+        state, res_stacked = state
+        res = {key: v.reshape(v.shape[1:]) for key, v in res_stacked.items()}
 
     def norm_psum(v):
         return lax.psum(v, axis)
 
+    def panel_allgather(x, key):
+        if compress is None:
+            return lax.all_gather(x, axis, axis=0, tiled=True)
+        y, res[key] = compress.all_gather(x, (axis,), res[key])
+        return y
+
     # --- W given H: all-gather whole H, redundant Gram (paper lines 3-4) ---
-    Ht = lax.all_gather(Ht_blk, axis, axis=0, tiled=True)     # (n, k)
+    Ht = panel_allgather(Ht_blk, "gather_h")                  # (n, k)
     HHt = ops.gram(Ht)                                        # redundant k×k
     AHt_blk = ops.mm(Arow, Ht)                                # (m/p, k)
     W_blk, state = rule.update_w(HHt, AHt_blk, W_blk, state,
                                  norm_psum=norm_psum)
 
     # --- H given W: all-gather whole W, redundant Gram (lines 5-6) ---
-    W = lax.all_gather(W_blk, axis, axis=0, tiled=True)       # (m, k)
+    W = panel_allgather(W_blk, "gather_w")                    # (m, k)
     WtW = ops.gram(W)
     WtA_t_blk = ops.mm_t(Acol, W)                             # (n/p, k)
     Ht_blk, state = rule.update_h(WtW, WtA_t_blk, Ht_blk, state,
@@ -70,27 +84,49 @@ def naive_iteration(Arow, Acol, W_blk, Ht_blk, normA_sq, state, *, axis: str,
                              * Ht_blk.astype(jnp.float32)), axis)
     quad = jnp.sum(WtW.astype(jnp.float32) * HHt_new.astype(jnp.float32))
     sq_err = normA_sq - 2.0 * cross + quad
+    if compress is not None:
+        state = (state, {key: v[None] for key, v in res.items()})
     return W_blk, Ht_blk, sq_err, state
 
 
-def build_naive_step(mesh: Mesh, *, algo, axis: str = "p", ops=None):
+def naive_residual_spec(axis: str) -> P:
+    """Spec of one stacked residual leaf: (p, local_rows, k), device-local."""
+    return P(axis, None, None)
+
+
+def init_naive_residuals(p: int, m: int, n: int, k: int):
+    """Zero error-feedback residuals for Algorithm 2's two factor gathers."""
+    return {"gather_h": jnp.zeros((p, n // p, k), jnp.float32),
+            "gather_w": jnp.zeros((p, m // p, k), jnp.float32)}
+
+
+def build_naive_step(mesh: Mesh, *, algo, axis: str = "p", ops=None,
+                     panel_compression: str | None = None):
     from repro.backends import get_backend
     ops = get_backend(ops if ops is not None else "dense")
+    compress = None
+    state_spec = P()
+    if panel_compression is not None:
+        from repro.distributed.compression import get_compressor
+        compress = get_compressor(panel_compression, dict(mesh.shape))
+        state_spec = (P(), naive_residual_spec(axis))
     body = functools.partial(naive_iteration, axis=axis,
-                             algo=_rules.get_rule(algo), ops=ops)
+                             algo=_rules.get_rule(algo), ops=ops,
+                             compress=compress)
     extra = (None,) * (ops.block_leaf_ndim - 2)   # BlockCOO triplet dim
     return shard_map(
         body, mesh=mesh,
         in_specs=(P(axis, None, *extra), P(None, axis, *extra),
-                  P(axis, None), P(axis, None), P(), P()),
-        out_specs=(P(axis, None), P(axis, None), P(), P()),
+                  P(axis, None), P(axis, None), P(), state_spec),
+        out_specs=(P(axis, None), P(axis, None), P(), state_spec),
     )
 
 
 def fit(A, k: int, *, mesh: Mesh, algo: str = "bpp", iters: int = 30,
         key: jax.Array | None = None, H0: jax.Array | None = None,
         W0: jax.Array | None = None, axis: str = "p",
-        backend: str | None = None) -> NMFResult:
+        backend: str | None = None,
+        panel_compression: str | None = None) -> NMFResult:
     """Thin wrapper over ``core.engine.NMFSolver(schedule="naive")``; sparse
     input (BCOO / BlockCOO) routes through the block-local SpMM backend."""
     from repro.backends import infer_backend
@@ -98,7 +134,8 @@ def fit(A, k: int, *, mesh: Mesh, algo: str = "bpp", iters: int = 30,
     if backend is None:
         backend = infer_backend(A)
     solver = NMFSolver(k, algo=algo, schedule="naive", backend=backend,
-                       mesh=mesh, axis=axis, max_iters=iters)
+                       mesh=mesh, axis=axis, max_iters=iters,
+                       panel_compression=panel_compression)
     return solver.fit(A, key=key, H0=H0, W0=W0)
 
 

@@ -214,6 +214,18 @@ class UpdateRule:
         del m, n, k, dtype
         return None
 
+    def prepare_global(self, m: int, n: int, k: int) -> "UpdateRule":
+        """Hook called once per fit / lower / predict_cost with the GLOBAL
+        problem dimensions, before any tracing; return ``self`` or a
+        configured clone.  Rules that derive configuration from the problem
+        size resolve it here — the accelerated family turns
+        ``inner_iters=None`` into the Gillis–Glineur flop-ratio budget.  The
+        returned rule is what the engine runs and what feeds its compiled-
+        run cache key, so size-derived configuration participates in
+        compilation identity."""
+        del m, n, k
+        return self
+
     # -- the two half-updates ------------------------------------------------
 
     def update_w(self, G, R, X, state=None, *, norm_psum=_identity):
@@ -412,18 +424,58 @@ class _AcceleratedRule(UpdateRule):
 
     At ``inner_iters=1`` the accelerated rules are bit-identical to their
     plain counterparts.
+
+    ``inner_iters=None`` derives the budget from the problem size at solve
+    time — Gillis & Glineur's §3.2 heuristic: the W-half may spend up to
+    ``1 + ⌊α·ρ_W⌋`` sweeps where ρ_W = 1 + (mn + nk)/(mk + m) is the ratio
+    of the products' cost to one sweep's cost (ρ_H swaps m ↔ n), and α is
+    the rule-specific ``accel_alpha`` they fit empirically (2.0 for MU, 0.5
+    for HALS).  The derivation happens in ``prepare_global`` — the engine
+    calls it with the global (m, n, k) before compiling — which returns a
+    clone carrying per-half budgets ``_budget_w`` / ``_budget_h``; the
+    cost hooks raise until then, since an unprepared ``None`` has no flop
+    count.
     """
 
-    def __init__(self, *, inner_iters: int = 4, delta: float = 0.01,
+    #: Gillis–Glineur α of the derived inner budget 1 + ⌊α·ρ⌋ (their §3.2
+    #: empirical settings: 2.0 for accelerated MU, 0.5 for accelerated HALS)
+    accel_alpha: float = 2.0
+
+    def __init__(self, *, inner_iters: int | None = 4, delta: float = 0.01,
                  fold_delta: float = 1e-6, l1: float = 0.0, l2: float = 0.0):
         super().__init__(l1=l1, l2=l2)
-        if inner_iters < 1:
-            raise ValueError(f"inner_iters must be >= 1, got {inner_iters}")
+        if inner_iters is not None and inner_iters < 1:
+            raise ValueError(f"inner_iters must be >= 1 or None (derive the "
+                             f"Gillis–Glineur budget), got {inner_iters}")
         if delta < 0 or fold_delta < 0:
             raise ValueError(f"delta must be >= 0, got {delta}/{fold_delta}")
-        self.inner_iters = int(inner_iters)
+        self.inner_iters = None if inner_iters is None else int(inner_iters)
         self.delta = float(delta)
         self.fold_delta = float(fold_delta)
+        # Per-half sweep budgets; fixed inner_iters applies to both halves,
+        # None resolves in prepare_global.
+        self._budget_w = self._budget_h = self.inner_iters
+
+    def _derived_budget(self, rows: int, cols: int, k: int) -> int:
+        rho = 1.0 + (rows * cols + cols * k) / (rows * k + rows)
+        return 1 + int(self.accel_alpha * rho)
+
+    def prepare_global(self, m, n, k):
+        if self.inner_iters is not None:
+            return self
+        import copy
+        rule = copy.copy(self)
+        rule._budget_w = self._derived_budget(m, n, k)
+        rule._budget_h = self._derived_budget(n, m, k)
+        return rule
+
+    def _budgets(self) -> tuple[int, int]:
+        if self._budget_w is None:
+            raise RuntimeError(
+                f"{self.name}: inner_iters=None derives the sweep budget "
+                f"from the global problem size; call prepare_global(m, n, k) "
+                f"first (NMFSolver does this at fit/lower/predict time)")
+        return self._budget_w, self._budget_h
 
     def init_state(self, m, n, k, dtype=jnp.float32):
         del m, n, k, dtype
@@ -470,13 +522,13 @@ class _AcceleratedRule(UpdateRule):
 
     def _update_w(self, G, R, X, state, *, norm_psum):
         X, l = self._accelerate(lambda X: self._sweep_w(G, R, X, norm_psum),
-                                X, norm_psum, budget=self.inner_iters,
+                                X, norm_psum, budget=self._budgets()[0],
                                 delta=self.delta)
         return X, self._count(state, "inner_w", l)
 
     def _update_h(self, G, R, X, state, *, norm_psum):
         X, l = self._accelerate(lambda X: self._sweep_h(G, R, X, norm_psum),
-                                X, norm_psum, budget=self.inner_iters,
+                                X, norm_psum, budget=self._budgets()[1],
                                 delta=self.delta)
         return X, self._count(state, "inner_h", l)
 
@@ -494,27 +546,31 @@ class _AcceleratedRule(UpdateRule):
     def luc_flops(self, m, n, k, *, bpp_iters: float = 1.0):
         # Budgeted (worst-case) flops: the early stop can only spend less.
         del bpp_iters
-        return self.inner_iters * 2.0 * (m + n) * k * k
+        bw, bh = self._budgets()
+        return bw * 2.0 * m * k * k + bh * 2.0 * n * k * k
 
     def extra_latency_words(self, k, p):
         if p <= 1:
             return 0.0, 0.0
-        # The base rule's per-sweep reductions (HALS: k column norms) are
-        # paid on every inner sweep; the stall-norm all-reduce (one scalar
-        # per sweep) only exists when the stall exit is live — at
-        # inner_iters=1 or delta=0 no change norm is ever computed, keeping
-        # the prediction honest for configurations that execute exactly
-        # like their plain counterparts.
+        # The base rule's per-sweep reductions (HALS: k column norms, a
+        # W-step property) are paid on every inner W sweep; the stall-norm
+        # all-reduce (one scalar per sweep, both halves) only exists when
+        # the stall exit is live — at a budget of 1 or delta=0 no change
+        # norm is ever computed, keeping the prediction honest for
+        # configurations that execute exactly like their plain
+        # counterparts.
+        bw, bh = self._budgets()
         base_m, base_w = super().extra_latency_words(k, p)
-        msgs, words = self.inner_iters * base_m, self.inner_iters * base_w
-        if self.inner_iters > 1 and self.delta > 0.0:
-            msgs += self.inner_iters * math.log2(p)
-            words += self.inner_iters * 2.0 * (p - 1) / p
+        msgs, words = bw * base_m, bw * base_w
+        if max(bw, bh) > 1 and self.delta > 0.0:
+            msgs += (bw + bh) / 2.0 * math.log2(p)
+            words += (bw + bh) * (p - 1) / p
         return msgs, words
 
     def cache_key(self):
         return super().cache_key() + (self.inner_iters, self.delta,
-                                      self.fold_delta)
+                                      self.fold_delta, self._budget_w,
+                                      self._budget_h)
 
 
 class AcceleratedMURule(_AcceleratedRule, MURule):
@@ -522,6 +578,7 @@ class AcceleratedMURule(_AcceleratedRule, MURule):
     (G, R) with the inner stall criterion."""
 
     name = "amu"
+    accel_alpha = 2.0
 
     def _sweep_w(self, G, R, X, norm_psum):
         return update_mu(G, R, X)
@@ -535,6 +592,7 @@ class AcceleratedHALSRule(_AcceleratedRule, HALSRule):
     per-column normalisation on every sweep)."""
 
     name = "ahals"
+    accel_alpha = 0.5
 
     def _sweep_w(self, G, R, X, norm_psum):
         return update_hals(G, R, X, normalize=True, norm_psum=norm_psum)

@@ -1,31 +1,244 @@
-"""Gradient compression with error feedback, for slow cross-pod links.
+"""Communication compression for the k-width panel collectives.
 
-int8 linear quantisation with a per-tensor (or per-row) fp32 scale: the
-cross-pod all-reduce then moves 1/4 of the bf16 bytes (1/2 of int8 sums as
-int32 — we reduce in int32 and rescale).  Error feedback (Seide et al.;
-Karimireddy et al. EF21) accumulates the quantisation residual locally and
-re-injects it next step, which is what makes 8-bit (or top-k) gradient
-exchange converge to the uncompressed fixed point.
+Every distributed AU-NMF iteration moves only k-width quantities — the two
+k×k Grams and the factor panels (paper Algorithm 3; `A` never crosses the
+wire).  This module compresses those collectives: symmetric int8 linear
+quantisation with two-sided fp32 scales — a shared per-column scale (NMF
+factor columns span wildly different magnitudes; see ``_col_scale``) under
+a per-row scale — reduced in int32 inside shard_map and rescaled.  Error
+feedback (Seide et al.; Karimireddy et al. EF21)
+accumulates each collective's quantisation residual locally and re-injects
+it on the next iteration, which is what makes 8-bit panel exchange converge
+to the uncompressed fixed point.
 
-Used by the shard_map DP trainer (distributed/pipeline.py and
-train/loop.py's compressed mode), where we own the reduction; in pure-GSPMD
-mode XLA owns the all-reduce and compression is N/A (DESIGN.md §8).
+The panel API (``Int8PanelCompressor``) is consumed by the schedule bodies
+(core/faun.py, core/naive.py, core/gspmd.py) behind the engine's
+``NMFSolver(..., panel_compression="int8")`` knob:
+
+  * ``all_gather``      int8 payload + fp32 row scales on the wire (¼ the
+                        panel bytes); scales are per-device, no sharing.
+  * ``reduce_scatter``  shared row scales via ``lax.pmax`` so the int8
+                        payloads are comparable, then an int8 ``all_to_all``
+                        with a local int32 chunk-sum per grid axis — the
+                        reduction itself is exact once quantised.
+  * ``allreduce``       the k×k Grams: shared scales, int32 ``psum`` at
+                        high resolution (``_GRAM_LEVELS``, not int8 —
+                        exact NNLS solvers amplify Gram noise; the int32
+                        payload is bandwidth-neutral either way).
+  * ``simulate``        quantise→dequantise with error feedback but no
+                        collective — the gspmd schedule's numerics-only
+                        emulation (XLA owns gspmd's wire, see core/gspmd.py);
+                        ``simulate_gram`` is its Gram-resolution variant.
+
+Residuals are plain fp32 pytrees the engine threads through its compiled
+``lax.scan`` / ``lax.while_loop`` as part of the step carry; inside
+shard_map they travel device-local (stacked leading mesh-axis dims, see the
+schedules' ``init_carry``).  ``zero_residuals`` builds the initial carry.
+
+The per-tensor helpers at the bottom (``quantize_int8``, ``compressed_pmean``,
+``topk_with_feedback``) are the generic gradient-compression primitives the
+panel API grew out of; ``distributed/fsdp.py``-style data-parallel training
+loops can use them directly on gradient pytrees.
 """
 
 from __future__ import annotations
-
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+#: valid ``NMFSolver(panel_compression=...)`` values (None = exact)
+COMPRESSIONS = ("int8",)
+
+_EPS = 1e-30          # scale guard; rows of exact zeros quantise to zeros
+
+_PANEL_LEVELS = 127.0          # int8 symmetric range for the factor panels
+#: Gram quantisation resolution: the k×k Grams ship as int32 anyway (same
+#: wire width as fp32), so they are quantised at ~2²³ levels — exact NNLS
+#: solvers (BPP) amplify Gram perturbations through the normal-equation
+#: solve, and int8 Grams + error feedback measurably diverge there, while
+#: 2²³-level noise (~1e-7 relative) is far below fp32 GEMM noise.  2²³
+#: keeps round(tot/scale) exact in fp32 and the int32 psum overflow-free
+#: for any realistic grid.
+_GRAM_LEVELS = float(2 ** 23)
+
+
+def _row_scale(tot: jax.Array, levels: float = _PANEL_LEVELS) -> jax.Array:
+    """Per-row fp32 scale of a (rows, k) panel: max|row| / levels."""
+    return (jnp.max(jnp.abs(tot), axis=tuple(range(1, tot.ndim))) / levels
+            + _EPS)
+
+
+def _col_scale(tot: jax.Array) -> jax.Array:
+    """Per-column fp32 scale of a (rows, k) panel: max|column|.
+
+    Quantisation is two-sided — columns are normalised by this scale before
+    the per-row int8 grid is applied — because NMF panel columns span wildly
+    different magnitudes: with a row-only scale, a weak factor column's
+    entries sit below half a quantisation step of the row maximum and the
+    column is wiped to zero, which kills it under HALS/BPP (the solvers
+    then divide by, or factorise, a vanishing Gram diagonal).  Column
+    scaling makes the noise relative to each column's own magnitude; the
+    k-word sidecar is negligible on the wire."""
+    return jnp.max(jnp.abs(tot), axis=tuple(range(tot.ndim - 1))) + _EPS
+
+
+class Int8PanelCompressor:
+    """int8 + error-feedback panel collectives over named mesh axes.
+
+    ``axis_sizes`` maps mesh-axis name → size (static, from the schedule's
+    grid) so the all-to-all chunk sums have static shapes.  Every method
+    takes the local fp32 panel ``x``, the named ``axes`` to communicate
+    over (in communication order), and the carried ``residual`` of ``x``'s
+    shape; all return ``(result_f32, new_residual)``.
+    """
+
+    name = "int8"
+
+    def __init__(self, axis_sizes: dict[str, int]):
+        self.axis_sizes = dict(axis_sizes)
+
+    # -- error-feedback front end (shared by every collective) --------------
+
+    def _ef_quantize(self, x, residual, *, col_axes=None, row_axes=None,
+                     levels: float = _PANEL_LEVELS):
+        """Add the carried residual, normalise columns by a shared
+        per-column scale (pmax over ``col_axes``), pick per-row scales
+        (pmax-shared over ``row_axes`` when the payloads must sum across
+        devices), quantise at ``levels`` resolution, and compute the next
+        residual.  Returns ``(q, row_scale, col_scale, new_residual)`` with
+        ``deq = q · row_scale[:, None] · col_scale[None, :]``.
+
+        A column whose fresh payload is exactly zero drops its carried
+        residual: dead factor columns propagate *exact* zeros through the
+        uncompressed iteration (HALS/BPP rely on that — a dead column's
+        Gram diagonal and right-hand side vanish together), and replaying
+        a stale residual into one re-injects noise that the solvers then
+        divide by an eps-guarded zero.  The lost correction is stale
+        information about a signal that no longer exists."""
+        x32 = x.astype(jnp.float32)
+        alive = jnp.max(jnp.abs(x32), axis=tuple(range(x.ndim - 1))) > 0
+        tot = x32 + residual * alive
+        cs = _col_scale(tot)
+        if col_axes:
+            cs = lax.pmax(cs, tuple(col_axes))
+        rs = _row_scale(tot / cs, levels)
+        if row_axes:
+            rs = lax.pmax(rs, tuple(row_axes))
+        # Quantise against ONE fused scale, floored at the smallest normal
+        # fp32.  XLA is free to rewrite ((tot/cs)/rs) as tot/(cs·rs), and
+        # for all-zero rows × dead columns the two eps-floored scales
+        # multiply into denormal territory — flushed to zero, the fused
+        # division turns 0/0 = NaN.  Flooring the explicit product keeps
+        # those entries exact zeros under any rewrite.
+        s = jnp.maximum(rs.reshape(rs.shape + (1,) * (tot.ndim - 1)) * cs,
+                        jnp.finfo(jnp.float32).tiny)
+        q = jnp.clip(jnp.round(tot / s), -levels, levels)
+        return q, rs, cs, tot - q * s
+
+    def _gram_levels(self, axes) -> float:
+        """Gram resolution, capped so the int32 psum over the reduction
+        axes cannot overflow (levels · p ≤ int32 max)."""
+        p = 1
+        for ax in axes:
+            p *= self.axis_sizes.get(ax, 1)
+        return float(min(int(_GRAM_LEVELS), (2 ** 31 - 1) // max(p, 1)))
+
+    # -- the three panel collectives ----------------------------------------
+
+    def all_gather(self, x, axes, residual):
+        """Gather a factor panel: int8 payload + fp32 row-scale sidecar,
+        gathered over each axis in order (innermost first, matching the
+        exact path's multi-pod staging); column scales are pmax-shared so
+        every device dequantises identically.  Wire: rows·k bytes + rows
+        scales vs 4·rows·k bytes exact."""
+        q, rs, cs, new_res = self._ef_quantize(x, residual, col_axes=axes)
+        g, s = q.astype(jnp.int8), rs
+        for ax in axes:
+            g = lax.all_gather(g, ax, axis=0, tiled=True)
+            s = lax.all_gather(s, ax, axis=0, tiled=True)
+        return g.astype(jnp.float32) * s[:, None] * cs[None, :], new_res
+
+    def reduce_scatter(self, x, axes, residual):
+        """Reduce-scatter a local GEMM panel: scales are pmax-shared over
+        ``axes`` so quantised payloads sum exactly; each axis then runs an
+        int8 (first hop) / int32 all-to-all plus a local chunk-sum, landing
+        the same rows as the exact path's staged ``psum_scatter``."""
+        q, rs, cs, new_res = self._ef_quantize(x, residual,
+                                               col_axes=axes, row_axes=axes)
+        part = q.astype(jnp.int8)
+        off = jnp.zeros((), jnp.int32)
+        blk = x.shape[0]
+        for ax in axes:
+            p_ax = self.axis_sizes[ax]
+            blk //= p_ax
+            off = off + lax.axis_index(ax) * blk
+            chunks = lax.all_to_all(part, ax, split_axis=0, concat_axis=0,
+                                    tiled=True)
+            part = chunks.reshape((p_ax, chunks.shape[0] // p_ax)
+                                  + chunks.shape[1:]).astype(jnp.int32).sum(0)
+        s = lax.dynamic_slice_in_dim(rs, off, blk)
+        return part.astype(jnp.float32) * s[:, None] * cs[None, :], new_res
+
+    def allreduce(self, x, axes, residual):
+        """All-reduce a k×k Gram: shared row scales, int32 psum, rescale.
+        Same word count as exact (int32 = fp32 width) plus the k-row scale
+        pmax — Grams are compressed for numerical uniformity (their
+        residuals feed the same error-feedback loop), not bandwidth, so
+        they quantise at ``_GRAM_LEVELS`` rather than int8: exact NNLS
+        solvers are unstable under int8 Gram noise (an indefinite quantised
+        Gram breaks BPP's PSD assumption and error feedback amplifies the
+        blow-up)."""
+        levels = self._gram_levels(axes)
+        q, rs, cs, new_res = self._ef_quantize(x, residual, col_axes=axes,
+                                               row_axes=axes, levels=levels)
+        tot = lax.psum(q.astype(jnp.int32), tuple(axes))
+        return tot.astype(jnp.float32) * rs[:, None] * cs[None, :], new_res
+
+    # -- global-view emulation (gspmd) --------------------------------------
+
+    def simulate(self, x, residual, *, levels: float = _PANEL_LEVELS):
+        """Quantise→dequantise with error feedback, no collective: the
+        gspmd schedule applies this where its virtual collectives sit (the
+        post-reduction products), reproducing the compressed numerics while
+        XLA keeps ownership of the actual wire format."""
+        q, rs, cs, new_res = self._ef_quantize(x, residual, levels=levels)
+        s = rs.reshape(rs.shape + (1,) * (x.ndim - 1))
+        return q * s * cs, new_res
+
+    def simulate_gram(self, x, residual):
+        """``simulate`` at Gram resolution — the gspmd analogue of
+        ``allreduce``'s high-resolution Gram quantisation."""
+        return self.simulate(x, residual, levels=_GRAM_LEVELS)
+
+
+def get_compressor(name: str,
+                   axis_sizes: dict[str, int] | None = None
+                   ) -> Int8PanelCompressor:
+    """Resolve a ``panel_compression`` name to a compressor instance."""
+    if name not in COMPRESSIONS:
+        raise ValueError(f"unknown panel_compression {name!r}; choose from "
+                         f"{COMPRESSIONS} or None")
+    return Int8PanelCompressor(axis_sizes or {})
+
+
+def compressed_words(exact_words: float, *, rows: float,
+                     scatter: bool = False) -> float:
+    """Cost-model word count for one compressed panel collective: int8
+    payload (¼ of the exact fp32 words) plus the fp32 scale sidecar —
+    ``rows`` scale words for a gather, 2·``rows`` for a reduce-scatter's
+    pmax all-reduce."""
+    return exact_words / 4.0 + (2.0 if scatter else 1.0) * rows
+
+
+# ---------------------------------------------------------------------------
+# Generic gradient-compression primitives (per-tensor scales, pytree-level).
+# ---------------------------------------------------------------------------
 
 def quantize_int8(x: jax.Array):
     """Symmetric per-tensor int8.  Returns (q int8, scale f32)."""
     x32 = x.astype(jnp.float32)
-    scale = jnp.max(jnp.abs(x32)) / 127.0 + 1e-30
+    scale = jnp.max(jnp.abs(x32)) / 127.0 + _EPS
     q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
@@ -59,7 +272,7 @@ def compressed_pmean(grads, residuals, axis: str):
     def leaf(g, r):
         tot = g.astype(jnp.float32) + r
         # shared scale across the axis so int32 sums are comparable
-        scale = lax.pmax(jnp.max(jnp.abs(tot)), axis) / 127.0 + 1e-30
+        scale = lax.pmax(jnp.max(jnp.abs(tot)), axis) / 127.0 + _EPS
         q = jnp.clip(jnp.round(tot / scale), -127, 127).astype(jnp.int32)
         mean_q = lax.psum(q, axis) / lax.psum(1, axis)
         deq_local = q.astype(jnp.float32) * scale
@@ -90,4 +303,5 @@ def topk_with_feedback(grads, residuals, *, frac: float = 0.01):
 
 
 def zero_residuals(params):
+    """Zero-initialised error-feedback carry matching ``params``' shapes."""
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

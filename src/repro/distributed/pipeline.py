@@ -6,11 +6,12 @@ tick t, stage s processes microbatch (t − s); activations hop stage→stage
 with ``lax.ppermute``.  Everything is differentiable (ppermute's transpose
 is the reverse permute), so ``jax.grad`` through ``pipeline_apply`` yields
 1F1B-equivalent *math* with GPipe scheduling — bubble fraction
-(S−1)/(M+S−1), the standard trade documented in EXPERIMENTS.md.
+(S−1)/(M+S−1), the standard GPipe trade.
 
 This composes with the FAUN/FSDP runtime: the "pod" axis of the production
-mesh can be repurposed as the pipeline axis (launch/train.py --pp), giving
-DP×TP×PP —the inter-pod links then carry only microbatch activations
+mesh (launch/mesh.py) can be repurposed as the pipeline axis
+(repro.launch.train --pp), giving DP×TP×PP — the inter-pod links then
+carry only microbatch activations
 (boundary activations, not weights), the right traffic shape for slow
 cross-pod links.
 """

@@ -5,7 +5,7 @@ Scheme (MaxText/Megatron conventions, ZeRO-3 style):
   * "fsdp"  — the data axes ("pod","data"): shards the non-TP dimension of
     every weight (parameters, grads, optimizer state all ~N/p per chip);
     XLA's SPMD inserts the all-gather-on-use / reduce-scatter-on-grad pairs —
-    which is exactly the paper's FAUN panel schedule (DESIGN.md §4).
+    which is exactly the paper's FAUN panel schedule (core/faun.py).
   * "tp"    — the "model" axis: heads / ffn / vocab / expert dimension.
   * replicated — norms, scalar gates, small biases.
 

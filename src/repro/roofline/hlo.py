@@ -113,6 +113,29 @@ def collective_stats(hlo_text: str) -> CollectiveStats:
     return st
 
 
+def collective_dtype_stats(hlo_text: str) -> list[tuple[str, str, tuple]]:
+    """Inventory of every collective's output tensors as (op, dtype, dims)
+    triples — one entry per tuple element for tuple-shaped ops (a
+    multi-operand ``(s8[...], s8[...]) all-to-all`` contributes one entry
+    per element).  This is the wire-format oracle the compressed-panel
+    tests assert against: an int8-compressed faun step's panel payloads
+    must appear as s8/s32 only, with f32 confined to 1-D scale sidecars
+    and the k×k error-byproduct reductions — and nothing A-shaped may
+    appear at all."""
+    out: list[tuple[str, str, tuple]] = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        for dt, dims in _SHAPE_RE.findall(m.group("outshape")):
+            if dt not in _DTYPE_BYTES:
+                continue
+            out.append((op, dt,
+                        tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
 def scan_trip_counts(hlo_text: str) -> list[int]:
     """Trip counts of while loops (scan over layer groups / kv chunks):
     collectives inside a loop body execute trip_count times.  XLA's HLO

@@ -1,5 +1,6 @@
-"""Roofline report: aggregates the dry-run JSONs into the EXPERIMENTS.md
-tables (40-cell baseline + NMF cells), adds MODEL_FLOPS = 6·N·D (dense) /
+"""Roofline report: aggregates the dry-run JSONs into the
+roofline_tables.md tables (40-cell baseline + NMF cells), adds
+MODEL_FLOPS = 6·N·D (dense) /
 6·N_active·D (MoE) and the useful-compute ratio.
 
   PYTHONPATH=src python -m repro.roofline.report            # print tables

@@ -291,6 +291,137 @@ def _():
                                atol=5e-4)
 
 
+@check("compressed_panels_reach_exact_tolerance_every_schedule")
+def _():
+    # ISSUE acceptance: with int8 + error feedback the compressed run must
+    # reach the exact path's tolerance in <= 1.3x the iterations, on every
+    # distributed schedule.  Residuals surface as extras["panel_residuals"].
+    grid = faun.make_faun_mesh(4, 2)
+    mesh = make_mesh((8,), ("p",))
+    tol = 1e-2
+    for kwargs in [dict(schedule="faun", grid=grid),
+                   dict(schedule="naive", mesh=mesh),
+                   dict(schedule="gspmd", grid=grid)]:
+        ex = NMFSolver(K, algo="bpp", max_iters=100, tol=tol,
+                       **kwargs).fit(A, key=KEY)
+        co = NMFSolver(K, algo="bpp", max_iters=100, tol=tol,
+                       panel_compression="int8", **kwargs).fit(A, key=KEY)
+        assert ex.extras["stopped_early"], kwargs
+        assert co.extras["stopped_early"], kwargs
+        assert float(co.rel_errors[-1]) <= tol, kwargs
+        budget = int(np.ceil(1.3 * int(ex.iters)))
+        assert int(co.iters) <= budget, (kwargs, int(ex.iters), int(co.iters))
+        res = co.extras["panel_residuals"]
+        leaves = jax.tree_util.tree_leaves(res)
+        assert leaves, kwargs
+        for v in leaves:
+            assert np.isfinite(np.asarray(v, np.float32)).all(), kwargs
+
+
+@check("compressed_faun_hlo_int8_panels_only")
+def _():
+    # The wire-format acceptance criterion: in the compressed faun step the
+    # panel payloads are s8 (gathers, all-to-all scatters) and s32 (Gram
+    # reductions); f32 appears ONLY as 1-D scale sidecars, the kxk
+    # error-byproduct Grams, and the error scalar.  Nothing A-sized moves.
+    from repro.roofline.hlo import collective_dtype_stats
+    grid = faun.make_faun_mesh(4, 2)
+    solver = NMFSolver(K, algo="mu", schedule="faun", grid=grid,
+                       panel_compression="int8")
+    txt = solver.lower_step(M, N).compile().as_text()
+    entries = collective_dtype_stats(txt)
+    ops_by_dtype = {(op, dt) for op, dt, _ in entries}
+    assert ("all-gather", "s8") in ops_by_dtype, sorted(ops_by_dtype)
+    assert ("all-to-all", "s8") in ops_by_dtype, sorted(ops_by_dtype)
+    assert ("all-reduce", "s32") in ops_by_dtype, sorted(ops_by_dtype)
+    # the exact path's fp32 psum_scatter must be gone entirely
+    assert not any(op == "reduce-scatter" for op, _, _ in entries), entries
+    for op, dt, dims in entries:
+        if dt in ("s8", "s32"):
+            continue
+        assert dt == "f32", (op, dt, dims)
+        assert len(dims) <= 1 or tuple(dims) == (K, K), (op, dt, dims)
+        # A never on the wire: even a local A block (m/pr x n/pc) is bigger
+        # than any panel-sized tensor here
+        n_el = int(np.prod(dims)) if dims else 1
+        assert n_el < (M // 4) * (N // 2), (op, dt, dims)
+
+
+@check("compressed_residual_carry_stable_across_scan_and_while")
+def _():
+    # The residual pytree must come back from both compiled loop forms with
+    # the init_faun_residuals shapes (stacked leading mesh dims), nonzero
+    # (error feedback is live), and the two loop forms must agree.
+    from repro.core.faun import init_faun_residuals
+    grid = faun.make_faun_mesh(4, 2)
+    init = init_faun_residuals(grid, M, N, K)
+    fixed = NMFSolver(K, algo="mu", schedule="faun", grid=grid, max_iters=6,
+                      panel_compression="int8").fit(A, key=KEY)
+    adaptive = NMFSolver(K, algo="mu", schedule="faun", grid=grid,
+                         max_iters=6, tol=1e-12,
+                         panel_compression="int8").fit(A, key=KEY)
+    assert adaptive.iters == 6
+    for res in (fixed.extras["panel_residuals"],
+                adaptive.extras["panel_residuals"]):
+        assert sorted(res) == sorted(init), sorted(res)
+        for name in init:
+            got = np.asarray(res[name], np.float32)
+            assert got.shape == init[name].shape, (name, got.shape)
+            assert np.abs(got).max() > 0, name
+    np.testing.assert_allclose(np.asarray(fixed.rel_errors),
+                               np.asarray(adaptive.rel_errors), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(fixed.extras["panel_residuals"]["rs_w"]),
+        np.asarray(adaptive.extras["panel_residuals"]["rs_w"]), atol=1e-6)
+
+
+@check("compressed_bf16_factor_carry")
+def _():
+    # bf16 data under compression: factors carry bf16, the compressed
+    # collectives and their residuals stay fp32, nothing overflows.
+    grid = faun.make_faun_mesh(2, 2)
+    Ab = A.astype(jnp.bfloat16)
+    res = NMFSolver(K, algo="mu", schedule="faun", grid=grid, max_iters=6,
+                    panel_compression="int8").fit(Ab, key=KEY)
+    assert res.W.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(res.rel_errors, np.float32)).all()
+    for v in jax.tree_util.tree_leaves(res.extras["panel_residuals"]):
+        assert np.asarray(v).dtype == np.float32
+
+
+@check("compressed_multipod_grid")
+def _():
+    # Multi-axis row grids exercise the compressor's staged all-gather and
+    # the multi-hop all-to-all reduce-scatter (int8 first hop, int32 after).
+    mesh3 = make_mesh((2, 2, 2), ("pod", "pr", "pc"))
+    grid3 = faun.FaunGrid(mesh=mesh3, row_axes=("pod", "pr"), col_axis="pc")
+    ex = NMFSolver(K, algo="mu", schedule="faun", grid=grid3,
+                   max_iters=10).fit(A, key=KEY)
+    co = NMFSolver(K, algo="mu", schedule="faun", grid=grid3, max_iters=10,
+                   panel_compression="int8").fit(A, key=KEY)
+    assert abs(float(co.rel_errors[-1]) - float(ex.rel_errors[-1])) < 5e-3, \
+        (float(ex.rel_errors[-1]), float(co.rel_errors[-1]))
+
+
+@check("compressed_sparse_backend_never_ships_A")
+def _():
+    # Compression composes with the sparse backend, and A's nonzeros stay
+    # off the wire exactly as in the exact path.
+    grid = faun.make_faun_mesh(2, 2)
+    ex = NMFSolver(K, algo="mu", backend="sparse", max_iters=8) \
+        .fit(A_SP, key=KEY)
+    co = NMFSolver(K, algo="mu", schedule="faun", backend="sparse",
+                   grid=grid, max_iters=8,
+                   panel_compression="int8").fit(A_SP, key=KEY)
+    assert abs(float(co.rel_errors[-1]) - float(ex.rel_errors[-1])) < 5e-3
+    solver = NMFSolver(K, algo="mu", schedule="faun", backend="sparse",
+                       grid=grid, panel_compression="int8")
+    txt = solver.lower_step(M, N, nnz=int(A_SP.nse)).compile().as_text()
+    st = collective_stats(txt)
+    # int8 panels + scale sidecars: gather wire far below A's nonzero bytes
+    assert st.wire_bytes["all-gather"] < int(A_SP.nse) * 4, st.wire_bytes
+
+
 if __name__ == "__main__":
     print(f"\n{len(FAILURES)} failures: {FAILURES}")
     sys.exit(1 if FAILURES else 0)

@@ -20,6 +20,7 @@ _FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
 PAGES = {
     "algorithms.md": "custom rule rel err:",
     "backends.md": "final rel err:",
+    "distributed.md": "compressed rel err:",
     "serving.md": "held-out rel err:",
 }
 

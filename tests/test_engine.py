@@ -321,6 +321,97 @@ def test_serial_sparse_lower_step():
     assert "scatter" in low.as_text()
 
 
+# ------------------------------------------------- panel compression
+
+def test_panel_compression_validation():
+    from repro.core import faun
+    grid = faun.make_faun_mesh(1, 1)
+    with pytest.raises(ValueError, match="unknown panel_compression"):
+        NMFSolver(4, schedule="faun", grid=grid, panel_compression="fp4")
+    with pytest.raises(ValueError, match="serial"):
+        NMFSolver(4, schedule="serial", panel_compression="int8")
+    with pytest.raises(ValueError, match="do not compose"):
+        NMFSolver(4, schedule="faun", grid=grid, panel_compression="int8",
+                  panel_dtype=jnp.bfloat16)
+
+
+def test_panel_compression_none_is_bit_identical():
+    """The default (None) must not change the exact path at all — the
+    compression indirection compiles away."""
+    from repro.core import faun
+    grid = faun.make_faun_mesh(1, 1)
+    ref = NMFSolver(6, algo="mu", schedule="faun", grid=grid,
+                    max_iters=8).fit(A, key=KEY)
+    off = NMFSolver(6, algo="mu", schedule="faun", grid=grid, max_iters=8,
+                    panel_compression=None).fit(A, key=KEY)
+    np.testing.assert_array_equal(np.asarray(ref.W), np.asarray(off.W))
+    assert "panel_residuals" not in off.extras
+
+
+def test_panel_compression_single_device_faun():
+    """A 1×1 grid exercises the quantisation numerics without real
+    collectives: the compressed run converges next to the exact one and
+    surfaces nonzero error-feedback residuals."""
+    from repro.core import faun
+    grid = faun.make_faun_mesh(1, 1)
+    ex = NMFSolver(6, algo="mu", schedule="faun", grid=grid,
+                   max_iters=20).fit(A, key=KEY)
+    co = NMFSolver(6, algo="mu", schedule="faun", grid=grid, max_iters=20,
+                   panel_compression="int8").fit(A, key=KEY)
+    assert abs(float(co.rel_errors[-1]) - float(ex.rel_errors[-1])) < 5e-3
+    res = co.extras["panel_residuals"]
+    assert sorted(res) == ["gather_h", "gather_w", "gram_h", "gram_w",
+                           "rs_h", "rs_w"]
+    assert any(np.abs(np.asarray(v, np.float32)).max() > 0
+               for v in res.values())
+
+
+def test_predict_cost_reflects_compression():
+    """Compressed panel words ≈ exact/4 + scale sidecars; Grams unchanged
+    (int32 payload) + their pmax.  Verified against the closed forms."""
+    from repro.core import faun
+    from repro.distributed.compression import compressed_words
+    m, n, k, pr, pc = 4096, 2048, 32, 4, 2
+    p = pr * pc
+    grid = faun.make_faun_mesh(1, 1)
+    ex = costmodel.schedule_cost("faun", m, n, k, pr=pr, pc=pc, algo="mu")
+    co = costmodel.schedule_cost("faun", m, n, k, pr=pr, pc=pc, algo="mu",
+                                 compression="int8")
+    panel_h, panel_w = (pr - 1) * n * k / p, (pc - 1) * m * k / p
+    expect = (2 * 2 * k * k * (p - 1) / p + 2 * 2 * k * (p - 1) / p
+              + compressed_words(panel_h, rows=(pr - 1) * n / p)
+              + compressed_words(panel_w, rows=(pc - 1) * m / p)
+              + compressed_words(panel_w, rows=(pc - 1) * m / p, scatter=True)
+              + compressed_words(panel_h, rows=(pr - 1) * n / p, scatter=True))
+    assert co.words == expect
+    assert co.words < ex.words            # compression must actually win
+    assert co.messages == 2 * ex.messages
+    assert co.flops == ex.flops
+    # naive: two full-factor gathers quarter + one scale word per row
+    nex = costmodel.schedule_cost("naive", m, n, k, pr=p, algo="mu")
+    nco = costmodel.schedule_cost("naive", m, n, k, pr=p, algo="mu",
+                                  compression="int8")
+    assert nco.words == nex.words / 4 + (m + n) * (p - 1) / p
+    # the solver-level knob threads through predict_cost (pretend the 1×1
+    # smoke-tier grid is 4×2 — predict_cost only reads its shape)
+    s = NMFSolver(k, algo="mu", schedule="faun", grid=grid,
+                  panel_compression="int8")
+    s._schedule.grid_shape = lambda: (pr, pc)
+    assert s.predict_cost(m, n).words == co.words
+
+
+def test_compressed_words_helper():
+    from repro.distributed.compression import compressed_words
+    assert compressed_words(400.0, rows=10.0) == 110.0
+    assert compressed_words(400.0, rows=10.0, scatter=True) == 120.0
+
+
+def test_get_compressor_rejects_unknown():
+    from repro.distributed.compression import get_compressor
+    with pytest.raises(ValueError, match="unknown panel_compression"):
+        get_compressor("int4")
+
+
 # ------------------------------------------------- multi-device (slow tier)
 
 @pytest.mark.slow

@@ -433,3 +433,68 @@ def test_init_w_uses_positive_init_flag():
     assert float(jnp.min(w_mu)) > 0.0
     w_h = aunmf.init_w(KEY, 8, 3, rules.AcceleratedHALSRule())
     assert float(jnp.max(jnp.abs(w_h))) == 0.0     # additive: zeros
+
+
+# ------------------------------------------- size-derived inner budgets --
+
+def test_prepare_global_default_is_identity():
+    r = rules.MURule()
+    assert r.prepare_global(100, 80, 8) is r
+    fixed = rules.AcceleratedMURule(inner_iters=3)
+    assert fixed.prepare_global(100, 80, 8) is fixed   # fixed budget: no-op
+    assert rules.get_rule("amu").inner_iters == 4      # registry default
+
+
+def test_prepare_global_derives_gillis_glineur_budget():
+    m, n, k = 960, 640, 8
+    for cls, alpha in [(rules.AcceleratedMURule, 2.0),
+                       (rules.AcceleratedHALSRule, 0.5)]:
+        r = cls(inner_iters=None)
+        prepared = r.prepare_global(m, n, k)
+        assert prepared is not r
+        rho_w = 1.0 + (m * n + n * k) / (m * k + m)
+        rho_h = 1.0 + (m * n + m * k) / (n * k + n)
+        assert prepared._budget_w == 1 + int(alpha * rho_w)
+        assert prepared._budget_h == 1 + int(alpha * rho_h)
+        assert prepared._budget_w >= 1 and prepared._budget_h >= 1
+        # derived budgets are part of the rule's compiled-run identity
+        assert r.cache_key() != prepared.cache_key()
+        # per-half flops use the per-half budgets
+        assert prepared.luc_flops(m, n, k) == \
+            prepared._budget_w * 2.0 * m * k * k + \
+            prepared._budget_h * 2.0 * n * k * k
+
+
+def test_unprepared_none_budget_cost_hooks_raise():
+    r = rules.AcceleratedMURule(inner_iters=None)
+    with pytest.raises(RuntimeError, match="prepare_global"):
+        r.luc_flops(100, 80, 8)
+    with pytest.raises(RuntimeError, match="prepare_global"):
+        r.extra_latency_words(8, 4)
+
+
+def test_inner_iters_none_fits_and_predicts_through_solver():
+    """The engine calls prepare_global at fit / predict time, so
+    inner_iters=None needs no manual preparation."""
+    res = NMFSolver(K, algo=rules.AcceleratedMURule(inner_iters=None),
+                    max_iters=6).fit(A, key=KEY)
+    assert np.isfinite(np.asarray(res.rel_errors)).all()
+    assert int(res.extras["rule_state"]["inner_w"]) >= 6
+    s = NMFSolver(K, algo=rules.AcceleratedHALSRule(inner_iters=None))
+    c = s.predict_cost(96, 64)
+    assert c.flops > 0
+
+
+def test_derived_budget_parity_with_explicit_inner_iters():
+    """On a square problem ρ_W = ρ_H, so inner_iters=None must run
+    bit-identically to the same rule with that budget passed explicitly."""
+    Asq = lowrank_matrix(jax.random.fold_in(KEY, 9), 64, 64, 6, noise=0.01)
+    budget = rules.AcceleratedMURule(inner_iters=None) \
+        .prepare_global(64, 64, K)._budget_w
+    auto = NMFSolver(K, algo=rules.AcceleratedMURule(inner_iters=None),
+                     max_iters=5).fit(Asq, key=KEY)
+    manual = NMFSolver(K, algo=rules.AcceleratedMURule(inner_iters=budget),
+                       max_iters=5).fit(Asq, key=KEY)
+    np.testing.assert_array_equal(np.asarray(auto.W), np.asarray(manual.W))
+    assert int(auto.extras["rule_state"]["inner_w"]) == \
+        int(manual.extras["rule_state"]["inner_w"])
