@@ -148,5 +148,39 @@ def main(emit):
                     f"{r[5]}\n")
 
 
+def scaling_main(emit):
+    """Mesh-scaling harness: p50/p99 + rows/s at mesh sizes {1, 2, 4, 8}
+    on a forced 8-fake-device host.  Runs in a subprocess (_serve_sub.py —
+    the device count must be set before jax imports) and writes
+    ``results/serving_scaling.csv`` (mesh, kind, p50_us, p99_us,
+    rows_per_s) for the CI artifact upload."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__),
+                                      "_serve_sub.py")],
+        capture_output=True, text=True, env=env, timeout=1150)
+    if proc.returncode != 0:
+        raise RuntimeError(f"_serve_sub.py failed:\n{proc.stderr[-2000:]}")
+    rows = [line.split(",")[1:] for line in proc.stdout.splitlines()
+            if line.startswith("ROW,")]
+    out = os.path.join(os.path.dirname(__file__), "results",
+                       "serving_scaling.csv")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        f.write("mesh,kind,p50_us,p99_us,rows_per_s\n")
+        for kind, p, p50, p99, rps in rows:
+            f.write(f"{p},{kind},{p50},{p99},{rps}\n")
+            emit(f"serve_{kind}_mesh{p}", float(p50),
+                 f"p99_us={float(p99):.0f};rows_per_s={float(rps):.0f}")
+
+
 if __name__ == "__main__":
     main(lambda name, us, derived="": print(f"{name},{us:.2f},{derived}"))
+    scaling_main(lambda name, us, derived="":
+                 print(f"{name},{us:.2f},{derived}"))

@@ -23,6 +23,7 @@ BENCHES = {
     "ttol_time_to_tol": bench_time_to_tol.main,
     "tune_autotune": bench_autotune.main,
     "serve_latency": bench_serving.main,
+    "serve_scaling": bench_serving.scaling_main,
 }
 
 

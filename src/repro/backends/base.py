@@ -144,6 +144,14 @@ class LocalOps:
         """PartitionSpec for the blocked representation on a FaunGrid."""
         return grid.spec_A()
 
+    def spec_rows(self, axis: str):
+        """PartitionSpec sharding this backend's blocked representation over
+        ONE mesh axis by rows — the serving layout (``repro.serve``: request
+        batches and W shards split over a 1-D serve mesh, features/k
+        replicated).  Dense blocks are (rows, features)."""
+        from jax.sharding import PartitionSpec as P
+        return P(axis, None)
+
     def cast_block(self, A, dtype):
         """Cast the local data block for low-precision panel runs."""
         return A.astype(dtype)

@@ -215,6 +215,13 @@ class SparseOps(LocalOps):
     def spec_A(self, grid):
         return grid.spec_A_sparse()
 
+    def spec_rows(self, axis: str):
+        """Row-blocked BlockCOO on a 1-D serve mesh: the (gr, gc, nnz)
+        leaves shard over their leading (row-block) grid dim, triplets
+        stay device-local — a request batch's nonzeros never move."""
+        from jax.sharding import PartitionSpec as P
+        return P(axis, None, None)
+
     def cast_block(self, A, dtype):
         raise ValueError("low-precision panels are not supported on the "
                          "sparse backend (scatter-add SpMM is fp32)")

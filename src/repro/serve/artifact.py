@@ -23,6 +23,16 @@ a live server would load.
 ``projection_state()`` exposes the reusable per-algorithm state (Gram +
 its diagonal, both fp32) that ``repro.serve.foldin`` closes its compiled
 projection over.
+
+**Sharded artifacts:** ``shard(mesh)`` places W row-sharded over a 1-D
+serve mesh (``repro.serve.mesh.serve_mesh``) with H and the Gram
+replicated — the serving layout every mesh-aware entry point
+(``FoldInProjector(mesh=...)``, ``TopK(mesh=...)``) assumes.  shard_map
+needs even shards, so W is zero-padded to a multiple of the mesh size and
+the true row count is carried in ``valid_rows`` (``shape``/``save``/
+``transposed`` all see the unpadded matrix; pad rows are masked out of
+top-k).  ``load(path, mesh=...)`` re-shards on load, so an artifact
+trained on any grid serves on any mesh.
 """
 
 from __future__ import annotations
@@ -54,13 +64,19 @@ def _gram_fp32(H: jax.Array) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class FactorArtifact:
-    """Trained factors + precomputed serving state.  Immutable."""
+    """Trained factors + precomputed serving state.  Immutable.
 
-    W: Any                # (m, k)
+    ``valid_rows`` is set on sharded artifacts whose W carries zero pad
+    rows (to divide evenly over the mesh); everywhere the artifact is read
+    as data — ``shape``, ``save``, ``transposed`` — the pad is invisible.
+    """
+
+    W: Any                # (m, k); (m_pad, k) row-sharded when mesh-placed
     H: Any                # (k, n)
     algo: str
     gram: Any             # (k, k) fp32, HHᵀ
     meta: dict = dataclasses.field(default_factory=dict)
+    valid_rows: int | None = None   # true m when W is pad-extended; else None
 
     @property
     def k(self) -> int:
@@ -68,7 +84,8 @@ class FactorArtifact:
 
     @property
     def shape(self) -> tuple[int, int]:
-        return (self.W.shape[0], self.H.shape[1])
+        m = self.W.shape[0] if self.valid_rows is None else self.valid_rows
+        return (m, self.H.shape[1])
 
     # -- construction -------------------------------------------------------
 
@@ -96,9 +113,14 @@ class FactorArtifact:
     # -- persistence --------------------------------------------------------
 
     def save(self, path: str) -> str:
-        """Atomically publish to directory ``path`` (arrays.npz+meta.json)."""
+        """Atomically publish to directory ``path`` (arrays.npz+meta.json).
+        Sharded artifacts save their UNPADDED W — on-disk format is
+        mesh-free, placement happens at load."""
         from repro.checkpoint.checkpoint import write_payload
-        arrays = {"W": np.asarray(self.W), "H": np.asarray(self.H),
+        W = np.asarray(self.W)
+        if self.valid_rows is not None:
+            W = W[:self.valid_rows]
+        arrays = {"W": W, "H": np.asarray(self.H),
                   "gram": np.asarray(self.gram)}
         meta = {"format": FORMAT, "version": VERSION, "algo": self.algo,
                 "k": int(self.k), "shape": list(self.shape),
@@ -106,7 +128,7 @@ class FactorArtifact:
         return write_payload(path, arrays, meta)
 
     @classmethod
-    def load(cls, path: str) -> "FactorArtifact":
+    def load(cls, path: str, *, mesh=None) -> "FactorArtifact":
         from repro.checkpoint.checkpoint import read_payload
         arrays, meta = read_payload(path)
         if meta.get("format") != FORMAT:
@@ -115,9 +137,38 @@ class FactorArtifact:
         if meta.get("version", 0) > VERSION:
             raise ValueError(f"artifact version {meta['version']} is newer "
                              f"than this reader (supports ≤ {VERSION})")
-        return cls(W=jnp.asarray(arrays["W"]), H=jnp.asarray(arrays["H"]),
-                   algo=meta["algo"], gram=jnp.asarray(arrays["gram"]),
-                   meta=dict(meta.get("meta", {})))
+        art = cls(W=jnp.asarray(arrays["W"]), H=jnp.asarray(arrays["H"]),
+                  algo=meta["algo"], gram=jnp.asarray(arrays["gram"]),
+                  meta=dict(meta.get("meta", {})))
+        return art if mesh is None else art.shard(mesh)
+
+    # -- mesh placement ------------------------------------------------------
+
+    def shard(self, mesh) -> "FactorArtifact":
+        """Place this artifact on a 1-D serve mesh: W row-sharded (zero-pad
+        rows to a multiple of the mesh size; ``valid_rows`` remembers the
+        true count), H and the Gram replicated.  Idempotent on the row
+        data — re-sharding a sharded artifact re-pads from its valid rows."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if len(mesh.axis_names) != 1:
+            raise ValueError(f"serving shards over a 1-D mesh; got axes "
+                             f"{mesh.axis_names}")
+        ax = mesh.axis_names[0]
+        p = int(mesh.shape[ax])
+        W = jnp.asarray(self.W)
+        m = W.shape[0] if self.valid_rows is None else self.valid_rows
+        W = W[:m]
+        pad = (-m) % p
+        if pad:
+            W = jnp.pad(W, ((0, pad), (0, 0)))
+        W = jax.device_put(W, NamedSharding(mesh, P(ax, None)))
+        rep = NamedSharding(mesh, P())
+        return dataclasses.replace(
+            self,
+            W=W,
+            H=jax.device_put(jnp.asarray(self.H), rep),
+            gram=jax.device_put(jnp.asarray(self.gram), rep),
+            valid_rows=m)
 
     # -- serving state ------------------------------------------------------
 
@@ -127,7 +178,12 @@ class FactorArtifact:
 
     def transposed(self) -> "FactorArtifact":
         """The (Hᵀ, Wᵀ) view: fold COLUMNS of A (e.g. new documents when A
-        is vocab×docs) through the same row fold-in API."""
-        return FactorArtifact(W=self.H.T, H=self.W.T, algo=self.algo,
-                              gram=_gram_fp32(jnp.asarray(self.W.T)),
+        is vocab×docs) through the same row fold-in API.  Pad rows of a
+        sharded W are dropped first (they would otherwise become phantom
+        columns of the transposed H)."""
+        W = jnp.asarray(self.W)
+        if self.valid_rows is not None:
+            W = W[:self.valid_rows]
+        return FactorArtifact(W=self.H.T, H=W.T, algo=self.algo,
+                              gram=_gram_fp32(jnp.asarray(W.T)),
                               meta=dict(self.meta, transposed=True))

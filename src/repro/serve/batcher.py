@@ -2,11 +2,14 @@
 
 Single-row projection wastes the accelerator — the batched NNLS solve in
 ``serve/foldin.py`` amortises the Gram solve and the jit dispatch over the
-whole batch.  ``MicroBatcher`` is the piece that turns independent callers
-into batches: a thread-safe queue plus one worker thread that drains up to
-``max_batch`` requests or until ``max_delay_s`` after the first queued
-request (whichever comes first), runs the batch through one ``project``
-call, and resolves each caller's ``Future`` with its own row of the result.
+whole batch (single-device or mesh-sharded alike: the batcher only sees a
+``project`` callable, so a sharded projector — or a whole
+``repro.serve.mesh.MeshServer`` — drops in unchanged).  ``MicroBatcher``
+is the piece that turns independent callers into batches: a thread-safe
+queue plus one worker thread that drains up to ``max_batch`` requests or
+until ``max_delay_s`` after the first queued request (whichever comes
+first), runs the batch through one ``project`` call, and resolves each
+caller's ``Future`` with its own row of the result.
 
 The deadline starts at the FIRST request of a batch, so an isolated request
 pays at most ``max_delay_s`` extra latency while a burst fills the batch
@@ -26,7 +29,11 @@ batch's futures and the loop continues.
 the worker samples the projection callable once per coalesced batch, so the
 swap takes effect at the next batch boundary — a batch already in flight
 completes against the artifact it started with, and no queued request is
-ever dropped or duplicated.
+ever dropped or duplicated.  ``swap`` racing ``close()`` is defined too:
+while the worker is still draining the queue the swap is accepted and the
+remaining batches run the new projector; it is rejected only once the
+worker has actually exited.  Either way every pending future is delivered
+against a definite projector — never dropped, never deadlocked.
 """
 
 from __future__ import annotations
@@ -34,7 +41,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -56,6 +63,19 @@ class BatcherStats:
     @property
     def max_batch_seen(self) -> int:
         return max(self.batch_sizes, default=0)
+
+
+def _deliver(fut: Future, *, result=None, exc: BaseException | None = None):
+    """Resolve a future, tolerating callers that already cancelled it —
+    an InvalidStateError out of the worker loop would kill delivery for
+    every later future in the batch."""
+    try:
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(result)
+    except InvalidStateError:
+        pass
 
 
 class MicroBatcher:
@@ -104,13 +124,20 @@ class MicroBatcher:
         batched and dispatched resolve against the OLD artifact; every
         batch collected after the swap runs the new one.  Queued requests
         survive the swap untouched — the queue and the worker never stop.
+
+        A swap racing ``close()`` lands as long as the worker is still
+        draining: the publisher thread must never crash just because a
+        shutdown started concurrently, and the drained batches then run
+        against the (newer) projector it installed.  Only once the worker
+        has exited — nothing left that could ever run the new projector —
+        is the swap refused.
         """
         project = getattr(projector, "project", projector)
         if not callable(project):
             raise TypeError(f"swap() needs a callable or an object with a "
                             f".project method; got {type(projector).__name__}")
         with self._lock:
-            if self._closed:
+            if self._closed and not self._worker.is_alive():
                 raise RuntimeError("MicroBatcher is closed")
             self.project = project
 
@@ -164,15 +191,18 @@ class MicroBatcher:
             # swap() lands cleanly on the next batch boundary.
             project = self.project
             try:
-                out = project(self.stack(rows))
-                out = np.asarray(out)
+                out = np.asarray(project(self.stack(rows)))
+                if len(out) != len(futs):
+                    raise RuntimeError(
+                        f"projector returned {len(out)} rows for a batch "
+                        f"of {len(futs)} requests")
             except Exception as e:       # noqa: BLE001 — deliver, don't die
                 for f in futs:
-                    f.set_exception(e)
+                    _deliver(f, exc=e)
                 continue
             finally:
                 self.stats.requests += len(batch)
                 self.stats.batches += 1
                 self.stats.batch_sizes.append(len(batch))
             for i, f in enumerate(futs):
-                f.set_result(out[i])
+                _deliver(f, result=out[i])

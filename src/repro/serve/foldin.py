@@ -1,4 +1,5 @@
-"""Online fold-in: project new data rows into a trained NMF latent space.
+"""Online fold-in: project new data rows into a trained NMF latent space —
+single-device or sharded over a serve mesh.
 
 Serving consumes factors by one half-iteration of AU-NMF with the trained
 factor held FIXED: given new rows ``A_new`` (b, n) and the trained ``H``
@@ -29,6 +30,27 @@ power-of-two ladder), so after one warm-up pass per bucket NO request ever
 recompiles — ``compile_count`` exposes the jit cache sizes and the test
 suite asserts it stays flat under varying batch sizes.  Padding rows are
 all-zero, which every fold rule maps to x = 0 (sliced off before return).
+
+**Sharded fold-in** (``mesh=``, on a 1-D ``repro.serve.mesh.serve_mesh``):
+
+  * ``shard="batch"`` (default) splits the REQUEST batch over the mesh with
+    H and the Gram replicated — each device folds its own rows and the
+    lowered program moves NOTHING between devices (request rows stay where
+    they land; the distributed checks assert zero collectives).  Buckets
+    become multiples of the mesh size so shards stay even.
+  * ``shard="features"`` row-shards Hᵀ over the feature axis (for factors
+    too wide to replicate): each device contracts its feature slice and the
+    partial (B, k) cross-products combine with ONE k-width ``psum`` — the
+    serving twin of the training schedules' k-width-panels-only invariant;
+    A-rows still never move.
+  * sparse requests under ``shard="batch"`` blockify HOST-side onto a
+    (p, 1) grid (each device gets its rows' triplets), which also unlocks
+    ``SparseOps(spmm_impl="sorted")`` for very large offline batches — the
+    row-sort runs on host where single-device serving could not (it cannot
+    run inside jit).  Scatter/pallas sparse shards keep the nnz-ladder
+    no-retrace contract; the sorted layout's packed lengths are
+    data-dependent, so sorted batches compile per layout (intended for big
+    offline projections, not latency-bound traffic).
 """
 
 from __future__ import annotations
@@ -42,18 +64,31 @@ from repro import backends as _backends
 from repro.backends.sparse import SparseOps, _is_bcoo
 from repro.core import blocksparse, rules as _rules
 from repro.serve.artifact import FactorArtifact, _gram_fp32
+from repro.util.compat import shard_map
 
 #: nnz padding floor for sparse requests (keeps the shape ladder short)
 _MIN_NNZ_BUCKET = 64
 
+_SHARD_MODES = ("batch", "features")
 
-def default_buckets(max_batch: int) -> tuple[int, ...]:
-    """Power-of-two ladder 1, 2, 4, … capped at (and including) max_batch."""
-    out, b = [], 1
-    while b < max_batch:
+
+def default_buckets(max_batch: int, multiple: int = 1) -> tuple[int, ...]:
+    """Power-of-two ladder 1, 2, 4, … capped at (and including) max_batch.
+    ``multiple`` (the serve-mesh size) makes every rung divisible by it —
+    the ladder becomes multiple, 2·multiple, … capped at max_batch rounded
+    up — so batch shards stay even under shard_map."""
+    if multiple <= 1:
+        out, b = [], 1
+        while b < max_batch:
+            out.append(b)
+            b *= 2
+        return tuple(out) + (max_batch,)
+    cap = max_batch + (-max_batch) % multiple
+    out, b = [], multiple
+    while b < cap:
         out.append(b)
         b *= 2
-    return tuple(out) + (max_batch,)
+    return tuple(out) + (cap,)
 
 
 class FoldInProjector:
@@ -71,12 +106,18 @@ class FoldInProjector:
     (any LocalOps name/instance; a ``SparseOps`` instance instead
     configures the sparse path).  ``iters`` bounds the iterative rules'
     fold sweeps (ignored by exact BPP).
+
+    ``mesh`` (a 1-D mesh from ``repro.serve.mesh.serve_mesh``) shards the
+    projection; ``shard`` picks the axis — "batch" splits request rows
+    (zero collectives), "features" splits Hᵀ's feature rows (one (B, k)
+    psum).  Results match the single-device path to float tolerance.
     """
 
     def __init__(self, factor, *, algo: "_rules.RuleSpec | None" = None,
                  backend: "_backends.BackendSpec | None" = None,
                  iters: int = 100, max_batch: int = 256,
-                 buckets: tuple[int, ...] | None = None):
+                 buckets: tuple[int, ...] | None = None,
+                 mesh=None, shard: str = "batch"):
         if isinstance(factor, FactorArtifact):
             H = jnp.asarray(factor.H)
             algo = algo if algo is not None else factor.algo
@@ -96,14 +137,30 @@ class FoldInProjector:
         self._fold = lambda G, R, X0=None: rule.fold_in(G, R, X0,
                                                         iters=iters)
 
+        if shard not in _SHARD_MODES:
+            raise ValueError(f"shard must be one of {_SHARD_MODES}, got "
+                             f"{shard!r}")
+        self.mesh = mesh
+        self.shard = shard
+        if mesh is not None:
+            if len(mesh.axis_names) != 1:
+                raise ValueError(f"serving shards over a 1-D mesh; got "
+                                 f"axes {mesh.axis_names}")
+            self._axis = mesh.axis_names[0]
+            self._p = int(mesh.shape[self._axis])
+        else:
+            self._axis, self._p = None, 1
+
         ops = _backends.get_backend(backend if backend is not None
                                     else "dense")
         if isinstance(ops, SparseOps):
-            if ops.spmm_impl == "sorted":
+            if ops.spmm_impl == "sorted" and mesh is None:
                 raise ValueError(
-                    "fold-in builds the request BlockCOO inside jit, where "
-                    "the host-side sort_rows preprocessing cannot run — use "
-                    "spmm_impl='auto'/'scatter'/'pallas' for serving")
+                    "single-device fold-in builds the request BlockCOO "
+                    "inside jit, where the host-side sort_rows "
+                    "preprocessing cannot run — use spmm_impl='auto'/"
+                    "'scatter'/'pallas', or a mesh (sharded fold-in "
+                    "blockifies on host, where sorting is possible)")
             self._dense_ops = _backends.get_backend("dense")
             self._sparse_ops = ops
         else:
@@ -111,23 +168,62 @@ class FoldInProjector:
             self._sparse_ops = SparseOps()
 
         self.max_batch = int(max_batch)
-        self.buckets = tuple(sorted(set(buckets or
-                                        default_buckets(self.max_batch))))
+        batch_mult = self._p if (mesh is not None and shard == "batch") else 1
+        self.buckets = tuple(sorted(set(
+            buckets or default_buckets(self.max_batch, batch_mult))))
         if self.buckets[-1] < self.max_batch:
             raise ValueError(f"largest bucket {self.buckets[-1]} < "
                              f"max_batch {self.max_batch}")
+        if batch_mult > 1 and any(b % batch_mult for b in self.buckets):
+            raise ValueError(f"batch-sharded buckets must be multiples of "
+                             f"the mesh size {batch_mult}; got "
+                             f"{self.buckets}")
+
+        # Feature-sharded H: pad Hᵀ's feature rows so the n axis divides
+        # evenly (zero feature rows contribute nothing to R — exact).
+        if mesh is not None and shard == "features":
+            self._n_run = self.n + (-self.n) % self._p
+            self._Ht_run = jnp.pad(
+                self.Ht, ((0, self._n_run - self.n), (0, 0)))
+        else:
+            self._n_run = self.n
+            self._Ht_run = self.Ht
 
         # One jitted callable per input kind; shape bucketing bounds the jit
         # cache to len(buckets) (dense) / bucket-ladder × nnz-ladder (sparse,
-        # via the per-bucket closures of _sparse_calls).
-        self._dense_jit = jax.jit(self._dense_impl)
+        # via the per-bucket closures of _sparse_calls).  Mesh paths wrap
+        # the same bodies in shard_map before jit.
+        self._dense_jit = jax.jit(self._build_dense())
         self._sparse_cache: dict[int, "jax.stages.Wrapped"] = {}
+        self._sparse_mesh_jit = None
 
     # -- compiled bodies ----------------------------------------------------
 
     def _dense_impl(self, rows, Ht, G):
         R = self._dense_ops.mm(rows, Ht)          # (B, k) fp32 accumulate
         return self._fold(G, R)
+
+    def _build_dense(self):
+        if self.mesh is None:
+            return self._dense_impl
+        from jax.sharding import PartitionSpec as P
+        ax = self._axis
+        if self.shard == "batch":
+            # rows split over the mesh, H/G replicated: every device folds
+            # its own request rows — no collective in the lowered program.
+            return shard_map(self._dense_impl, mesh=self.mesh,
+                             in_specs=(P(ax, None), P(), P()),
+                             out_specs=P(ax, None))
+
+        def feat_impl(rows, Ht, G):
+            # each device holds a feature slice of the rows AND of Hᵀ; the
+            # partial (B, k) cross-products combine with one k-width psum
+            R = jax.lax.psum(self._dense_ops.mm(rows, Ht), ax)
+            return self._fold(G, R)
+
+        return shard_map(feat_impl, mesh=self.mesh,
+                         in_specs=(P(None, ax), P(ax, None), P()),
+                         out_specs=P())
 
     # -- bucketing ----------------------------------------------------------
 
@@ -170,14 +266,29 @@ class FoldInProjector:
         if n != self.n:
             raise ValueError(f"rows have {n} features, factor has {self.n}")
         B = self._bucket(b)
-        if B != b:
-            rows = jnp.pad(rows, ((0, B - b), (0, 0)))
-        return self._dense_jit(rows, self.Ht, self.G)[:b]
+        if B != b or self._n_run != n:
+            rows = jnp.pad(rows, ((0, B - b), (0, self._n_run - n)))
+        return self._dense_jit(rows, self._Ht_run, self.G)[:b]
+
+    def lower_dense(self, batch: int | None = None):
+        """``jax.stages.Lowered`` of the dense projection at one bucket —
+        the hook the distributed checks use to assert the wire format
+        (batch sharding: no collectives; feature sharding: one (B, k)
+        psum; never a request-row- or H-shard-sized transfer)."""
+        B = self._bucket(batch if batch is not None else self.max_batch)
+        rows = jax.ShapeDtypeStruct((B, self._n_run), jnp.float32)
+        return self._dense_jit.lower(rows, self._Ht_run, self.G)
 
     def _project_bcoo(self, shape, indices, data) -> jax.Array:
         b, n = shape
         if n != self.n:
             raise ValueError(f"rows have {n} features, factor has {self.n}")
+        if self.mesh is not None:
+            if self.shard != "batch":
+                raise ValueError("sparse fold-in shards over the batch "
+                                 "axis only — build the projector with "
+                                 "shard='batch'")
+            return self._project_bcoo_mesh(b, indices, data)
         B = self._bucket(b)
         L = self._nnz_bucket(len(data))
         vals = np.zeros(L, dtype=np.asarray(data).dtype)
@@ -211,16 +322,63 @@ class FoldInProjector:
         self._sparse_cache[bucket] = jax.jit(body)
         return self._sparse_cache[bucket]
 
+    # -- sharded sparse path -------------------------------------------------
+
+    def _project_bcoo_mesh(self, b: int, indices, data) -> jax.Array:
+        """Sharded sparse projection: blockify the request HOST-side onto a
+        (p, 1) grid so each device receives exactly its rows' triplets
+        (``spec_rows`` — nonzeros never move between devices).  Host-side
+        packing is also what lets spmm_impl="sorted" serve here: the
+        row-sort runs before jit.  Unsorted layouts re-pad their triplet
+        leaves to the nnz ladder (and pin ``nnz`` to the padded capacity)
+        so the aux data — part of the jit cache key — stays bucket-stable:
+        the no-retrace contract.  Sorted layouts carry data-dependent
+        packed lengths and compile per layout by design."""
+        from jax.experimental import sparse as jsparse
+        B = self._bucket(b)
+        A = jsparse.BCOO(
+            (jnp.asarray(data),
+             jnp.asarray(np.asarray(indices, np.int32))),
+            shape=(B, self.n))
+        blk = self._sparse_ops.blockify_for(A, self._p, 1,
+                                            products=("mm",))
+        if not (blk.has_sorted_rows or blk.has_sorted_cols):
+            cap = blk.vals.shape[-1]
+            L = self._nnz_bucket(cap)
+            pz = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, L - cap)))
+            blk = blocksparse.BlockCOO(
+                vals=pz(blk.vals), rows=pz(blk.rows), cols=pz(blk.cols),
+                shape=blk.shape, block_shape=blk.block_shape,
+                nnz=int(self._p * L))
+        return self._sparse_mesh_call()(blk, self.Ht, self.G)[:b]
+
+    def _sparse_mesh_call(self):
+        if self._sparse_mesh_jit is None:
+            from jax.sharding import PartitionSpec as P
+            fold, sops, ax = self._fold, self._sparse_ops, self._axis
+
+            def body(blk, Ht, G):
+                R = sops.mm(blk, Ht)       # local (B/p, k) — no collective
+                return fold(G, R)
+
+            self._sparse_mesh_jit = jax.jit(shard_map(
+                body, mesh=self.mesh,
+                in_specs=(sops.spec_rows(ax), P(), P()),
+                out_specs=P(ax, None)))
+        return self._sparse_mesh_jit
+
     # -- observability ------------------------------------------------------
 
     @property
     def compile_count(self) -> int:
-        """Total jit compilations so far (dense + sparse paths).  Flat
-        after one warm-up pass per bucket — the serving no-retrace
-        invariant the tests assert."""
+        """Total jit compilations so far (dense + sparse paths, sharded or
+        not).  Flat after one warm-up pass per bucket — the serving
+        no-retrace invariant the tests assert."""
         count = self._dense_jit._cache_size()
         for fn in self._sparse_cache.values():
             count += fn._cache_size()
+        if self._sparse_mesh_jit is not None:
+            count += self._sparse_mesh_jit._cache_size()
         return count
 
     def warmup(self, *, dense: bool = True, sparse: bool = False,

@@ -1,0 +1,125 @@
+"""Mesh-sharded serving: one handle that serves an artifact from N devices.
+
+``serve_mesh(p)`` builds the 1-D device mesh serving shards over (axis
+name "serve"); ``MeshServer`` wires the whole sharded request path around
+it —
+
+    artifact ── shard(mesh) ──► W row-sharded, H/Gram replicated
+        ├─ FoldInProjector(mesh=…)   sharded batched NNLS fold-in
+        ├─ TopK(mesh=…)              per-shard streaming scan + log-p merge
+        └─ MicroBatcher              request coalescing over the sharded
+                                     projector (submit → Future)
+
+so callers keep the exact single-device API (``project`` / ``submit`` /
+``query`` / ``retrieve``) while W scales past one device's memory and
+throughput scales with the mesh.  ``swap(artifact_or_path)`` hot-reloads:
+the replacement is sharded and warmed OFF the request path, then published
+to the batcher at a batch boundary — in-flight batches finish against the
+old factors, queued requests resolve against the new ones (the
+``MicroBatcher.swap`` contract).
+
+    mesh = serve_mesh(4)
+    with MeshServer(FactorArtifact.load(path), mesh=mesh) as srv:
+        x = srv.submit(row).result()          # coalesced sharded fold-in
+        scores, idx = srv.retrieve(row, k=5)  # fold + sharded top-k
+
+A 1-device mesh is valid (and is what the docs pages run), so the same
+code path covers laptops and pods.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from repro.serve.artifact import FactorArtifact
+from repro.serve.batcher import MicroBatcher
+from repro.serve.foldin import FoldInProjector
+from repro.serve.topk import TopK
+from repro.util.compat import make_mesh
+
+
+def serve_mesh(n: int | None = None, *, devices=None, axis: str = "serve"):
+    """A 1-D mesh over ``n`` devices (default: all local devices) with the
+    serving axis name every ``repro.serve`` entry point expects."""
+    import jax
+    if devices is None:
+        devices = jax.devices()
+        if n is not None:
+            if n > len(devices):
+                raise ValueError(f"asked for a {n}-device serve mesh but "
+                                 f"only {len(devices)} devices are visible")
+            devices = devices[:n]
+    return make_mesh((len(devices),), (axis,), devices=devices)
+
+
+class MeshServer:
+    """Sharded serving facade: fold-in + top-k + microbatching over one
+    mesh-placed artifact.  Thread-safe; ``swap`` hot-reloads atomically."""
+
+    def __init__(self, artifact: FactorArtifact, *, mesh=None,
+                 algo=None, backend=None, iters: int = 100,
+                 max_batch: int = 256, shard: str = "batch",
+                 metric: str = "cosine", chunk: int | None = None,
+                 merge: str = "auto", max_delay_s: float = 2e-3,
+                 warmup: bool = True):
+        self.mesh = mesh if mesh is not None else serve_mesh()
+        self._algo, self._backend, self._iters = algo, backend, iters
+        self._max_batch, self._shard = max_batch, shard
+        self._metric, self._chunk, self._merge = metric, chunk, merge
+        self._warmup = warmup
+        self._lock = threading.Lock()
+        self.artifact, self.projector, self.topk = self._build(artifact)
+        self.batcher = MicroBatcher(self.projector.project,
+                                    max_batch=max_batch,
+                                    max_delay_s=max_delay_s)
+
+    def _build(self, artifact):
+        if not isinstance(artifact, FactorArtifact):
+            artifact = FactorArtifact.load(artifact)
+        art = artifact.shard(self.mesh)
+        proj = FoldInProjector(art, algo=self._algo, backend=self._backend,
+                               iters=self._iters, max_batch=self._max_batch,
+                               mesh=self.mesh, shard=self._shard)
+        topk = TopK(art, metric=self._metric, chunk=self._chunk,
+                    mesh=self.mesh, merge=self._merge)
+        if self._warmup:
+            proj.warmup()
+        return art, proj, topk
+
+    # -- request path -------------------------------------------------------
+
+    def project(self, rows):
+        """Sharded batched fold-in, bypassing the batcher (bulk clients)."""
+        return self.projector.project(rows)
+
+    def submit(self, row):
+        """Coalesced single-row fold-in; resolves to the (k,) code."""
+        return self.batcher.submit(row)
+
+    def query(self, latent_codes, *, k: int = 10):
+        """Sharded top-k over already-projected latent codes."""
+        return self.topk.query(latent_codes, k=k)
+
+    def retrieve(self, rows, *, k: int = 10):
+        """Fold new rows in, then retrieve their top-k W rows."""
+        return self.topk.query(self.project(rows), k=k)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def swap(self, artifact) -> None:
+        """Hot-reload a new artifact (a ``FactorArtifact`` or a saved-
+        artifact path): shard + build + warm the replacement off the
+        request path, then publish to the batcher at a batch boundary."""
+        art, proj, topk = self._build(artifact)
+        self.batcher.swap(proj.project)
+        with self._lock:
+            self.artifact, self.projector, self.topk = art, proj, topk
+
+    def close(self) -> None:
+        self.batcher.close()
+
+    def __enter__(self) -> "MeshServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

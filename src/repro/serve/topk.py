@@ -1,5 +1,6 @@
 """Top-k retrieval over trained factors: nearest rows of W to a query's
-latent code, scored in the k-dim space.
+latent code, scored in the k-dim space — single-device or sharded over a
+serve mesh.
 
 The naive score between a query's reconstruction ``x H`` and row i's
 reconstruction ``w_i H`` is an n-length inner product; with the precomputed
@@ -14,8 +15,23 @@ scores directly in latent space (plain ⟨w_i, x⟩ / cosine over codes).
 W streams through fixed memory: rows are scanned in ``chunk``-row tiles
 (pad tile masked to -inf) while a running (b, k) top-k set is merged per
 tile with ``lax.top_k`` — millions of rows never materialise more than one
-(b, chunk) score block.  The scan compiles once per (W shape, query bucket);
-reuse one ``TopK`` instance per artifact so the jit cache stays warm.
+(b, chunk) score block.  ``chunk=None`` runs the measured autotuner
+(``kernels/autotune``) over a candidate ladder that always includes the
+hand default, so the tuned choice is never slower.  The scan compiles once
+per (W shape, query bucket); reuse one ``TopK`` instance per artifact so
+the jit cache stays warm.
+
+**Sharded retrieval** (``mesh=``): W is row-sharded over a 1-D serve mesh
+(``repro.serve.mesh.serve_mesh``) so artifacts beyond one device's memory
+serve fine.  Each device streams ONLY its local W shard through the same
+chunked scan (global row indices via the shard's row offset), producing a
+per-shard (b, k) candidate set; the candidates then merge across the mesh
+with a log₂(p) hypercube exchange (``lax.ppermute`` pairs at distance
+1, 2, 4, …, re-top-k after each hop — every device ends with the global
+top-k), falling back to one k-width ``all_gather`` + local top-k on
+non-power-of-two meshes.  Only (b, k) candidate score/index sets ever
+cross the wire; W shards and the (b, chunk) score tiles stay local — the
+serving analog of the training schedules' k-width-panels-only invariant.
 """
 
 from __future__ import annotations
@@ -26,15 +42,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.serve.artifact import FactorArtifact
+from repro.util.compat import shard_map
 
 _NEG = -jnp.inf
 _EPS = 1e-12
 
 METRICS = ("dot", "cosine")
 
+#: hand-picked streaming tile (rows of W scored per scan step); chunk=None
+#: replaces it with the measured choice from kernels/autotune
+DEFAULT_CHUNK = 4096
+_CHUNK_CANDIDATES = (512, 1024, 2048, 4096, 8192, 16384)
 
-@functools.partial(jax.jit, static_argnames=("k", "metric", "chunk"))
-def _topk_scan(W, Wn, Q, qnorm, *, k: int, metric: str, chunk: int):
+
+def _scan_core(W, Wn, Q, qnorm, offset, *, k: int, metric: str, chunk: int,
+               total_m: int):
+    """The streaming chunk scan over ONE device's W rows.  ``offset`` is
+    the shard's global row offset (traced; 0 on a single device) and
+    ``total_m`` the GLOBAL valid row count, so returned indices are global
+    and both chunk-padding and global tail-padding rows mask to -inf."""
     m, kl = W.shape
     b = Q.shape[0]
     pad = (-m) % chunk
@@ -53,8 +79,9 @@ def _topk_scan(W, Wn, Q, qnorm, *, k: int, metric: str, chunk: int):
             preferred_element_type=jnp.float32)            # (b, chunk)
         if metric == "cosine":
             s = s / (jnp.maximum(cn, _EPS)[None, :] * qnorm[:, None])
-        gidx = start + jnp.arange(chunk)
-        s = jnp.where((gidx < m)[None, :], s, _NEG)        # mask pad rows
+        lidx = start + jnp.arange(chunk)                   # local row ids
+        gidx = lidx + offset                               # global row ids
+        s = jnp.where(((lidx < m) & (gidx < total_m))[None, :], s, _NEG)
         cand_v = jnp.concatenate([vals, s], axis=1)
         cand_i = jnp.concatenate(
             [idx, jnp.broadcast_to(gidx[None, :], (b, chunk))], axis=1)
@@ -66,6 +93,124 @@ def _topk_scan(W, Wn, Q, qnorm, *, k: int, metric: str, chunk: int):
             jnp.full((b, k), -1, jnp.int32))
     (vals, idx), _ = jax.lax.scan(body, init, (Wc, Wnc, base))
     return vals, idx
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "metric", "chunk", "total_m"))
+def _topk_scan(W, Wn, Q, qnorm, offset, *, k: int, metric: str, chunk: int,
+               total_m: int):
+    return _scan_core(W, Wn, Q, qnorm, offset, k=k, metric=metric,
+                      chunk=chunk, total_m=total_m)
+
+
+def _merge_shards(vals, idx, *, k: int, axis: str, p: int, merge: str):
+    """Combine per-shard (b, k) candidate sets into the global top-k on
+    every device.  ``merge="tree"`` is the log₂(p) hypercube exchange
+    (partners at distance 1, 2, 4, …; re-top-k per hop), ``"gather"`` one
+    tiled all_gather + local top-k.  Either way only (b, ·k) candidate
+    tensors cross the wire."""
+    if p == 1:
+        return vals, idx
+    if merge == "tree":
+        step = 1
+        while step < p:
+            perm = [(i, i ^ step) for i in range(p)]
+            ov = jax.lax.ppermute(vals, axis, perm)
+            oi = jax.lax.ppermute(idx, axis, perm)
+            vals, pos = jax.lax.top_k(jnp.concatenate([vals, ov], axis=1), k)
+            idx = jnp.take_along_axis(jnp.concatenate([idx, oi], axis=1),
+                                      pos, axis=1)
+            step *= 2
+    else:
+        av = jax.lax.all_gather(vals, axis, axis=1, tiled=True)  # (b, p·k)
+        ai = jax.lax.all_gather(idx, axis, axis=1, tiled=True)
+        vals, pos = jax.lax.top_k(av, k)
+        idx = jnp.take_along_axis(ai, pos, axis=1)
+    return vals, idx
+
+
+def _resolve_merge(merge: str, p: int) -> str:
+    if merge not in ("auto", "tree", "gather"):
+        raise ValueError(f"merge must be 'auto', 'tree' or 'gather', got "
+                         f"{merge!r}")
+    if merge == "tree" and p & (p - 1):
+        raise ValueError(f"the hypercube tree merge needs a power-of-two "
+                         f"mesh, got {p} devices — use merge='gather'")
+    if merge == "auto":
+        return "tree" if p & (p - 1) == 0 else "gather"
+    return merge
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_topk_fn(mesh, axis: str, p: int, k: int, metric: str,
+                     chunk: int, total_m: int, merge: str):
+    """Compiled sharded scan+merge for one (mesh, shapes) configuration.
+    Cached so repeated queries reuse the jit cache (the TopK-instance
+    discipline of the single-device path, enforced structurally here)."""
+    from jax.sharding import PartitionSpec as P
+
+    def body(W, Wn, Q, qnorm):
+        off = jax.lax.axis_index(axis) * W.shape[0]
+        vals, idx = _scan_core(W, Wn, Q, qnorm, off, k=k, metric=metric,
+                               chunk=chunk, total_m=total_m)
+        return _merge_shards(vals, idx, k=k, axis=axis, p=p, merge=merge)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis, None), P(axis), P(), P()),
+                   out_specs=(P(), P()))
+    return jax.jit(fn)
+
+
+def _serve_axis(mesh) -> tuple[str, int]:
+    if len(mesh.axis_names) != 1:
+        raise ValueError(f"serving shards over a 1-D mesh; got axes "
+                         f"{mesh.axis_names}")
+    ax = mesh.axis_names[0]
+    return ax, int(mesh.shape[ax])
+
+
+def _pad_rows(X, mult: int, *, value: float = 0.0):
+    pad = (-X.shape[0]) % mult
+    if pad == 0:
+        return X
+    widths = ((0, pad),) + ((0, 0),) * (X.ndim - 1)
+    return jnp.pad(X, widths, constant_values=value)
+
+
+def _tuned_chunk(m: int, kl: int, b: int, k: int, metric: str) -> int:
+    """Measured streaming-tile search through kernels/autotune: candidates
+    are the ladder clipped to m plus the hand default, so the tuned pick is
+    never slower than DEFAULT_CHUNK (modulo timer noise); results persist
+    in the shared autotune cache keyed on the scan's shape signature."""
+    from repro.kernels import autotune as _at
+    m_eff = max(m, 1)
+    default = min(DEFAULT_CHUNK, m_eff)
+    cands = sorted({min(c, m_eff) for c in _CHUNK_CANDIDATES} | {default})
+    if len(cands) == 1:
+        return cands[0]
+    key = (m, kl, b, k, metric)
+    cached = _at.lookup("topk_chunk", key)
+    if cached is not None and len(cached) == 1 \
+            and isinstance(cached[0], int) and 1 <= cached[0] <= m_eff:
+        return cached[0]
+
+    import numpy as np
+
+    def _synth(shape, seed=0):
+        return jnp.asarray(np.random.RandomState(seed)
+                           .rand(*shape).astype(np.float32))
+
+    args = functools.cache(lambda: (
+        _synth((m, kl)), jnp.ones((m,), jnp.float32),
+        _synth((b, kl), seed=1), jnp.ones((b,), jnp.float32),
+        jnp.int32(0)))
+
+    def run(params):
+        return _topk_scan(*args(), k=k, metric=metric, chunk=params[0],
+                          total_m=m)[0]
+
+    (chosen,) = _at.tune("topk_chunk", key, [(c,) for c in cands], run)
+    return chosen
 
 
 @functools.partial(jax.jit, static_argnames=("use_gram",))
@@ -81,7 +226,8 @@ def _row_norms(W, G, *, use_gram: bool):
 
 
 def topk_rows(W, queries, *, k: int = 10, gram=None, metric: str = "dot",
-              chunk: int = 4096, row_norms=None):
+              chunk: int | None = DEFAULT_CHUNK, row_norms=None, mesh=None,
+              merge: str = "auto", valid_rows: int | None = None):
     """Top-k rows of ``W`` (m, kl) for latent queries (b, kl).
 
     Returns ``(scores, indices)``, both (b, k), scores descending per query.
@@ -89,7 +235,15 @@ def topk_rows(W, queries, *, k: int = 10, gram=None, metric: str = "dot",
     ``HHᵀ``); ``metric="cosine"`` normalises by both row and query norms in
     the same space — pass the precomputed ``row_norms`` (m,) when W is
     fixed across queries (``TopK`` does) so the m·k² norm pass leaves the
-    request path.  ``chunk`` bounds resident memory at b×chunk scores.
+    request path.  ``chunk`` bounds resident memory at b×chunk scores;
+    ``chunk=None`` autotunes it (measured, cached).
+
+    ``mesh`` shards the scan: W (and row_norms) split row-wise over the
+    1-D mesh, each device scans its shard, and the per-shard candidates
+    merge across the mesh (``merge``: "tree" hypercube exchange on
+    power-of-two meshes, "gather" otherwise, "auto" picks).  ``valid_rows``
+    caps scoring at the first ``valid_rows`` rows (tail rows are sharding
+    pad and never retrieved).
     """
     if metric not in METRICS:
         raise ValueError(f"metric must be one of {METRICS}, got {metric!r}")
@@ -100,8 +254,9 @@ def topk_rows(W, queries, *, k: int = 10, gram=None, metric: str = "dot",
     if W.shape[1] != Q.shape[1]:
         raise ValueError(f"W has latent dim {W.shape[1]}, queries "
                          f"{Q.shape[1]}")
-    if k > W.shape[0]:
-        raise ValueError(f"k={k} exceeds the {W.shape[0]} rows of W")
+    m_valid = W.shape[0] if valid_rows is None else int(valid_rows)
+    if k > m_valid:
+        raise ValueError(f"k={k} exceeds the {m_valid} rows of W")
     use_gram = gram is not None
     G = (jnp.asarray(gram, jnp.float32) if use_gram
          else jnp.eye(W.shape[1], dtype=jnp.float32))
@@ -119,27 +274,62 @@ def topk_rows(W, queries, *, k: int = 10, gram=None, metric: str = "dot",
     else:
         Wn = jnp.ones((W.shape[0],), jnp.float32)
         qnorm = jnp.ones((Q.shape[0],), jnp.float32)
-    chunk = int(min(chunk, max(W.shape[0], 1)))
-    return _topk_scan(W.astype(jnp.float32), Wn, Qt, qnorm, k=k,
-                      metric=metric, chunk=chunk)
+    Wf32 = W.astype(jnp.float32)
+
+    if mesh is None:
+        c = chunk if chunk is not None \
+            else _tuned_chunk(W.shape[0], W.shape[1], Q.shape[0], k, metric)
+        c = int(min(c, max(W.shape[0], 1)))
+        return _topk_scan(Wf32, Wn, Qt, qnorm, jnp.int32(0), k=k,
+                          metric=metric, chunk=c, total_m=m_valid)
+
+    ax, p = _serve_axis(mesh)
+    Wp = _pad_rows(Wf32, p)
+    Wnp = _pad_rows(Wn, p, value=1.0)
+    mb = Wp.shape[0] // p                      # local shard rows
+    c = chunk if chunk is not None \
+        else _tuned_chunk(mb, W.shape[1], Q.shape[0], k, metric)
+    c = int(min(c, max(mb, 1)))
+    fn = _sharded_topk_fn(mesh, ax, p, k, metric, c, m_valid,
+                          _resolve_merge(merge, p))
+    return fn(Wp, Wnp, Qt, qnorm)
 
 
 class TopK:
     """Retrieval handle bound to one artifact: ``TopK(art).query(X, k=5)``
     scores against ``art.W`` with the artifact's Gram (reconstruction
     space).  Precomputes what is fixed per artifact — for cosine, the
-    (m,) row-norm vector — so a query is purely the k-dim scores + merge."""
+    (m,) row-norm vector; with ``mesh=``, the row-sharded padded W — so a
+    query is purely the k-dim scores + merge (plus, sharded, the (b, k)
+    candidate exchange).  ``chunk=None`` autotunes the streaming tile."""
 
     def __init__(self, artifact: FactorArtifact, *, metric: str = "cosine",
-                 chunk: int = 4096):
-        self.W = jnp.asarray(artifact.W)
-        self.gram = jnp.asarray(artifact.gram, jnp.float32)
+                 chunk: int | None = DEFAULT_CHUNK, mesh=None,
+                 merge: str = "auto"):
         self.metric = metric
         self.chunk = chunk
-        self.row_norms = (_row_norms(self.W, self.gram, use_gram=True)
-                          if metric == "cosine" else None)
+        self.mesh = mesh
+        self.merge = merge
+        self.valid_rows = artifact.shape[0]
+        self.gram = jnp.asarray(artifact.gram, jnp.float32)
+        W = jnp.asarray(artifact.W).astype(jnp.float32)
+        norms = (_row_norms(W, self.gram, use_gram=True)
+                 if metric == "cosine"
+                 else jnp.ones((W.shape[0],), jnp.float32))
+        if mesh is not None:
+            # pin the padded shards (and norms) to the serve mesh once, so
+            # artifacts beyond one device's memory hold W only in shards
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            ax, p = _serve_axis(mesh)
+            W = jax.device_put(_pad_rows(W, p),
+                               NamedSharding(mesh, P(ax, None)))
+            norms = jax.device_put(_pad_rows(norms, p, value=1.0),
+                                   NamedSharding(mesh, P(ax)))
+        self.W = W
+        self.row_norms = norms if metric == "cosine" else None
 
     def query(self, latent_codes, *, k: int = 10):
         return topk_rows(self.W, latent_codes, k=k, gram=self.gram,
                          metric=self.metric, chunk=self.chunk,
-                         row_norms=self.row_norms)
+                         row_norms=self.row_norms, mesh=self.mesh,
+                         merge=self.merge, valid_rows=self.valid_rows)

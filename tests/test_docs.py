@@ -21,7 +21,7 @@ PAGES = {
     "algorithms.md": "custom rule rel err:",
     "backends.md": "final rel err:",
     "distributed.md": "compressed rel err:",
-    "serving.md": "held-out rel err:",
+    "serving.md": "sharded parity:",
 }
 
 

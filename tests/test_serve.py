@@ -12,6 +12,9 @@ The load-bearing checks:
     check, the ISSUE acceptance criterion).
 """
 
+import os
+import subprocess
+import sys
 import threading
 
 import jax
@@ -25,7 +28,10 @@ from repro.data.pipeline import lowrank_matrix
 from repro.serve.artifact import FactorArtifact
 from repro.serve.batcher import MicroBatcher
 from repro.serve.foldin import FoldInProjector, default_buckets
+from repro.serve.mesh import MeshServer, serve_mesh
 from repro.serve.topk import TopK, topk_rows
+
+HERE = os.path.dirname(os.path.abspath(__file__))
 
 KEY = jax.random.PRNGKey(0)
 M, N, K = 96, 64, 6
@@ -389,3 +395,194 @@ def test_batcher_delivers_exceptions_and_recovers():
         np.testing.assert_allclose(ok.result(timeout=10), 2 * np.ones(3))
     with pytest.raises(RuntimeError, match="closed"):
         mb.submit(np.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# Batcher close/swap race (regression) and delivery hardening
+# ---------------------------------------------------------------------------
+
+
+def test_batcher_swap_racing_close_drains_against_new_projector():
+    """A swap() landing while close() is draining the queue must be
+    accepted (the publisher must not crash mid-shutdown) and the still-
+    queued requests must resolve against the NEW projector; the batch in
+    flight finishes against the old one.  Regression: swap() used to raise
+    as soon as close() set the closed flag, before the drain finished."""
+    started, released = threading.Event(), threading.Event()
+
+    def slow_old(batch):
+        started.set()
+        assert released.wait(timeout=30)
+        return np.full((len(batch), 3), 1.0, np.float32)
+
+    def new(batch):
+        return np.full((len(batch), 3), 2.0, np.float32)
+
+    mb = MicroBatcher(slow_old, max_batch=1, max_delay_s=1e-4)
+    f_inflight = mb.submit(np.zeros(3, np.float32))
+    assert started.wait(timeout=10)          # worker is inside slow_old
+    f_queued = mb.submit(np.zeros(3, np.float32))
+    closer = threading.Thread(target=mb.close)
+    closer.start()
+    for _ in range(1000):                    # wait for close() to flag
+        if mb._closed:
+            break
+        threading.Event().wait(0.005)
+    assert mb._closed
+    mb.swap(new)                             # must NOT raise mid-drain
+    released.set()
+    np.testing.assert_allclose(f_inflight.result(timeout=30),
+                               np.ones(3))   # old projector
+    np.testing.assert_allclose(f_queued.result(timeout=30),
+                               2 * np.ones(3))   # drained against new
+    closer.join(timeout=30)
+    assert not mb._worker.is_alive()
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.swap(new)                         # worker gone: now refused
+
+
+def test_batcher_row_count_mismatch_delivers_exception():
+    calls = []
+
+    def broken(batch):
+        calls.append(len(batch))
+        if len(calls) == 1:
+            return np.zeros((len(batch) + 2, 3), np.float32)   # wrong rows
+        return np.asarray(batch)
+
+    with MicroBatcher(broken, max_batch=2, max_delay_s=1e-3) as mb:
+        bad = mb.submit(np.ones(3, np.float32))
+        with pytest.raises(RuntimeError, match="rows"):
+            bad.result(timeout=10)
+        ok = mb.submit(np.ones(3, np.float32))   # worker survived
+        np.testing.assert_allclose(ok.result(timeout=10), np.ones(3))
+
+
+def test_batcher_cancelled_future_does_not_break_batch_delivery():
+    started, released = threading.Event(), threading.Event()
+
+    def gate(batch):
+        if not started.is_set():
+            started.set()
+            assert released.wait(timeout=30)
+        return np.asarray(batch) * 2.0
+
+    with MicroBatcher(gate, max_batch=2, max_delay_s=0.05) as mb:
+        mb.submit(np.ones(3, np.float32))        # occupies the worker
+        assert started.wait(timeout=10)
+        f1 = mb.submit(np.ones(3, np.float32))
+        f2 = mb.submit(np.ones(3, np.float32))
+        assert f2.cancel()                       # caller gave up while queued
+        released.set()
+        np.testing.assert_allclose(f1.result(timeout=30), 2 * np.ones(3))
+        assert f2.cancelled()                    # and delivery survived it
+
+
+# ---------------------------------------------------------------------------
+# Top-k chunk autotuning (kernels/autotune)
+# ---------------------------------------------------------------------------
+
+
+def test_topk_chunk_autotune(tmp_path, monkeypatch):
+    from repro.kernels import autotune
+
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path / "tune.json"))
+    autotune.clear()
+    # m must exceed the smallest ladder rung or every candidate clips to m
+    # and the search short-circuits (tiny W needs no tuning)
+    m = 2500
+    rng = np.random.RandomState(3)
+    W = rng.rand(m, K).astype(np.float32)
+    Q = rng.rand(5, K).astype(np.float32)
+    ref_s, ref_i = topk_rows(W, Q, k=4, metric="dot")
+    got_s, got_i = topk_rows(W, Q, k=4, metric="dot", chunk=None)
+    assert (np.asarray(got_i) == np.asarray(ref_i)).all()
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(ref_s),
+                               atol=1e-5)
+    cached = autotune.lookup("topk_chunk", (m, K, 5, 4, "dot"))
+    assert cached is not None and 1 <= cached[0] <= m
+    # the measured choice is never slower than the hand default: the
+    # default is always in the candidate set
+    key = autotune.make_key("topk_chunk", (m, K, 5, 4, "dot"))
+    entry = autotune._load()[key]
+    times = entry["times_us"]
+    default_key = str((min(4096, m),))
+    assert times[str(tuple(entry["params"]))] <= times[default_key]
+    # second call hits the cache (no re-measure): same result
+    again_s, _ = topk_rows(W, Q, k=4, metric="dot", chunk=None)
+    np.testing.assert_allclose(np.asarray(again_s), np.asarray(ref_s),
+                               atol=1e-5)
+    autotune.clear()
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded serving (1-device mesh: the smoke-tier slice; the 8-device
+# parity/HLO matrix runs in serve_distributed_checks.py below)
+# ---------------------------------------------------------------------------
+
+
+def test_default_buckets_mesh_multiple():
+    assert default_buckets(20, 4) == (4, 8, 16, 20)
+    assert default_buckets(16, 4) == (4, 8, 16)
+    assert default_buckets(5, 4) == (4, 8)
+    assert default_buckets(16) == (1, 2, 4, 8, 16)
+
+
+def test_sharded_artifact_single_device_roundtrip(trained, tmp_path):
+    art = FactorArtifact.from_result(trained["bpp"])
+    mesh = serve_mesh(1)
+    sharded = art.shard(mesh)
+    assert sharded.shape == art.shape and sharded.valid_rows == M
+    path = sharded.save(str(tmp_path / "art"))
+    back = FactorArtifact.load(path, mesh=mesh)
+    assert back.shape == art.shape
+    np.testing.assert_array_equal(np.asarray(back.W),
+                                  np.asarray(art.W))
+
+
+def test_mesh_foldin_and_topk_match_single_device(trained):
+    art = FactorArtifact.from_result(trained["bpp"])
+    mesh = serve_mesh(1)
+    ref = FoldInProjector(art, max_batch=16)
+    rows = np.asarray(A[:9], np.float32)
+    for shard in ("batch", "features"):
+        proj = FoldInProjector(art, max_batch=16, mesh=mesh, shard=shard)
+        np.testing.assert_allclose(np.asarray(proj.project(rows)),
+                                   np.asarray(ref.project(rows)),
+                                   atol=1e-5)
+    X = np.asarray(ref.project(rows))
+    want = topk_rows(art.W, X, k=3, gram=art.gram, metric="cosine")
+    got = TopK(art.shard(mesh), mesh=mesh, chunk=32).query(X, k=3)
+    assert (np.asarray(got[1]) == np.asarray(want[1])).all()
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want[0]),
+                               atol=1e-5)
+
+
+def test_mesh_server_end_to_end(trained):
+    art = FactorArtifact.from_result(trained["bpp"])
+    with MeshServer(art, mesh=serve_mesh(1), max_batch=16, chunk=32,
+                    max_delay_s=1e-3, warmup=False) as srv:
+        code = np.asarray(srv.submit(np.asarray(A[0])).result(timeout=60))
+        assert code.shape == (K,)
+        scores, idx = srv.retrieve(np.asarray(A[:4]), k=3)
+        assert idx.shape == (4, 3)
+        assert (np.asarray(idx)[:, 0] == np.arange(4)).all()
+        srv.swap(art)                        # hot-reload path exercised
+        code2 = np.asarray(srv.submit(np.asarray(A[0])).result(timeout=60))
+        np.testing.assert_allclose(code2, code, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_serve_distributed_checks():
+    """Runs serve_distributed_checks.py in one subprocess with 8 fake host
+    devices (same harness as engine_distributed_checks.py)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "serve_distributed_checks.py")],
+        capture_output=True, text=True, env=env, timeout=1150)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "serve distributed checks failed"
+    assert "0 failures" in proc.stdout
