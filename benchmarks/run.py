@@ -10,7 +10,7 @@ import time
 
 from benchmarks import (bench_autotune, bench_cost_table, bench_datasets,
                         bench_error_curves, bench_grid_sweep, bench_k_sweep,
-                        bench_serving, bench_strong_scaling,
+                        bench_online, bench_serving, bench_strong_scaling,
                         bench_time_to_tol)
 
 BENCHES = {
@@ -24,6 +24,7 @@ BENCHES = {
     "tune_autotune": bench_autotune.main,
     "serve_latency": bench_serving.main,
     "serve_scaling": bench_serving.scaling_main,
+    "online_staleness": bench_online.main,
 }
 
 

@@ -411,6 +411,46 @@ class _GspmdSchedule(_GridSchedule):
         return (Aabs,) + self._factor_abstract_args(m, n, dtype)
 
 
+def _warm_start_factors(init, m: int, n: int, k: int, dtype, rule):
+    """Resolve ``fit(init=...)`` into (W0, H0): an ``NMFResult``, a
+    ``repro.serve.artifact.FactorArtifact``, or a plain ``(W, H)`` pair.
+
+    A warm start resumes the alternating updates from previously trained
+    factors — the online loop's full-refactorization path, where the grown
+    matrix carries the old factors (plus fold-in codes for the new rows)
+    as its starting point instead of retraining cold.  W may therefore have
+    MORE rows than the init produced; only the shapes against the current
+    problem are validated.  Multiplicative rules (``positive_init``) get
+    their warm factors floored at the dtype eps: a fold-in code with exact
+    zeros would otherwise lock those entries at zero forever.
+    """
+    from repro.core.rules import eps_for
+    W0, H0 = None, None
+    if hasattr(init, "W") and hasattr(init, "H"):      # NMFResult / artifact
+        W0, H0 = init.W, init.H
+        valid = getattr(init, "valid_rows", None)      # sharded artifacts pad
+        if valid is not None:
+            W0 = jnp.asarray(W0)[:valid]
+    elif isinstance(init, (tuple, list)) and len(init) == 2:
+        W0, H0 = init
+    else:
+        raise TypeError(f"init must be an NMFResult, a FactorArtifact, or "
+                        f"a (W, H) pair; got {type(init).__name__}")
+    W0 = jnp.asarray(W0, dtype)
+    H0 = jnp.asarray(H0, dtype)
+    if W0.shape != (m, k):
+        raise ValueError(f"warm-start W has shape {W0.shape}, problem "
+                         f"needs {(m, k)}")
+    if H0.shape != (k, n):
+        raise ValueError(f"warm-start H has shape {H0.shape}, problem "
+                         f"needs {(k, n)}")
+    if rule.positive_init:
+        eps = eps_for(dtype)
+        W0 = jnp.maximum(W0, eps)
+        H0 = jnp.maximum(H0, eps)
+    return W0, H0
+
+
 def _square_grid(p: int) -> tuple[int, int]:
     pr = max(d for d in range(1, p + 1) if p % d == 0 and d * d <= p)
     return pr, p // pr
@@ -427,6 +467,15 @@ class NMFSolver:
     >>> solver = NMFSolver(k=16, algo="bpp", schedule="faun", grid=grid,
     ...                    backend="sparse", max_iters=200, tol=1e-4)
     >>> result = solver.fit(A)          # A: dense, BCOO, or BlockCOO
+    >>> result = solver.fit(A2, init=result)   # resume / warm-start
+
+    ``fit(init=...)`` warm-starts the alternating updates from previously
+    trained factors — an ``NMFResult``, a ``FactorArtifact``, or a plain
+    ``(W, H)`` pair — instead of the random init.  This is the online
+    loop's full-refactorization path (``repro.online``): the accumulated
+    matrix retrains with the stale factors (extended by fold-in codes for
+    rows that arrived since) as the starting point, converging in far
+    fewer iterations than a cold run.
 
     ``backend`` is a name registered in ``repro.backends`` ("dense",
     "pallas", "sparse", or your own via ``register_backend``) or a
@@ -520,13 +569,19 @@ class NMFSolver:
 
     def fit(self, A, *, key: jax.Array | None = None,
             H0: jax.Array | None = None,
-            W0: jax.Array | None = None) -> NMFResult:
+            W0: jax.Array | None = None, init=None) -> NMFResult:
         m, n = A.shape
         dtype = getattr(A, "dtype", jnp.float32)
         # Rules that size themselves from the problem (inner_iters=None)
         # specialise here, where the global dims are first known; the
         # prepared rule feeds the run-cache key, so shape changes recompile.
         self.rule = self._base_rule.prepare_global(m, n, self.k)
+        if init is not None:
+            if H0 is not None or W0 is not None:
+                raise ValueError("pass either init= (a warm start) or "
+                                 "explicit W0/H0, not both")
+            W0, H0 = _warm_start_factors(init, m, n, self.k, dtype,
+                                         self.rule)
         if key is None:
             key = jax.random.PRNGKey(0)
         if H0 is None:

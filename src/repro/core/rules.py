@@ -12,6 +12,9 @@ This module is the contract for the algorithm half, mirroring what
                                                through ``norm_psum``)
     fold_in(G, R, X0)          serving half-update against a FIXED factor
                                (repro.serve.foldin)
+    partial_update_h(G, R, X, mask, state)
+                               touched-block H refresh (repro.online) —
+                               defaults to a full sweep merged on ``mask``
     init_state(m, n, k)        optional carry for stateful rules — threaded
                                through the engine's lax.scan / lax.while_loop
     luc_flops(m, n, k)         F(m, n, k) of the paper's Table III
@@ -241,6 +244,31 @@ class UpdateRule:
 
     def _update_h(self, G, R, X, state, *, norm_psum):
         raise NotImplementedError
+
+    # -- partial (touched-block) refresh -------------------------------------
+
+    def partial_update_h(self, G, R, X, mask=None, state=None, *,
+                         norm_psum=_identity):
+        """DID-style touched-block H refresh (Gao & Chu, arXiv:1802.08938):
+        update only the rows of X (columns of H in the row convention)
+        selected by the boolean ``mask`` (r,), returning the unselected rows
+        bit-identical to their input.
+
+        The default falls back to a FULL ``update_h`` sweep and merges the
+        selected rows — always correct.  For every built-in rule the H
+        half-update is row-separable (MU and BPP solve each row of X
+        independently; the HALS H column sweep touches row r of X only
+        through row r itself), so callers holding a compact gather of the
+        touched rows can equivalently pass the gathered (G, R_t, X_t) with
+        ``mask=None`` and pay only O(r_touched) — the cheap refresh
+        ``repro.online`` runs between full refactorizations.  Rules whose H
+        update couples rows (a future symmetric/graph-regularised rule)
+        must override this to stay correct under gathering.
+        """
+        Xn, state = self.update_h(G, R, X, state, norm_psum=norm_psum)
+        if mask is None:
+            return Xn, state
+        return jnp.where(mask[:, None], Xn, X), state
 
     # -- serving fold-in -----------------------------------------------------
 

@@ -11,7 +11,9 @@ mesh replays identical global batches.  Two LM tasks:
     stationary cross-entropy floor, used for throughput benchmarking.
 
 Plus the paper's NMF matrix generators (dense low-rank, sparse
-Erdős–Rényi, video-like, bag-of-words-like) used by benchmarks/examples.
+Erdős–Rényi, video-like, bag-of-words-like) used by benchmarks/examples,
+and the streaming ingest generator (``stream_batch``) the online
+train→serve loop's tests/benchmarks replay deterministically.
 """
 
 from __future__ import annotations
@@ -128,6 +130,43 @@ def erdos_renyi_bcoo(key, m, n, density: float, dtype=jnp.float32):
     data = jnp.asarray(np.asarray(vals)[rows, cols])
     indices = jnp.asarray(np.stack([rows, cols], axis=1), dtype=jnp.int32)
     return jsparse.BCOO((data, indices), shape=(m, n))
+
+
+def stream_truth(seed: int, n: int, k: int, dtype=jnp.float32):
+    """The fixed ground-truth row model a streaming ingest draws from:
+    H (k, n) depends on ``seed`` only, so every step of a stream shares it
+    (and an oracle retraining from scratch sees the same planted factors)."""
+    return jax.random.uniform(jax.random.PRNGKey(seed), (k, n), dtype)
+
+
+def stream_batch(seed: int, step: int, *, rows: int, n: int, k: int,
+                 drift: float = 0.0, noise: float = 0.0,
+                 dtype=jnp.float32):
+    """One deterministic ingest batch of a streaming NMF workload:
+    ``batch = f(seed, step)`` is pure — replaying a failing schedule
+    reproduces every batch bit-identically, with no iterator state to
+    checkpoint (the same design contract as :func:`lm_batch`).
+
+    Rows are drawn from the planted model ``X_step @ H_seed``: the mixing
+    codes X (rows, k) are fresh per step; H comes from
+    :func:`stream_truth` and is shared by every step of the stream.
+    ``drift`` > 0 moves the ground truth: step t samples rows from
+    ``H + drift·t·H_alt`` (H_alt a second seed-fixed factor), the
+    concept-drift regime whose accumulated error the online loop's drift
+    accumulator exists to catch.  ``noise`` adds uniform measurement noise.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    k1, k2 = jax.random.split(key)
+    H = stream_truth(seed, n, k, dtype)
+    if drift:
+        H_alt = jax.random.uniform(jax.random.PRNGKey(seed + 1), (k, n),
+                                   dtype)
+        H = H + jnp.asarray(drift * step, dtype) * H_alt
+    X = jax.random.uniform(k1, (rows, k), dtype)
+    A = X @ H
+    if noise:
+        A = A + noise * jax.random.uniform(k2, (rows, n), dtype)
+    return A
 
 
 def video_like_matrix(key, m, n, *, rank: int = 20, motion: float = 0.05,

@@ -24,6 +24,13 @@ a live server would load.
 its diagonal, both fp32) that ``repro.serve.foldin`` closes its compiled
 projection over.
 
+**Lineage:** an online loop (``repro.online``) republishes continuously;
+``evolve()`` builds each successor with ``version`` bumped by one and
+``parent_version`` + ``rows_absorbed`` recorded in the metadata (they
+round-trip through ``save``/``load``), so staleness is observable — every
+response can carry the version it was served from, and swap targets can be
+rejected when they would move a server backwards.
+
 **Sharded artifacts:** ``shard(mesh)`` places W row-sharded over a 1-D
 serve mesh (``repro.serve.mesh.serve_mesh``) with H and the Gram
 replicated — the serving layout every mesh-aware entry point
@@ -87,6 +94,62 @@ class FactorArtifact:
         m = self.W.shape[0] if self.valid_rows is None else self.valid_rows
         return (m, self.H.shape[1])
 
+    # -- lineage -------------------------------------------------------------
+    # An online train→serve loop republishes continuously; each publish
+    # records where it came from so "never serve stale factors" is a
+    # checkable property: versions along a lineage are strictly increasing,
+    # and every response can be stamped with the version it was computed
+    # against (repro.online threads the stamp through the batcher).
+
+    @property
+    def version(self) -> int:
+        """Lineage version (0 for artifacts published outside a lineage)."""
+        return int(self.meta.get("version", 0))
+
+    @property
+    def parent_version(self) -> int | None:
+        """Version of the artifact this one evolved from (None for roots)."""
+        v = self.meta.get("parent_version")
+        return None if v is None else int(v)
+
+    @property
+    def rows_absorbed(self) -> int:
+        """Rows ingested between the parent artifact and this one."""
+        return int(self.meta.get("rows_absorbed", 0))
+
+    def evolve(self, W=None, H=None, *, rows_absorbed: int = 0,
+               **meta) -> "FactorArtifact":
+        """The next artifact in this lineage: ``version`` bumps by one and
+        the parent version + rows absorbed since it are recorded.  Passing
+        only ``W`` (the grown factor after fold-in extended it) reuses the
+        precomputed Gram — the cheap republish of the online ingest path;
+        passing ``H`` recomputes it.  Free-form ``meta`` lands in the
+        child's metadata (e.g. ``refresh="blocks"``)."""
+        W_new = self._unpadded_W() if W is None else jnp.asarray(W)
+        if H is None:
+            H_new, gram = self.H, self.gram
+        else:
+            H_new = jnp.asarray(H)
+            gram = _gram_fp32(H_new)
+        if W_new.ndim != 2 or W_new.shape[1] != H_new.shape[0]:
+            raise ValueError(f"factor shapes do not compose: W "
+                             f"{W_new.shape} × H {H_new.shape}")
+        if H_new.shape[1] != jnp.asarray(self.H).shape[1]:
+            raise ValueError(f"a lineage serves one feature space: H has "
+                             f"{H_new.shape[1]} columns, parent has "
+                             f"{jnp.asarray(self.H).shape[1]}")
+        md = {k: v for k, v in self.meta.items()
+              if k not in ("version", "parent_version", "rows_absorbed")}
+        md.update(meta)
+        md.update(version=self.version + 1, parent_version=self.version,
+                  rows_absorbed=int(rows_absorbed))
+        return FactorArtifact(W=W_new, H=H_new, algo=self.algo, gram=gram,
+                              meta=md)
+
+    def _unpadded_W(self):
+        W = jnp.asarray(self.W)
+        return W if self.valid_rows is None else W[:self.valid_rows]
+
     # -- construction -------------------------------------------------------
 
     @classmethod
@@ -117,9 +180,7 @@ class FactorArtifact:
         Sharded artifacts save their UNPADDED W — on-disk format is
         mesh-free, placement happens at load."""
         from repro.checkpoint.checkpoint import write_payload
-        W = np.asarray(self.W)
-        if self.valid_rows is not None:
-            W = W[:self.valid_rows]
+        W = np.asarray(self._unpadded_W())
         arrays = {"W": W, "H": np.asarray(self.H),
                   "gram": np.asarray(self.gram)}
         meta = {"format": FORMAT, "version": VERSION, "algo": self.algo,
@@ -155,9 +216,8 @@ class FactorArtifact:
                              f"{mesh.axis_names}")
         ax = mesh.axis_names[0]
         p = int(mesh.shape[ax])
-        W = jnp.asarray(self.W)
-        m = W.shape[0] if self.valid_rows is None else self.valid_rows
-        W = W[:m]
+        W = self._unpadded_W()
+        m = W.shape[0]
         pad = (-m) % p
         if pad:
             W = jnp.pad(W, ((0, pad), (0, 0)))
@@ -181,9 +241,7 @@ class FactorArtifact:
         is vocab×docs) through the same row fold-in API.  Pad rows of a
         sharded W are dropped first (they would otherwise become phantom
         columns of the transposed H)."""
-        W = jnp.asarray(self.W)
-        if self.valid_rows is not None:
-            W = W[:self.valid_rows]
+        W = self._unpadded_W()
         return FactorArtifact(W=self.H.T, H=W.T, algo=self.algo,
                               gram=_gram_fp32(jnp.asarray(W.T)),
                               meta=dict(self.meta, transposed=True))

@@ -22,8 +22,11 @@ immediately — the standard latency/throughput knob pair of serving systems.
 
 ``stack`` controls how queued rows combine (default ``np.stack`` for dense
 1-D rows); pass a custom callable to batch other request payloads.  The
-worker never dies on a failing batch — the exception is delivered to that
-batch's futures and the loop continues.
+projection may return an array (each future resolves to its own row) or a
+list/tuple of per-request payloads delivered verbatim — the hook
+``repro.online`` uses to stamp every response with the artifact version it
+was computed against.  The worker never dies on a failing batch — the
+exception is delivered to that batch's futures and the loop continues.
 
 ``swap(projector)`` hot-reloads the serving artifact in a RUNNING batcher:
 the worker samples the projection callable once per coalesced batch, so the
@@ -191,7 +194,12 @@ class MicroBatcher:
             # swap() lands cleanly on the next batch boundary.
             project = self.project
             try:
-                out = np.asarray(project(self.stack(rows)))
+                out = project(self.stack(rows))
+                # Arrays deliver per-row; a list/tuple delivers per-ITEM
+                # payloads verbatim (e.g. version-stamped results from
+                # repro.online — one (code, version) record per request).
+                if not isinstance(out, (list, tuple)):
+                    out = np.asarray(out)
                 if len(out) != len(futs):
                     raise RuntimeError(
                         f"projector returned {len(out)} rows for a batch "

@@ -106,11 +106,28 @@ class MeshServer:
 
     # -- lifecycle ----------------------------------------------------------
 
+    @property
+    def version(self) -> int:
+        """Lineage version of the artifact currently served (see
+        ``FactorArtifact.evolve``); 0 outside a lineage."""
+        return self.artifact.version
+
     def swap(self, artifact) -> None:
         """Hot-reload a new artifact (a ``FactorArtifact`` or a saved-
         artifact path): shard + build + warm the replacement off the
-        request path, then publish to the batcher at a batch boundary."""
+        request path, then publish to the batcher at a batch boundary.
+
+        Lineage-versioned artifacts must move FORWARD: swapping in a
+        version lower than the one being served is refused — an online
+        publisher racing a redeploy must never roll a server back to stale
+        factors.  (Equal versions pass: artifacts published outside a
+        lineage all carry version 0.)"""
         art, proj, topk = self._build(artifact)
+        if art.version < self.artifact.version:
+            raise ValueError(
+                f"stale swap: artifact version {art.version} < served "
+                f"version {self.artifact.version}; an online lineage only "
+                f"moves forward")
         self.batcher.swap(proj.project)
         with self._lock:
             self.artifact, self.projector, self.topk = art, proj, topk

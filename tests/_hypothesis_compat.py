@@ -1,10 +1,21 @@
 """Optional-``hypothesis`` shim for the test suite.
 
-The property-based tests only need integer strategies.  When ``hypothesis``
-is installed we re-export the real ``given``/``settings``/``st``; when it is
-absent (the CI container does not ship it) we degrade ``@given`` to a fixed,
-deterministic set of example cases: both endpoints of every integer strategy
-plus a handful of seeded pseudo-random draws.  ``@settings`` becomes a no-op.
+The property-based tests need integer and list-of-integer strategies.
+When ``hypothesis`` is installed we re-export the real
+``given``/``settings``/``st``; when it is absent (the CI container does
+not ship it) we degrade ``@given`` to a fixed, deterministic set of
+example cases — both endpoints of every integer strategy, short/long
+endpoints of every list strategy, plus seeded pseudo-random draws — and
+``@settings`` becomes a no-op.
+
+The fallback also SHRINKS: when a case fails, a greedy pass walks it
+toward the simplest still-failing input (integers toward their lower
+bound, lists toward fewer/smaller elements) and re-raises with the
+minimal falsifying example in the message — the property a randomized
+schedule test actually needs from hypothesis, preserved without the
+dependency.  The fallback implementation is always defined (as
+``fallback_given``/``fallback_st``) so its shrinker is testable even
+where the real library is installed.
 
 Usage in test modules:
 
@@ -13,52 +24,142 @@ Usage in test modules:
 
 from __future__ import annotations
 
+import functools
+import random
+
+_N_RANDOM_CASES = 5
+_SHRINK_BUDGET = 400
+
+
+class _IntStrategy:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def draw(self, rng: random.Random) -> int:
+        return rng.randint(self.lo, self.hi)
+
+    def endpoints(self):
+        return [self.lo, self.hi]
+
+    def shrink(self, v: int):
+        """Strictly simpler candidates, simplest first (toward ``lo``)."""
+        if v <= self.lo:
+            return
+        yield self.lo
+        mid = (self.lo + v) // 2
+        if self.lo < mid < v:
+            yield mid
+        yield v - 1
+
+
+class _ListStrategy:
+    def __init__(self, elem, min_size: int = 0, max_size: int = 10):
+        self.elem = elem
+        self.min_size, self.max_size = int(min_size), int(max_size)
+
+    def draw(self, rng: random.Random) -> list:
+        size = rng.randint(self.min_size, self.max_size)
+        return [self.elem.draw(rng) for _ in range(size)]
+
+    def endpoints(self):
+        lo_elem = self.elem.endpoints()[0]
+        hi_elem = self.elem.endpoints()[-1]
+        return [[lo_elem] * self.min_size, [hi_elem] * self.max_size]
+
+    def shrink(self, v: list):
+        """Drop one element at a time, then shrink elements in place."""
+        if len(v) > self.min_size:
+            for i in range(len(v)):
+                yield v[:i] + v[i + 1:]
+        for i, x in enumerate(v):
+            for sx in self.elem.shrink(x):
+                yield v[:i] + [sx] + v[i + 1:]
+
+
+class _FallbackStrategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _IntStrategy:
+        return _IntStrategy(min_value, max_value)
+
+    @staticmethod
+    def lists(elements, *, min_size: int = 0,
+              max_size: int = 10) -> _ListStrategy:
+        return _ListStrategy(elements, min_size, max_size)
+
+
+fallback_st = _FallbackStrategies()
+
+
+def fallback_settings(**_kwargs):
+    return lambda fn: fn
+
+
+def _shrink_failure(fails, strategies, case):
+    """Greedy coordinate-wise shrink: repeatedly replace one coordinate
+    with its simplest still-failing candidate until no candidate fails
+    (or the budget runs out).  Returns the minimal failing case found."""
+    cur, budget = tuple(case), _SHRINK_BUDGET
+    improved = True
+    while improved and budget > 0:
+        improved = False
+        for i, strat in enumerate(strategies):
+            for cand in strat.shrink(cur[i]):
+                budget -= 1
+                trial = cur[:i] + (cand,) + cur[i + 1:]
+                if fails(trial):
+                    cur, improved = trial, True
+                    break
+                if budget <= 0:
+                    break
+            if improved or budget <= 0:
+                break
+    return cur
+
+
+def fallback_given(*strategies):
+    """Run the test body over fixed example tuples instead of a search;
+    shrink any failure to a minimal falsifying example."""
+
+    def deco(fn):
+        rng = random.Random(0)
+        ends = [s.endpoints() for s in strategies]
+        cases = [tuple(e[0] for e in ends), tuple(e[-1] for e in ends)]
+        cases += [tuple(s.draw(rng) for s in strategies)
+                  for _ in range(_N_RANDOM_CASES)]
+        # dedupe while keeping order (lo==hi for tight strategies); keys
+        # stringified because list cases are unhashable
+        cases = list({repr(c): c for c in cases}.values())
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            def fails(case):
+                try:
+                    fn(*args, *case, **kwargs)
+                    return False
+                except Exception:
+                    return True
+
+            for case in cases:
+                try:
+                    fn(*args, *case, **kwargs)
+                except Exception as err:
+                    minimal = _shrink_failure(fails, strategies, case)
+                    raise AssertionError(
+                        f"Falsifying example (shrunk from {case!r}): "
+                        f"{minimal!r}") from err
+
+        # pytest follows __wrapped__ to the original signature and would
+        # treat the strategy params as fixture requests — hide it.
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
 try:
     from hypothesis import given, settings  # noqa: F401
     from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
 except ModuleNotFoundError:
-    import functools
-    import random
-
-    _N_RANDOM_CASES = 5
-
-    class _IntStrategy:
-        def __init__(self, lo: int, hi: int):
-            self.lo, self.hi = int(lo), int(hi)
-
-        def draw(self, rng: random.Random) -> int:
-            return rng.randint(self.lo, self.hi)
-
-    class _Strategies:
-        @staticmethod
-        def integers(min_value: int, max_value: int) -> _IntStrategy:
-            return _IntStrategy(min_value, max_value)
-
-    st = _Strategies()
-
-    def settings(**_kwargs):
-        return lambda fn: fn
-
-    def given(*strategies: _IntStrategy):
-        """Run the test body over fixed example tuples instead of a search."""
-
-        def deco(fn):
-            rng = random.Random(0)
-            cases = [tuple(s.lo for s in strategies),
-                     tuple(s.hi for s in strategies)]
-            cases += [tuple(s.draw(rng) for s in strategies)
-                      for _ in range(_N_RANDOM_CASES)]
-            # dedupe while keeping order (lo==hi for tight strategies)
-            cases = list(dict.fromkeys(cases))
-
-            @functools.wraps(fn)
-            def wrapper(*args, **kwargs):
-                for case in cases:
-                    fn(*args, *case, **kwargs)
-
-            # pytest follows __wrapped__ to the original signature and would
-            # treat the strategy params as fixture requests — hide it.
-            del wrapper.__wrapped__
-            return wrapper
-
-        return deco
+    HAVE_HYPOTHESIS = False
+    given, settings, st = fallback_given, fallback_settings, fallback_st

@@ -6,5 +6,21 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+# One seed for the whole session, overridable for replay: every streaming /
+# randomized test derives its PRNG state from this (never from time or a
+# per-test literal drifting out of sync), so a failure reproduces with
+#   REPRO_TEST_SEED=<printed seed> pytest ...
+SESSION_SEED = int(os.environ.get("REPRO_TEST_SEED", "20260808"))
+
+
+@pytest.fixture(scope="session")
+def session_seed() -> int:
+    return SESSION_SEED
+
+
+def pytest_report_header(config):
+    return f"repro session seed: {SESSION_SEED} (REPRO_TEST_SEED to replay)"

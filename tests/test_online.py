@@ -1,0 +1,576 @@
+"""The streaming online loop: fold-in warm starts, drift-gated refreshes,
+versioned publishes, and the consistency contract under live traffic.
+
+The load-bearing checks:
+  * warm starts are honest — ``partial_update_h`` with a full mask IS
+    ``update_h``; the codes ingest appends to W are EXACTLY the cold
+    fold-in against the published artifact; ``fit(init=...)`` resumes
+    where a previous fit stopped;
+  * the touched-block refresh equals a full H sweep restricted to those
+    blocks (row-separability of the H half-update, the DID invariant);
+  * a drift-triggered refactorization lands within a declared envelope of
+    retraining from scratch;
+  * lineage only moves forward — versions increment, parents chain,
+    ``MeshServer.swap`` refuses regressions;
+  * the chaos check: 4 client threads submitting against a publisher that
+    keeps swapping versions — every future resolves exactly once and
+    every response's code matches an independent cold projection at the
+    version it is stamped with (no mixed-version factors, ever);
+  * randomized ingest schedules stay within the envelope of the
+    retrain-from-scratch oracle (property sweep, shrinking on failure);
+  * bit-identical replay from the session seed.
+"""
+
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import sparse as jsparse
+
+from _hypothesis_compat import (fallback_given, fallback_st, given, settings,
+                                st)
+from repro.core import rules as _rules
+from repro.core.engine import NMFSolver
+from repro.data.pipeline import stream_batch, stream_truth
+from repro.online import (DriftAccumulator, OnlineNMF, block_residual_energy,
+                          block_slices)
+from repro.serve.artifact import FactorArtifact
+from repro.serve.batcher import MicroBatcher
+from repro.serve.foldin import FoldInProjector
+from repro.serve.mesh import MeshServer
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+N, K = 64, 6
+ALGOS = ("mu", "hals", "bpp")
+
+
+def _rng(session_seed, salt=0):
+    return np.random.RandomState(session_seed % (2 ** 31) + salt)
+
+
+@pytest.fixture(scope="module")
+def A0(session_seed):
+    return np.asarray(stream_batch(session_seed, 0, rows=48, n=N, k=K,
+                                   noise=0.01))
+
+
+@pytest.fixture(scope="module")
+def trained(A0, session_seed):
+    return NMFSolver(K, algo="bpp", max_iters=200, tol=1e-5) \
+        .fit(jnp.asarray(A0), key=jax.random.PRNGKey(session_seed))
+
+
+# ------------------------------------------------- partial_update_h hook --
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_partial_update_h_full_mask_is_update_h(algo, session_seed):
+    rng = _rng(session_seed, 1)
+    m, n = 40, 32
+    rule = _rules.get_rule(algo).prepare_global(m, n, K)
+    W = jnp.asarray(rng.rand(m, K).astype(np.float32))
+    A = jnp.asarray(rng.rand(m, n).astype(np.float32))
+    G = W.T @ W
+    R = A.T @ W
+    X = jnp.asarray(rng.rand(n, K).astype(np.float32))
+    st0 = rule.init_state(m, n, K)
+    full, _ = rule.update_h(G, R, X, st0)
+    part, _ = rule.partial_update_h(G, R, X, None, st0)
+    np.testing.assert_array_equal(np.asarray(part), np.asarray(full))
+    ones, _ = rule.partial_update_h(G, R, X, jnp.ones(n, bool), st0)
+    np.testing.assert_array_equal(np.asarray(ones), np.asarray(full))
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_partial_update_h_mask_freezes_rows(algo, session_seed):
+    rng = _rng(session_seed, 2)
+    m, n = 40, 32
+    rule = _rules.get_rule(algo).prepare_global(m, n, K)
+    W = jnp.asarray(rng.rand(m, K).astype(np.float32))
+    A = jnp.asarray(rng.rand(m, n).astype(np.float32))
+    G, R = W.T @ W, A.T @ W
+    X = jnp.asarray(rng.rand(n, K).astype(np.float32))
+    mask = jnp.asarray(np.arange(n) % 2 == 0)
+    st0 = rule.init_state(m, n, K)
+    out, _ = rule.partial_update_h(G, R, X, mask, st0)
+    full, _ = rule.update_h(G, R, X, st0)
+    out, full, X = map(np.asarray, (out, full, X))
+    np.testing.assert_array_equal(out[::2], full[::2])      # updated
+    np.testing.assert_array_equal(out[1::2], X[1::2])       # frozen
+
+
+# ------------------------------------------------------ fit(init=...) -----
+
+def test_fit_init_tuple_resumes(A0, session_seed):
+    key = jax.random.PRNGKey(session_seed)
+    solver = NMFSolver(K, algo="hals", max_iters=15, tol=0.0)
+    first = solver.fit(jnp.asarray(A0), key=key)
+    resumed = solver.fit(jnp.asarray(A0), init=(first.W, first.H))
+    # the resumed trajectory starts at (or below) where the first stopped
+    # and keeps descending — a warm start, not a re-randomisation
+    assert resumed.rel_errors[0] <= first.rel_errors[-1] * 1.01
+    assert resumed.rel_errors[-1] <= resumed.rel_errors[0] * 1.001
+    cold = solver.fit(jnp.asarray(A0), key=key)
+    assert resumed.rel_errors[-1] <= cold.rel_errors[-1] * 1.01
+
+
+def test_fit_init_accepts_result_and_artifact(A0, trained):
+    solver = NMFSolver(K, algo="bpp", max_iters=3, tol=0.0)
+    from_res = solver.fit(jnp.asarray(A0), init=trained)
+    art = FactorArtifact.from_result(trained)
+    from_art = solver.fit(jnp.asarray(A0), init=art)
+    np.testing.assert_allclose(np.asarray(from_res.W), np.asarray(from_art.W),
+                               atol=1e-5)
+    # warm-started 3 iters stays at the converged fit's error (fp32 noise
+    # floor) — far below what 3 cold iterations reach
+    cold = solver.fit(jnp.asarray(A0), key=jax.random.PRNGKey(7))
+    assert from_res.rel_errors[-1] <= trained.rel_errors[-1] + 1e-4
+    assert from_res.rel_errors[-1] < cold.rel_errors[-1] * 0.5
+
+
+def test_fit_init_validation(A0, trained):
+    solver = NMFSolver(K, algo="bpp", max_iters=2)
+    with pytest.raises(ValueError, match="either"):
+        solver.fit(jnp.asarray(A0), init=trained, H0=trained.H)
+    with pytest.raises(TypeError):
+        solver.fit(jnp.asarray(A0), init="nonsense")
+    bad_W = np.ones((3, K), np.float32)
+    with pytest.raises(ValueError, match="warm-start W"):
+        solver.fit(jnp.asarray(A0), init=(bad_W, trained.H))
+
+
+# -------------------------------------------------- warm-start fold-in ----
+
+def test_ingest_codes_equal_cold_foldin(A0, trained, session_seed):
+    """The W rows ingest appends are the cold fold-in against the artifact
+    served at ingest time — the warm start is the serving path itself."""
+    rows = np.asarray(stream_batch(session_seed, 1, rows=16, n=N, k=K,
+                                   noise=0.01))
+    with OnlineNMF(A0, k=K, algo="bpp", result=trained,
+                   block_threshold=np.inf, full_threshold=np.inf) as svc:
+        art_before = svc.artifact
+        rep = svc.ingest(rows)
+        got = svc.W[-16:]
+    assert rep.action == "extend"
+    cold = FoldInProjector(art_before).project(jnp.asarray(rows))
+    np.testing.assert_allclose(got, np.asarray(cold), atol=1e-6)
+
+
+def test_sparse_ingest_matches_dense(A0, trained, session_seed):
+    rng = _rng(session_seed, 3)
+    dense = (rng.rand(8, N) * (rng.rand(8, N) < 0.2)).astype(np.float32)
+    mk = lambda: OnlineNMF(A0, k=K, algo="bpp", result=trained,
+                           block_threshold=np.inf, full_threshold=np.inf)
+    with mk() as a, mk() as b:
+        a.ingest(dense)
+        b.ingest(jsparse.BCOO.fromdense(jnp.asarray(dense)))
+        np.testing.assert_allclose(a.W, b.W, atol=1e-6)
+        np.testing.assert_array_equal(a.H, b.H)
+        assert a.shape == b.shape
+
+
+def test_ingest_validates_width(A0, trained):
+    with OnlineNMF(A0, k=K, algo="bpp", result=trained) as svc:
+        with pytest.raises(ValueError, match="features"):
+            svc.ingest(np.ones((2, N + 1), np.float32))
+
+
+# ------------------------------------------------- touched-block refresh --
+
+def test_partial_refresh_equals_restricted_full_sweep(A0, trained,
+                                                      session_seed):
+    """Row-separability: refreshing only the touched columns (gathered)
+    must equal a FULL H sweep restricted to those columns."""
+    rows = np.asarray(stream_batch(session_seed, 2, rows=16, n=N, k=K,
+                                   drift=0.6))
+    with OnlineNMF(A0, k=K, algo="bpp", result=trained, n_blocks=8,
+                   block_threshold=1e-6, full_threshold=np.inf) as svc:
+        H_before, W_before = svc.H, svc.W
+        rep = svc.ingest(rows)
+        H_after, W_after = svc.H, svc.W
+    assert rep.action == "refresh" and rep.touched_blocks
+    # independent full sweep with the grown W, restricted to touched cols
+    rule = _rules.get_rule("bpp").prepare_global(W_after.shape[0], N, K)
+    W = jnp.asarray(W_after)
+    A_acc = np.vstack([A0, rows])
+    full, _ = rule.update_h(W.T @ W, jnp.asarray(A_acc).T @ W,
+                            jnp.asarray(H_before.T),
+                            rule.init_state(W_after.shape[0], N, K))
+    full = np.asarray(full).T
+    mask = np.zeros(N, bool)
+    for b in rep.touched_blocks:
+        s = block_slices(N, 8)[b]
+        mask[s] = True
+    np.testing.assert_allclose(H_after[:, mask], full[:, mask], atol=2e-5)
+    np.testing.assert_array_equal(H_after[:, ~mask], H_before[:, ~mask])
+    # refresh improves the fit on the accumulated matrix
+    def relerr(H):
+        E = A_acc - W_after @ H
+        return np.linalg.norm(E) / np.linalg.norm(A_acc)
+    assert relerr(H_after) <= relerr(H_before) + 1e-6
+
+
+def test_refactor_reaches_scratch_quality(A0, session_seed):
+    with OnlineNMF(A0, k=K, algo="bpp", key=jax.random.PRNGKey(session_seed),
+                   block_threshold=np.inf, full_threshold=0.1) as svc:
+        for step in range(1, 7):
+            rep = svc.ingest(stream_batch(session_seed, step, rows=16, n=N,
+                                          k=K, drift=0.3, noise=0.01))
+            if rep.action == "refactor":
+                break
+        assert svc.stats.full_refactors >= 1
+        A_acc = np.vstack([A0] + [np.asarray(stream_batch(
+            session_seed, s, rows=16, n=N, k=K, drift=0.3, noise=0.01))
+            for s in range(1, step + 1)])
+        scratch = NMFSolver(K, algo="bpp", max_iters=60, tol=1e-5) \
+            .fit(jnp.asarray(A_acc), key=jax.random.PRNGKey(session_seed))
+        # warm-started refactor lands in the scratch fit's neighbourhood
+        assert svc.rel_err() <= float(scratch.rel_errors[-1]) * 1.5 + 0.02
+
+
+# ----------------------------------------------------------- lineage ------
+
+def test_lineage_monotone_and_reported(A0, trained, session_seed):
+    with OnlineNMF(A0, k=K, algo="bpp", result=trained,
+                   block_threshold=np.inf, full_threshold=np.inf) as svc:
+        assert svc.version == 0 and svc.artifact.parent_version is None
+        for step in range(1, 4):
+            rep = svc.ingest(stream_batch(session_seed, step, rows=8, n=N,
+                                          k=K))
+            assert rep.version == step == svc.version
+            assert svc.artifact.version == step
+            assert svc.artifact.parent_version == step - 1
+            assert svc.artifact.rows_absorbed == 8
+        assert svc.stats.publishes == 3
+
+
+def test_evolve_roundtrips_lineage(tmp_path, trained):
+    art = FactorArtifact.from_result(trained)
+    v1 = art.evolve(W=np.vstack([np.asarray(art.W),
+                                 np.ones((2, K), np.float32)]),
+                    rows_absorbed=2, refresh="extend")
+    assert (v1.version, v1.parent_version, v1.rows_absorbed) == (1, 0, 2)
+    assert v1.gram is art.gram                 # H untouched → Gram reused
+    loaded = FactorArtifact.load(v1.save(str(tmp_path / "v1")))
+    assert (loaded.version, loaded.parent_version,
+            loaded.rows_absorbed) == (1, 0, 2)
+    assert loaded.meta["refresh"] == "extend"
+    v2 = v1.evolve(H=np.asarray(v1.H) * 0.5)
+    assert v2.version == 2 and v2.parent_version == 1
+    assert v2.gram is not v1.gram              # H changed → Gram recomputed
+    np.testing.assert_allclose(np.asarray(v2.gram),
+                               np.asarray(v1.gram) * 0.25, atol=1e-4)
+
+
+def test_evolve_validates_shapes(trained):
+    art = FactorArtifact.from_result(trained)
+    with pytest.raises(ValueError):
+        art.evolve(W=np.ones((4, K + 1), np.float32))
+    with pytest.raises(ValueError):
+        art.evolve(H=np.ones((K, N + 3), np.float32))
+
+
+def test_meshserver_refuses_stale_swap(trained):
+    art = FactorArtifact.from_result(trained)
+    v1 = art.evolve(W=art.W)
+    with MeshServer(v1, warmup=False) as srv:
+        assert srv.version == 1
+        with pytest.raises(ValueError, match="stale swap"):
+            srv.swap(art)                      # v0 onto v1: refused
+        srv.swap(v1.evolve(W=v1.W))            # v2: forward, accepted
+        assert srv.version == 2
+
+
+# ------------------------------------------------------- drift units ------
+
+def test_drift_zero_when_explained(session_seed):
+    rng = _rng(session_seed, 4)
+    X = rng.rand(10, K).astype(np.float32)
+    H = rng.rand(K, N).astype(np.float32)
+    acc = DriftAccumulator(N, n_blocks=8)
+    excess = acc.observe(X @ H, X, H)
+    assert float(np.max(excess)) < 1e-8
+    assert not acc.touched().any() and not acc.should_refactor()
+
+
+def test_drift_baseline_absorbs_training_error(session_seed):
+    rng = _rng(session_seed, 5)
+    X = rng.rand(10, K).astype(np.float32)
+    H = rng.rand(K, N).astype(np.float32)
+    rows = X @ H + 0.01 * rng.rand(10, N).astype(np.float32)
+    rel = np.linalg.norm(rows - X @ H) / np.linalg.norm(rows)
+    noisy = DriftAccumulator(N, baseline_rel_err=0.0)
+    noisy.observe(rows, X, H)
+    calibrated = DriftAccumulator(N, baseline_rel_err=rel * 1.05)
+    calibrated.observe(rows, X, H)
+    assert calibrated.total < noisy.total
+    assert calibrated.total < 1e-4         # baseline soaks up the residual
+
+
+def test_drift_localises_to_corrupted_block(session_seed):
+    rng = _rng(session_seed, 6)
+    X = rng.rand(10, K).astype(np.float32)
+    H = rng.rand(K, N).astype(np.float32)
+    rows = (X @ H).copy()
+    sl = block_slices(N, 8)[3]
+    rows[:, sl] += 5.0
+    acc = DriftAccumulator(N, n_blocks=8, block_threshold=0.01)
+    acc.observe(rows, X, H)
+    touched = acc.touched()
+    assert touched[3] and touched.sum() == 1
+    mask = acc.column_mask()
+    assert mask[sl].all() and mask.sum() == sl.stop - sl.start
+    acc.reset(touched)
+    assert acc.total == 0.0
+
+
+def test_drift_reset_all_rebases_baseline():
+    acc = DriftAccumulator(N, baseline_rel_err=0.1)
+    acc._drift[:] = 1.0                    # accumulated state
+    assert acc.should_refactor()
+    acc.reset_all(baseline_rel_err=0.2)
+    assert acc.total == 0.0 and acc.baseline_rel_err == 0.2
+
+
+def test_block_slices_partition():
+    for n, b in ((64, 8), (65, 8), (7, 3), (8, 8)):
+        sls = block_slices(n, b)
+        cover = np.concatenate([np.arange(s.start, s.stop) for s in sls])
+        np.testing.assert_array_equal(cover, np.arange(n))
+        widths = [s.stop - s.start for s in sls]
+        assert max(widths) - min(widths) <= 1
+
+
+def test_drift_validates_args():
+    with pytest.raises(ValueError):
+        DriftAccumulator(8, n_blocks=9)
+    with pytest.raises(ValueError):
+        DriftAccumulator(8, block_threshold=-1.0)
+
+
+# ---------------------------------------------------- batcher payloads ----
+
+def test_batcher_delivers_list_payloads_verbatim():
+    def project(rows):
+        return [("payload", i, float(rows[i, 0])) for i in range(len(rows))]
+    with MicroBatcher(project, max_batch=4, max_delay_s=1e-3) as mb:
+        futs = [mb.submit(np.full((3,), float(i), np.float32))
+                for i in range(6)]
+        for i, f in enumerate(futs):
+            tag, j, v = f.result(timeout=30)
+            assert tag == "payload" and v == float(i)
+
+
+# ------------------------------------------------------- chaos check ------
+
+def test_swap_chaos_never_mixes_versions(A0, trained, session_seed):
+    """4 live client threads under a publisher that keeps swapping: every
+    future resolves exactly once, and every response's code matches an
+    independent cold projection at the version it is STAMPED with —
+    version-consistency is checked against the payload, not trusted."""
+    probes = np.asarray(stream_batch(session_seed, 9, rows=4, n=N, k=K),
+                        np.float32)
+    arts = {}
+    stop = threading.Event()
+    results, errors = [], []
+    res_lock = threading.Lock()
+
+    with OnlineNMF(A0, k=K, algo="bpp", result=trained, n_blocks=8,
+                   block_threshold=0.05, full_threshold=np.inf,
+                   max_delay_s=1e-4) as svc:
+        arts[0] = svc.artifact
+
+        def client(tid):
+            try:
+                futs = []
+                while not stop.is_set():
+                    futs.append((tid, svc.submit(probes[tid])))
+                    time.sleep(0.001)
+                for tid_, f in futs:
+                    r = f.result(timeout=60)
+                    with res_lock:
+                        results.append((tid_, r))
+            except Exception as e:           # surfaced after join
+                errors.append(e)
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        for step in range(1, 7):
+            rep = svc.ingest(stream_batch(session_seed, step, rows=12, n=N,
+                                          k=K, drift=0.4))
+            arts[rep.version] = svc.artifact
+        stop.set()
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors
+        published = set(arts)
+
+    assert len(results) > 0
+    # expected code per (thread, version): independent cold fold-in
+    expected = {}
+    for v, art in arts.items():
+        codes = np.asarray(FoldInProjector(art).project(
+            jnp.asarray(probes)))
+        for tid in range(4):
+            expected[(tid, v)] = codes[tid]
+    mixed = 0
+    for tid, r in results:
+        assert r.version in published
+        if not np.allclose(np.asarray(r.code), expected[(tid, r.version)],
+                           atol=1e-5):
+            mixed += 1
+    assert mixed == 0, f"{mixed}/{len(results)} responses inconsistent " \
+                       f"with their version stamp"
+    assert len({v for _, r in results for v in [r.version]}) >= 1
+
+
+def test_stats_accounting(A0, trained, session_seed):
+    with OnlineNMF(A0, k=K, algo="bpp", result=trained,
+                   block_threshold=np.inf, full_threshold=np.inf) as svc:
+        svc.project(A0[:5])
+        assert svc.stats.queries == 5 and svc.stats.stale_queries == 0
+        assert svc.stats.served_by_version[0] == 5
+        svc.ingest(stream_batch(session_seed, 1, rows=4, n=N, k=K))
+        svc.project(A0[:3])
+        assert svc.stats.served_by_version[1] == 3
+        # a delivery stamped with a superseded version counts as stale
+        svc._record_serve(2, svc.version - 1)
+        assert svc.stats.stale_queries == 2
+        assert 0.0 < svc.stats.staleness < 1.0
+        _, _, v = svc.retrieve(A0[:2], k=3)
+        assert v == 1
+
+
+# --------------------------------------------- property sweep vs oracle ---
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=6), min_size=1,
+                max_size=4))
+def test_random_schedules_track_scratch_oracle(schedule):
+    """Any ingest schedule must keep the online model within the declared
+    envelope of retraining from scratch on the same accumulated matrix:
+    rel_err ≤ oracle · 2 + 0.05.  Each entry s encodes one batch: row
+    count 8·⌈s/2⌉, delivered sparse (BCOO, ~70% zeroed) when s is even,
+    dense otherwise — row counts, nnz and storage all vary per schedule."""
+    seed, n, k = 1234, 48, 4
+    A0 = np.asarray(stream_batch(seed, 0, rows=32, n=n, k=k, noise=0.01))
+    batches, dense_acc = [], []
+    for i, s in enumerate(schedule):
+        rows = np.asarray(stream_batch(seed, 1 + i, rows=8 * ((s + 1) // 2),
+                                       n=n, k=k, drift=0.15, noise=0.01))
+        if s % 2 == 0:                      # sparse delivery, sparser data
+            mask = _rng(seed, 100 + i).rand(*rows.shape) < 0.3
+            rows = (rows * mask).astype(np.float32)
+            batches.append(jsparse.BCOO.fromdense(jnp.asarray(rows)))
+        else:
+            batches.append(rows)
+        dense_acc.append(rows)
+    with OnlineNMF(A0, k=k, algo="bpp", key=jax.random.PRNGKey(seed),
+                   n_blocks=6, block_threshold=0.1,
+                   full_threshold=1.0) as svc:
+        for b in batches:
+            svc.ingest(b)
+        online = svc.rel_err()
+        m_total = svc.shape[0]
+    A_acc = np.vstack([A0] + dense_acc)
+    assert A_acc.shape[0] == m_total
+    oracle = NMFSolver(k, algo="bpp", max_iters=50, tol=1e-5) \
+        .fit(jnp.asarray(A_acc), key=jax.random.PRNGKey(seed))
+    assert online <= float(oracle.rel_errors[-1]) * 2.0 + 0.05, \
+        f"online {online} outside envelope of oracle " \
+        f"{float(oracle.rel_errors[-1])} for schedule {schedule}"
+
+
+def test_fallback_shrinker_minimises_schedule():
+    """The shim's shrinker must hand back the MINIMAL failing schedule —
+    here the property fails iff any entry ≥ 3, so the minimal falsifying
+    example is the one-element schedule [3]."""
+    @fallback_given(fallback_st.lists(fallback_st.integers(0, 5),
+                                      min_size=0, max_size=6))
+    def prop(xs):
+        assert all(x < 3 for x in xs)
+    with pytest.raises(AssertionError, match=r"Falsifying example") as ei:
+        prop()
+    assert "[3]" in str(ei.value)
+
+
+def test_fallback_shrinker_minimises_integers():
+    @fallback_given(fallback_st.integers(0, 100))
+    def prop(x):
+        assert x < 7
+    with pytest.raises(AssertionError) as ei:
+        prop()
+    assert "7" in str(ei.value).rsplit(":", 1)[-1]
+
+
+def test_fallback_given_passes_clean_properties():
+    calls = []
+
+    @fallback_given(fallback_st.integers(0, 3),
+                    fallback_st.lists(fallback_st.integers(0, 1),
+                                      min_size=0, max_size=2))
+    def prop(x, xs):
+        calls.append((x, list(xs)))
+        assert 0 <= x <= 3 and all(0 <= v <= 1 for v in xs)
+    prop()
+    assert len(calls) >= 2                    # endpoints + random draws
+
+
+# ------------------------------------------------- deterministic replay ---
+
+def test_replay_is_bit_identical(A0, session_seed):
+    """Same session seed → the full streaming run (init fit, fold-ins,
+    refreshes, drift decisions) replays bit-identically."""
+    def run():
+        svc = OnlineNMF(A0, k=K, algo="hals",
+                        key=jax.random.PRNGKey(session_seed), n_blocks=8,
+                        block_threshold=0.05, full_threshold=np.inf)
+        reports = []
+        for step in range(1, 5):
+            reports.append(svc.ingest(stream_batch(session_seed, step,
+                                                   rows=8, n=N, k=K,
+                                                   drift=0.3)))
+        out = (svc.W, svc.H, [r.action for r in reports],
+               [r.version for r in reports], svc.drift.drift)
+        svc.close()
+        return out
+    W1, H1, acts1, vers1, d1 = run()
+    W2, H2, acts2, vers2, d2 = run()
+    assert acts1 == acts2 and vers1 == vers2
+    np.testing.assert_array_equal(W1, W2)
+    np.testing.assert_array_equal(H1, H2)
+    np.testing.assert_array_equal(d1, d2)
+    # and the stream itself replays bit-identically
+    np.testing.assert_array_equal(
+        np.asarray(stream_batch(session_seed, 3, rows=8, n=N, k=K,
+                                drift=0.3)),
+        np.asarray(stream_batch(session_seed, 3, rows=8, n=N, k=K,
+                                drift=0.3)))
+
+
+# --------------------------------------------- distributed checks driver --
+
+@pytest.mark.slow
+def test_online_distributed_checks():
+    """Runs online_distributed_checks.py in one subprocess with 8 fake
+    host devices (same harness as serve_distributed_checks.py)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env["REPRO_TEST_SEED"] = str(
+        __import__("conftest").SESSION_SEED)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "online_distributed_checks.py")],
+        capture_output=True, text=True, env=env, timeout=1150)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "online distributed checks failed"
+    assert "0 failures" in proc.stdout
