@@ -8,10 +8,10 @@ Prints ``name,us_per_call,derived`` CSV lines.
 import sys
 import time
 
-from benchmarks import (bench_autotune, bench_cost_table, bench_datasets,
-                        bench_error_curves, bench_grid_sweep, bench_k_sweep,
-                        bench_online, bench_serving, bench_strong_scaling,
-                        bench_time_to_tol)
+from benchmarks import (bench_autotune, bench_breakdown, bench_cost_table,
+                        bench_datasets, bench_error_curves, bench_grid_sweep,
+                        bench_k_sweep, bench_online, bench_serving,
+                        bench_strong_scaling, bench_time_to_tol)
 
 BENCHES = {
     "fig4_error_curves": bench_error_curves.main,
@@ -25,6 +25,7 @@ BENCHES = {
     "serve_latency": bench_serving.main,
     "serve_scaling": bench_serving.scaling_main,
     "online_staleness": bench_online.main,
+    "phase_breakdown": bench_breakdown.main,
 }
 
 

@@ -220,6 +220,41 @@ def naive_cost(m: int, n: int, k: int, p: int, *, algo: str = "bpp",
                     ops.mm_traffic_words(m, n, k, nnz=nnz) / p)
 
 
+def schedule_cost_terms(schedule: str, m: int, n: int, k: int, *,
+                        pr: int = 1, pc: int = 1, algo: str = "bpp",
+                        dense: bool = True, nnz: float = 0.0,
+                        bpp_iters: float = 1.0, backend=None,
+                        compression: str | None = None,
+                        machine: Machine | None = None) -> dict[str, float]:
+    """Per-phase-group predicted seconds — the join key for the measured
+    breakdown of ``NMFSolver.fit(profile=True)`` (see repro.obs.report).
+
+    Returns ``{"gram", "mm", "luc", "comm", "error"}`` where the first four
+    partition the model exactly: ``gram + mm + luc + comm ==
+    schedule_cost(...).time(machine)`` (comm is β·words + α·messages, i.e.
+    the time total minus γ·flops).  ``error`` models the convergence-check
+    byproduct (one extra k×k Gram of the H block) which ``IterCost`` does
+    not charge — it is informational, outside the partition.
+    """
+    mach = machine or Machine()
+    sched = schedule.lower()
+    total = schedule_cost(sched, m, n, k, pr=pr, pc=pc, algo=algo,
+                          dense=dense, nnz=nnz, bpp_iters=bpp_iters,
+                          backend=backend, compression=compression)
+    ops = _resolve_ops(backend, dense)
+    p = 1 if sched == "serial" else pr * pc
+    mm_f = ops.mm_flops(m, n, k, nnz=nnz) / p
+    # naive recomputes both k×k Grams redundantly on every processor
+    gram_f = (m + n) * k * k if sched == "naive" else (m + n) * k * k / p
+    luc_f = luc_flops(algo, m / p, n / p, k, bpp_iters=bpp_iters)
+    comm = max(total.time(mach) - mach.gamma * (mm_f + gram_f + luc_f), 0.0)
+    return {"gram": mach.gamma * gram_f,
+            "mm": mach.gamma * mm_f,
+            "luc": mach.gamma * luc_f,
+            "comm": comm,
+            "error": mach.gamma * n * k * k / p}
+
+
 def optimal_grid(m: int, n: int, p: int) -> tuple[int, int]:
     """Paper §5.2.2: pr/pc ≈ m/n subject to pr·pc = p (integer search), with
     the 1-D degenerate cases when one dimension dominates."""

@@ -497,6 +497,14 @@ class NMFSolver:
     ``repro.distributed.compression``; gspmd emulates the numerics only).
     The default ``None`` keeps the exact wire format bit-identically.  It
     does not compose with ``panel_dtype`` (both rewrite the wire format).
+
+    ``fit(profile=True)`` swaps the compiled loop for the segmented
+    phase profiler (``repro.obs.phases``): per-iteration mean seconds per
+    Algorithm-3 phase land in ``NMFResult.extras["phase_times"]``, joinable
+    against ``predict_cost_terms`` via ``repro.obs.report``.  Pass
+    ``tracer=`` a ``repro.obs.Tracer`` to also capture each segment as a
+    Perfetto span.  Profiling covers the exact wire format only (refuses
+    ``panel_dtype`` / ``panel_compression``).
     """
 
     def __init__(self, k: int, *, algo: "_rules.RuleSpec" = "bpp",
@@ -569,8 +577,19 @@ class NMFSolver:
 
     def fit(self, A, *, key: jax.Array | None = None,
             H0: jax.Array | None = None,
-            W0: jax.Array | None = None, init=None) -> NMFResult:
+            W0: jax.Array | None = None, init=None,
+            profile: bool = False, tracer=None) -> NMFResult:
         m, n = A.shape
+        if profile and self.panel_compression is not None:
+            raise ValueError(
+                "profile=True times the uncompressed wire format; it does "
+                "not compose with panel_compression (the compressed "
+                "collectives fuse payload+sidecar into one phase the "
+                "segmented profiler cannot attribute)")
+        if profile and self.panel_dtype is not None:
+            raise ValueError("profile=True does not compose with "
+                             "panel_dtype (same wire-format reason as "
+                             "panel_compression)")
         dtype = getattr(A, "dtype", jnp.float32)
         # Rules that size themselves from the problem (inner_iters=None)
         # specialise here, where the global dims are first known; the
@@ -593,6 +612,20 @@ class NMFSolver:
         Arep, W, Ht, normA_sq = self._schedule.prepare(A, W0, H0)
         state0 = self._schedule.init_carry(m, n, dtype)
         crit = self.stopping
+        if profile:
+            from repro.obs import phases as _phases
+            W, Ht, rels, iters_run, state, phase_times = _phases.run_profiled(
+                self._schedule, Arep, W, Ht, normA_sq, state0, crit,
+                tracer=tracer)
+            W, H = self._schedule.collect(W, Ht)
+            rule_state, _ = self._schedule.split_state(state)
+            extras = {"schedule": self.schedule, "backend": self.backend,
+                      "stopped_early": iters_run < crit.max_iters,
+                      "rule_state": (None if rule_state is None
+                                     else jax.device_get(rule_state)),
+                      "phase_times": phase_times}
+            return NMFResult(W=W, H=H, rel_errors=rels, algo=self.algo,
+                             iters=iters_run, extras=extras)
         run = _cached_run(self._schedule, crit, self.donate)
         if crit.adaptive:
             W, Ht, rels, i, state = run(Arep, W, Ht, normA_sq, state0)
@@ -645,6 +678,20 @@ class NMFSolver:
             self.schedule, m, n, self.k, pr=pr, pc=pc, algo=rule,
             backend=self.ops, nnz=nnz, bpp_iters=bpp_iters,
             compression=self.panel_compression)
+
+    def predict_cost_terms(self, m: int, n: int, *, nnz: float = 0.0,
+                           bpp_iters: float = 1.0, machine=None):
+        """Per-phase-group predicted seconds (gram/mm/luc/comm/error) —
+        the model side of the measured-vs-predicted join against
+        ``fit(profile=True)``'s ``extras["phase_times"]``; see
+        ``repro.obs.report``."""
+        from repro.core import costmodel
+        pr, pc = self._schedule.grid_shape()
+        rule = self._base_rule.prepare_global(m, n, self.k)
+        return costmodel.schedule_cost_terms(
+            self.schedule, m, n, self.k, pr=pr, pc=pc, algo=rule,
+            backend=self.ops, nnz=nnz, bpp_iters=bpp_iters,
+            compression=self.panel_compression, machine=machine)
 
 
 # ---------------------------------------------------------------------------

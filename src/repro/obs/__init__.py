@@ -1,0 +1,31 @@
+"""Observability: metrics registry, tracing, and phase-level profiling.
+
+Three coordinated surfaces (ISSUE 9):
+
+  * ``repro.obs.metrics`` — counters / gauges / histograms in a
+    thread-safe ``MetricsRegistry`` with Prometheus + JSONL export; the
+    serving and online layers' stats objects are views over it.
+  * ``repro.obs.trace``   — lightweight spans exported as Chrome/Perfetto
+    trace-event JSON; serve/online decision points emit into the
+    process-default tracer (disabled, hence free, until enabled).
+  * ``repro.obs.phases``  — the segmented per-phase profiler behind
+    ``NMFSolver.fit(profile=True)``, joined against the α-β-γ cost model
+    by ``repro.obs.report`` (measured-vs-predicted, the Fig-7 analog).
+"""
+
+from repro.obs.log import get_logger, log_event
+from repro.obs.metrics import (Counter, Gauge, Histogram, LATENCY_BUCKETS_S,
+                               MetricsRegistry, SIZE_BUCKETS,
+                               default_registry, next_instance_label)
+from repro.obs.phases import expected_phases, phase_group, run_profiled
+from repro.obs.report import (breakdown_report, format_report,
+                              merge_phase_times, run_all_schedules)
+from repro.obs.trace import SpanEvent, Tracer, default_tracer, span
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "LATENCY_BUCKETS_S", "MetricsRegistry",
+    "SIZE_BUCKETS", "SpanEvent", "Tracer", "breakdown_report",
+    "default_registry", "default_tracer", "expected_phases", "format_report",
+    "get_logger", "log_event", "merge_phase_times", "next_instance_label",
+    "phase_group", "run_all_schedules", "run_profiled", "span",
+]

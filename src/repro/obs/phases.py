@@ -1,0 +1,372 @@
+"""Phase-level iteration profiling: measure what the cost model predicts.
+
+The paper's headline evidence (Figs 7–9) splits each iteration into local
+computation (Gram, MM, NLS) versus communication (all-gathers,
+reduce-scatters); ``core/costmodel.py`` *predicts* those terms but the
+engine's compiled ``lax.scan``/``while_loop`` runs an iteration as one
+opaque dispatch, so nothing ever *measured* them.  This module closes the
+loop: ``NMFSolver.fit(profile=True)`` routes here and runs the SAME
+iteration maths as a **host-driven chain of per-phase compiled segments**
+— one jitted (and, on distributed schedules, shard_mapped) callable per
+phase of Algorithm 3, with ``jax.block_until_ready`` after each — so the
+wall-clock between segment boundaries is a device-synced measurement of
+exactly one phase.  Every segment body also sits under a
+``jax.named_scope`` carrying the phase name, so device profiler traces
+line up with the host timings.
+
+Phase keys per schedule (the six collectives of Algorithm 3 are each
+their own phase on faun; naive has only its two factor gathers; gspmd's
+collectives are chosen by XLA inside the compute segments):
+
+    serial  gram_w mm_w luc_w gram_h mm_h luc_h error
+    faun    gram_w allreduce_gram_w allgather_h mm_w reduce_scatter_w
+            luc_w gram_h allreduce_gram_h allgather_w mm_h
+            reduce_scatter_h luc_h error
+    naive   allgather_h gram_w mm_w luc_w allgather_w gram_h mm_h luc_h
+            error
+    gspmd   gram_w mm_w luc_w gram_h mm_h luc_h error
+
+The numbers land in ``NMFResult.extras["phase_times"]`` (mean seconds per
+iteration per phase; the first, compile-bearing pass runs untimed against
+the initial factors so means are steady-state) and join against the
+α-β-γ predictions in ``repro.obs.report`` — the measured-vs-predicted
+protocol the TPU-validation roadmap items need.
+
+Segment chains are cached on the schedule's cache key, so repeated
+profiled fits recompile nothing.  Splitting an iteration at phase
+boundaries blocks cross-phase fusion, so a profiled run is slower than
+the production loop — by design: this is a measurement mode, not a
+serving mode (``profile=True`` refuses to compose with the wire-format
+knobs ``panel_dtype`` / ``panel_compression`` for the same reason).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.util.compat import shard_map
+
+#: phase key -> cost-model group (the report's join key)
+PHASE_GROUPS = {
+    "gram": "gram", "mm": "mm", "luc": "luc", "error": "error",
+    "allreduce": "comm", "allgather": "comm", "reduce_scatter": "comm",
+}
+
+
+def phase_group(phase: str) -> str:
+    """Map a measured phase key to its cost-model group
+    (gram / mm / luc / comm / error)."""
+    for prefix, group in PHASE_GROUPS.items():
+        if phase.startswith(prefix):
+            return group
+    return "other"
+
+
+def expected_phases(schedule: str) -> tuple[str, ...]:
+    """The phase keys ``fit(profile=True)`` reports for a schedule."""
+    compute = ("gram_{h}", "mm_{h}", "luc_{h}")
+    if schedule == "faun":
+        half = ("gram_{h}", "allreduce_gram_{h}", "allgather_{o}",
+                "mm_{h}", "reduce_scatter_{h}", "luc_{h}")
+    elif schedule == "naive":
+        half = ("allgather_{o}",) + compute
+    elif schedule in ("serial", "gspmd"):
+        half = compute
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    out = []
+    for h, o in (("w", "h"), ("h", "w")):
+        out += [p.format(h=h, o=o) for p in half]
+    return tuple(out) + ("error",)
+
+
+class _Segment:
+    """One compiled phase: ``fn(*env[in_keys]) -> env[out_keys]``."""
+
+    __slots__ = ("phase", "fn", "in_keys", "out_keys")
+
+    def __init__(self, phase, fn, in_keys, out_keys):
+        self.phase, self.in_keys, self.out_keys = phase, in_keys, out_keys
+        scoped = _named(phase, fn)
+        self.fn = jax.jit(scoped)
+
+
+def _named(phase: str, fn):
+    def wrapped(*args):
+        with jax.named_scope(phase):
+            return fn(*args)
+    return wrapped
+
+
+def _err_body(gram, psum):
+    """Shared error-byproduct body: per-device blocks in, scalar out."""
+    def err(normA_sq, WtAt, Ht, WtW):
+        HHt_new = psum(gram(Ht))
+        cross = psum(jnp.sum(WtAt.astype(jnp.float32)
+                             * Ht.astype(jnp.float32)))
+        quad = jnp.sum(WtW.astype(jnp.float32)
+                       * HHt_new.astype(jnp.float32))
+        return normA_sq - 2.0 * cross + quad
+    return err
+
+
+def _luc_body(update, norm_psum):
+    """Update-rule segment: restores the factor carry dtype like the
+    engine loop does (backends may emit fp32 from low-precision factors)."""
+    def luc(G, R, X, state):
+        Xn, state = update(G, R, X, state, norm_psum=norm_psum)
+        return Xn.astype(X.dtype), state
+    return luc
+
+
+# ---------------------------------------------------------------------------
+# Per-schedule segment builders.  Each returns a list of _Segment operating
+# on a dict of GLOBAL arrays; distributed schedules wrap per-device bodies
+# in shard_map with the same layouts the production step uses, so the
+# measured collectives move exactly the production wire traffic.
+# ---------------------------------------------------------------------------
+
+def _serial_segments(sched) -> list[_Segment]:
+    ops, rule = sched.s.ops, sched.s.rule
+    S = _Segment
+    return [
+        S("gram_w", ops.gram, ("Ht",), ("HHt",)),
+        S("mm_w", ops.mm, ("A", "Ht"), ("AHt",)),
+        S("luc_w", _luc_body(rule.update_w, lambda v: v),
+          ("HHt", "AHt", "W", "state"), ("W", "state")),
+        S("gram_h", ops.gram, ("W",), ("WtW",)),
+        S("mm_h", ops.mm_t, ("A", "W"), ("WtAt",)),
+        S("luc_h", _luc_body(rule.update_h, lambda v: v),
+          ("WtW", "WtAt", "Ht", "state"), ("Ht", "state")),
+        S("error", _err_body(ops.gram, lambda v: v),
+          ("normA", "WtAt", "Ht", "WtW"), ("sq",)),
+    ]
+
+
+def _faun_segments(sched) -> list[_Segment]:
+    from repro.core.faun import allgather_panel, matmul_reducescatter
+    grid, ops, rule = sched.grid, sched.s.ops, sched.s.rule
+    row_axes, col_axis = grid.row_axes, grid.col_axis
+    all_axes = tuple(row_axes) + (col_axis,)
+    rows = row_axes if len(row_axes) > 1 else row_axes[0]
+    specA, specW, specHt = ops.spec_A(grid), grid.spec_W(), grid.spec_Ht()
+    spec_stack = P(all_axes, None, None)          # per-device k×k partials
+    spec_panel_h = P(col_axis, None)              # H^j gathered panels
+    spec_panel_w = P(rows, None)                  # W_i gathered panels
+    spec_V = P(tuple(row_axes) + (col_axis,), None)   # pre-scatter partials
+    spec_Y = P((col_axis,) + tuple(row_axes), None)
+    psum_all = lambda v: lax.psum(v, all_axes)
+
+    def sm(fn, in_specs, out_specs):
+        return shard_map(fn, mesh=grid.mesh, in_specs=in_specs,
+                         out_specs=out_specs)
+
+    def gather(axes):
+        def f(x):
+            for ax in axes:
+                x = allgather_panel(x, ax, concat_axis=0)
+            return x
+        return f
+
+    def scatter(axes):
+        def f(x):
+            for ax in axes:
+                x = matmul_reducescatter(x, ax, scatter_axis=0)
+            return x
+        return f
+
+    S = _Segment
+    return [
+        # ---- W half (paper lines 3–8), one segment per phase ----
+        S("gram_w", sm(lambda Ht: ops.gram(Ht)[None],
+                       (specHt,), spec_stack), ("Ht",), ("Ugw",)),
+        S("allreduce_gram_w", sm(lambda u: psum_all(u[0]),
+                                 (spec_stack,), P()), ("Ugw",), ("HHt",)),
+        S("allgather_h", sm(gather(tuple(reversed(row_axes))),
+                            (specHt,), spec_panel_h), ("Ht",), ("Hp",)),
+        S("mm_w", sm(ops.mm, (specA, spec_panel_h), spec_V),
+          ("A", "Hp"), ("V",)),
+        S("reduce_scatter_w", sm(scatter((col_axis,)), (spec_V,), specW),
+          ("V",), ("AHt",)),
+        S("luc_w", sm(_luc_body(rule.update_w, psum_all),
+                      (P(), specW, specW, P()), (specW, P())),
+          ("HHt", "AHt", "W", "state"), ("W", "state")),
+        # ---- H half (lines 9–14, pr ↔ pc) ----
+        S("gram_h", sm(lambda W: ops.gram(W)[None],
+                       (specW,), spec_stack), ("W",), ("Ugh",)),
+        S("allreduce_gram_h", sm(lambda u: psum_all(u[0]),
+                                 (spec_stack,), P()), ("Ugh",), ("WtW",)),
+        S("allgather_w", sm(gather((col_axis,)), (specW,), spec_panel_w),
+          ("W",), ("Wp",)),
+        S("mm_h", sm(ops.mm_t, (specA, spec_panel_w), spec_Y),
+          ("A", "Wp"), ("Y",)),
+        S("reduce_scatter_h", sm(scatter(tuple(row_axes)), (spec_Y,), specHt),
+          ("Y",), ("WtAt",)),
+        S("luc_h", sm(_luc_body(rule.update_h, psum_all),
+                      (P(), specHt, specHt, P()), (specHt, P())),
+          ("WtW", "WtAt", "Ht", "state"), ("Ht", "state")),
+        S("error", sm(_err_body(ops.gram, psum_all),
+                      (P(), specHt, specHt, P()), P()),
+          ("normA", "WtAt", "Ht", "WtW"), ("sq",)),
+    ]
+
+
+def _naive_segments(sched) -> list[_Segment]:
+    mesh, ax = sched.mesh, sched.axis
+    ops, rule = sched.s.ops, sched.s.rule
+    spec_row, spec_col = sched._specs_A()
+    psum = lambda v: lax.psum(v, ax)
+
+    def sm(fn, in_specs, out_specs):
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)
+
+    def gather(x):
+        return lax.all_gather(x, ax, axis=0, tiled=True)
+
+    S = _Segment
+    return [
+        # the redundant per-device Grams of Algorithm 2 are reproduced
+        # faithfully: every device computes the full k×k from its gathered
+        # copy (in_specs P() replicates the gathered factor).
+        S("allgather_h", sm(gather, (P(ax, None),), P()), ("Ht",), ("Hf",)),
+        S("gram_w", sm(ops.gram, (P(),), P()), ("Hf",), ("HHt",)),
+        S("mm_w", sm(ops.mm, (spec_row, P()), P(ax, None)),
+          ("Arow", "Hf"), ("AHt",)),
+        S("luc_w", sm(_luc_body(rule.update_w, psum),
+                      (P(), P(ax, None), P(ax, None), P()),
+                      (P(ax, None), P())),
+          ("HHt", "AHt", "W", "state"), ("W", "state")),
+        S("allgather_w", sm(gather, (P(ax, None),), P()), ("W",), ("Wf",)),
+        S("gram_h", sm(ops.gram, (P(),), P()), ("Wf",), ("WtW",)),
+        S("mm_h", sm(ops.mm_t, (spec_col, P()), P(ax, None)),
+          ("Acol", "Wf"), ("WtAt",)),
+        S("luc_h", sm(_luc_body(rule.update_h, psum),
+                      (P(), P(ax, None), P(ax, None), P()),
+                      (P(ax, None), P())),
+          ("WtW", "WtAt", "Ht", "state"), ("Ht", "state")),
+        S("error", sm(_err_body(ops.gram, psum),
+                      (P(), P(ax, None), P(ax, None), P()), P()),
+          ("normA", "WtAt", "Ht", "WtW"), ("sq",)),
+    ]
+
+
+def _gspmd_segments(sched) -> list[_Segment]:
+    # Global-view programs have no explicit collectives to segment: XLA
+    # inserts whatever it chooses INSIDE each compute segment, so the
+    # partitioner's communication cost shows up attributed to the phase
+    # whose product forced it — which is the honest attribution for a
+    # schedule whose wire format the partitioner owns.
+    ops, rule = sched.gops, sched.s.rule
+    S = _Segment
+    return [
+        S("gram_w", ops.gram, ("Ht",), ("HHt",)),
+        S("mm_w", ops.mm, ("A", "Ht"), ("AHt",)),
+        S("luc_w", _luc_body(rule.update_w, lambda v: v),
+          ("HHt", "AHt", "W", "state"), ("W", "state")),
+        S("gram_h", ops.gram, ("W",), ("WtW",)),
+        S("mm_h", ops.mm_t, ("A", "W"), ("WtAt",)),
+        S("luc_h", _luc_body(rule.update_h, lambda v: v),
+          ("WtW", "WtAt", "Ht", "state"), ("Ht", "state")),
+        S("error", _err_body(ops.gram, lambda v: v),
+          ("normA", "WtAt", "Ht", "WtW"), ("sq",)),
+    ]
+
+
+_BUILDERS = {"serial": _serial_segments, "faun": _faun_segments,
+             "naive": _naive_segments, "gspmd": _gspmd_segments}
+
+_SEGMENT_CACHE: dict = {}
+_SEGMENT_CACHE_MAX = 64
+
+
+def _cached_segments(sched) -> list[_Segment]:
+    key = ("profile", sched.cache_key())
+    try:
+        segs = _SEGMENT_CACHE.get(key)
+    except TypeError:                      # unhashable layout — build fresh
+        return _BUILDERS[sched.name](sched)
+    if segs is None:
+        if len(_SEGMENT_CACHE) >= _SEGMENT_CACHE_MAX:
+            _SEGMENT_CACHE.clear()
+        segs = _BUILDERS[sched.name](sched)
+        _SEGMENT_CACHE[key] = segs
+    return segs
+
+
+def _init_env(sched, Arep, W, Ht, normA_sq, state) -> dict:
+    env = {"W": W, "Ht": Ht, "normA": normA_sq, "state": state}
+    if sched.name == "naive":
+        env["Arow"], env["Acol"] = Arep
+    else:
+        env["A"] = Arep
+    return env
+
+
+def _run_chain(segs, env, times=None, tracer=None, iteration=0) -> dict:
+    """One iteration: run every segment, device-synced, into ``env``."""
+    for seg in segs:
+        t0 = time.perf_counter()
+        out = seg.fn(*(env[k] for k in seg.in_keys))
+        out = jax.block_until_ready(out)
+        t1 = time.perf_counter()
+        if len(seg.out_keys) == 1:
+            out = (out,)
+        env.update(zip(seg.out_keys, out))
+        if times is not None:
+            times[seg.phase] = times.get(seg.phase, 0.0) + (t1 - t0)
+        if tracer is not None:
+            tracer.record(f"phase.{seg.phase}", t0, t1,
+                          (("iteration", iteration),))
+    return env
+
+
+def run_profiled(sched, Arep, W, Ht, normA_sq, state0, crit, tracer=None):
+    """Profiled fit loop: same stopping semantics as the compiled drivers
+    (max_iters bound, tol / stall checked between iterations — on host,
+    which the segmented loop already round-trips through).
+
+    Returns ``(W, Ht, rels, iters_run, state, phase_times)`` with
+    ``phase_times`` the per-iteration MEAN seconds per phase.  The first
+    pass over the chain runs against the initial factors with its timings
+    discarded (that is where compilation lands) and is then re-run timed
+    from the same inputs — segments are pure, so the warm-up costs one
+    iteration of extra compute and zero numeric drift.
+    """
+    segs = _cached_segments(sched)
+    env = _init_env(sched, Arep, W, Ht, normA_sq, state0)
+    _run_chain(segs, dict(env))            # compile pass: discard outputs
+
+    times: dict[str, float] = {}
+    rels: list[float] = []
+    normA = float(jax.device_get(normA_sq))
+    best, stall = math.inf, 0
+    iters_run = 0
+    for it in range(crit.max_iters):
+        if tracer is not None:
+            t_it = time.perf_counter()
+        env = _run_chain(segs, env, times=times, tracer=tracer, iteration=it)
+        if tracer is not None:
+            tracer.record("phase.iteration", t_it, time.perf_counter(),
+                          (("iteration", it),))
+        sq = float(jax.device_get(env["sq"]))
+        rel = math.sqrt(max(sq, 0.0) / normA)
+        rels.append(rel)
+        iters_run = it + 1
+        if crit.tol is not None and rel <= crit.tol:
+            break
+        if crit.stall_iters:
+            stall = 0 if rel < best - crit.stall_tol else stall + 1
+            if stall >= crit.stall_iters:
+                break
+        best = min(best, rel)
+    phase_times = {k: v / iters_run for k, v in times.items()}
+    return (env["W"], env["Ht"], np.asarray(rels, np.float32), iters_run,
+            env["state"], phase_times)

@@ -1,0 +1,107 @@
+"""Measured-vs-predicted phase breakdown — the paper-Fig-7 analog.
+
+Joins the segmented timings of ``NMFSolver.fit(profile=True)``
+(``extras["phase_times"]``, seconds per iteration per phase) against the
+α-β-γ model's per-group predictions (``costmodel.schedule_cost_terms``)
+on the shared group key gram / mm / luc / comm / error.  The ratio column
+(measured / predicted) is the deliverable: it exposes exactly where the
+model is wrong on real hardware, which is the protocol the ROADMAP's
+TPU-validation items need — run it on a TPU slice with
+``machine=Machine(<TPU α, β, γ>)`` and read the ratios.
+
+    from repro.obs.report import breakdown_report, format_report
+    rows = breakdown_report(solver, result, m, n)
+    print(format_report(rows))
+
+``python -m repro.obs.report`` runs all four schedules on a small
+synthetic problem and prints one table per schedule (every cell filled —
+serial simply has no comm row to print).
+"""
+
+from __future__ import annotations
+
+from repro.obs.phases import phase_group
+
+
+def merge_phase_times(phase_times: dict) -> dict:
+    """Collapse measured per-phase seconds onto the cost-model groups
+    (gram / mm / luc / comm / error; see ``phases.phase_group``)."""
+    out: dict[str, float] = {}
+    for phase, sec in phase_times.items():
+        g = phase_group(phase)
+        out[g] = out.get(g, 0.0) + sec
+    return out
+
+
+def breakdown_report(solver, result, m: int, n: int, *, nnz: float = 0.0,
+                     machine=None) -> list[dict]:
+    """Rows of {group, measured_s, predicted_s, ratio} joining a profiled
+    fit against the solver's cost-model terms.
+
+    Only groups the schedule actually measures appear (serial has no comm
+    phases, so no comm row), which keeps every printed cell populated:
+    ``ratio`` is measured/predicted, or the string ``"n/a"`` when the
+    model predicts exactly zero for a measured group.
+    """
+    phase_times = result.extras.get("phase_times")
+    if phase_times is None:
+        raise ValueError("result has no phase_times — run "
+                         "solver.fit(A, profile=True)")
+    measured = merge_phase_times(phase_times)
+    predicted = solver.predict_cost_terms(m, n, nnz=nnz, machine=machine)
+    rows = []
+    for group in ("gram", "mm", "luc", "comm", "error"):
+        if group not in measured:
+            continue
+        meas, pred = measured[group], predicted.get(group, 0.0)
+        ratio = meas / pred if pred > 0 else "n/a"
+        rows.append({"group": group, "measured_s": meas,
+                     "predicted_s": pred, "ratio": ratio})
+    return rows
+
+
+def format_report(rows: list[dict], *, title: str = "") -> str:
+    """Fixed-width table of a ``breakdown_report`` result."""
+    lines = []
+    if title:
+        lines.append(title)
+    lines.append(f"{'phase':<8} {'measured_s':>12} {'predicted_s':>12} "
+                 f"{'ratio':>10}")
+    for r in rows:
+        ratio = r["ratio"]
+        ratio_s = ratio if isinstance(ratio, str) else f"{ratio:10.2f}"
+        lines.append(f"{r['group']:<8} {r['measured_s']:>12.3e} "
+                     f"{r['predicted_s']:>12.3e} {ratio_s:>10}")
+    return "\n".join(lines)
+
+
+def run_all_schedules(m: int = 96, n: int = 64, k: int = 8, *,
+                      iters: int = 3, algo: str = "mu",
+                      backend: str = "dense") -> dict[str, list[dict]]:
+    """Profile every schedule on one synthetic problem; returns
+    {schedule: breakdown rows}.  Small by design — this is the smoke-size
+    protocol; real measurements scale m/n and swap in hardware α-β-γ."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.engine import NMFSolver
+
+    key = jax.random.PRNGKey(0)
+    A = jax.random.uniform(key, (m, n), jnp.float32)
+    out = {}
+    for schedule in ("serial", "faun", "naive", "gspmd"):
+        solver = NMFSolver(k, algo=algo, schedule=schedule, backend=backend,
+                           max_iters=iters)
+        res = solver.fit(A, profile=True)
+        out[schedule] = breakdown_report(solver, res, m, n)
+    return out
+
+
+def main() -> None:
+    reports = run_all_schedules()
+    for schedule, rows in reports.items():
+        print(format_report(rows, title=f"-- {schedule} --"))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -41,7 +41,6 @@ from __future__ import annotations
 
 import threading
 from collections import Counter
-from dataclasses import dataclass, field
 from typing import Any, NamedTuple
 
 import jax.numpy as jnp
@@ -49,11 +48,16 @@ import numpy as np
 
 from repro.core import rules as _rules
 from repro.core.engine import NMFSolver
+from repro.obs.log import get_logger, log_event
+from repro.obs.metrics import default_registry, next_instance_label
+from repro.obs.trace import span as _span
 from repro.online.drift import DriftAccumulator, block_slices
 from repro.serve.artifact import FactorArtifact, _gram_fp32
 from repro.serve.batcher import MicroBatcher
 from repro.serve.foldin import FoldInProjector
 from repro.serve.topk import TopK
+
+_log = get_logger("online.service")
 
 
 class ServeResult(NamedTuple):
@@ -73,20 +77,103 @@ class IngestReport(NamedTuple):
     rel_err: float | None       # final rel error ("refactor" only)
 
 
-@dataclass
 class OnlineStats:
-    """Counters of the loop's life so far.  ``stale_queries`` counts
-    responses whose version stamp was already superseded at delivery —
-    the measured staleness of the serve path."""
-    ingested_rows: int = 0
-    batches: int = 0
-    publishes: int = 0
-    extends: int = 0
-    block_refreshes: int = 0
-    full_refactors: int = 0
-    queries: int = 0
-    stale_queries: int = 0
-    served_by_version: Counter = field(default_factory=Counter)
+    """Counters of the loop's life so far, as a live view over registry
+    series (``repro.obs.metrics``) under one process-unique ``instance``
+    label — the old attribute API (``ingested_rows``, ``publishes``,
+    ``served_by_version``, ...) reads straight through to them, and a
+    Prometheus scrape of the registry sees every live service at once:
+
+        online_ingested_rows_total / online_ingest_batches_total
+        online_publishes_total
+        online_publish_decisions_total{decision=extend|refresh|refactor}
+        online_queries_total / online_stale_queries_total
+        online_served_total{version=...}
+
+    ``stale_queries`` counts responses whose version stamp was already
+    superseded at delivery — the measured staleness of the serve path.
+    ``served_by_version`` stays a ``collections.Counter`` (tests index it)
+    mirrored into the per-version labelled counters."""
+
+    _DECISIONS = ("extend", "refresh", "refactor")
+
+    def __init__(self, registry=None):
+        self._reg = registry or default_registry()
+        self._labels = {"instance": next_instance_label()}
+        c = lambda name, **kw: self._reg.counter(
+            name, labels=dict(self._labels, **kw.pop("extra", {})), **kw)
+        self._ingested = c("online_ingested_rows_total",
+                           help="Rows absorbed into the accumulated matrix")
+        self._batches = c("online_ingest_batches_total",
+                          help="Ingest batches processed")
+        self._publishes = c("online_publishes_total",
+                            help="Artifact versions published")
+        self._decisions = {d: c("online_publish_decisions_total",
+                                extra={"decision": d},
+                                help="Publishes by drift-ladder decision")
+                           for d in self._DECISIONS}
+        self._queries = c("online_queries_total",
+                          help="Rows served (projected or retrieved)")
+        self._stale = c("online_stale_queries_total",
+                        help="Served rows stamped with a superseded version")
+        self._lock = threading.Lock()
+        self.served_by_version: Counter = Counter()
+
+    # -- recorders (thread-safe) --------------------------------------------
+
+    def record_ingest(self, rows: int) -> None:
+        self._ingested.inc(rows)
+        self._batches.inc()
+
+    def record_decision(self, action: str) -> None:
+        self._decisions[action].inc()
+
+    def record_publish(self) -> None:
+        self._publishes.inc()
+
+    def record_serve(self, n: int, version: int, stale: bool) -> None:
+        self._queries.inc(n)
+        if stale:
+            self._stale.inc(n)
+        self._reg.counter("online_served_total",
+                          labels=dict(self._labels, version=str(version)),
+                          help="Served rows by artifact version").inc(n)
+        with self._lock:
+            self.served_by_version[version] += n
+
+    # -- the legacy attribute API, as counter reads -------------------------
+
+    @property
+    def ingested_rows(self) -> int:
+        return int(self._ingested.value)
+
+    @property
+    def batches(self) -> int:
+        return int(self._batches.value)
+
+    @property
+    def publishes(self) -> int:
+        return int(self._publishes.value)
+
+    @property
+    def extends(self) -> int:
+        return int(self._decisions["extend"].value)
+
+    @property
+    def block_refreshes(self) -> int:
+        return int(self._decisions["refresh"].value)
+
+    @property
+    def full_refactors(self) -> int:
+        return int(self._decisions["refactor"].value)
+
+    @property
+    def queries(self) -> int:
+        return int(self._queries.value)
+
+    @property
+    def stale_queries(self) -> int:
+        return int(self._stale.value)
 
     @property
     def staleness(self) -> float:
@@ -130,7 +217,8 @@ class OnlineNMF:
                  full_threshold: float = 2.0, refresh_sweeps: int = 1,
                  mesh=None, max_batch: int = 256, iters: int = 100,
                  max_delay_s: float = 2e-3, metric: str = "cosine",
-                 chunk: int | None = None, warmup_on_publish: bool = False):
+                 chunk: int | None = None, warmup_on_publish: bool = False,
+                 registry=None):
         A0 = self._densify(A0)
         if solver is None:
             if k is None:
@@ -163,14 +251,14 @@ class OnlineNMF:
                                       full_threshold=full_threshold)
         self._col_slices = block_slices(self.n, self.drift.n_blocks)
 
-        self.stats = OnlineStats()
-        self._stats_lock = threading.Lock()
+        self.stats = OnlineStats(registry)
         self._serve_lock = threading.Lock()
         art = FactorArtifact.from_result(result)      # lineage root: v0
         self.artifact, self._projector, self._topk = self._build(art)
         self._latest_version = art.version
         self.batcher = MicroBatcher(self._make_project(), max_batch=max_batch,
-                                    max_delay_s=max_delay_s)
+                                    max_delay_s=max_delay_s,
+                                    registry=registry)
 
     # -- helpers -------------------------------------------------------------
 
@@ -210,25 +298,21 @@ class OnlineNMF:
         return project
 
     def _record_serve(self, n: int, version: int) -> None:
-        stale = self._latest_version > version
-        with self._stats_lock:
-            self.stats.queries += n
-            self.stats.served_by_version[version] += n
-            if stale:
-                self.stats.stale_queries += n
+        self.stats.record_serve(n, version, self._latest_version > version)
 
     def _publish(self, artifact: FactorArtifact) -> None:
         """Build + (optionally) warm the new serving state OFF the request
         path, then swap atomically: the batcher retargets at a batch
         boundary, retrieve() snapshots under the lock."""
-        art, proj, topk = self._build(artifact)
-        with self._serve_lock:
-            self.artifact, self._projector, self._topk = art, proj, topk
-            self._latest_version = art.version
-            project = self._make_project()
-        self.batcher.swap(project)
-        with self._stats_lock:
-            self.stats.publishes += 1
+        with _span("online.publish", version=artifact.version):
+            art, proj, topk = self._build(artifact)
+            with self._serve_lock:
+                self.artifact, self._projector, self._topk = art, proj, topk
+                self._latest_version = art.version
+                project = self._make_project()
+            with _span("online.swap", version=art.version):
+                self.batcher.swap(project)
+        self.stats.record_publish()
 
     # -- observable state ----------------------------------------------------
 
@@ -272,42 +356,45 @@ class OnlineNMF:
         # Sparse batches fold sparse; the dense copy only feeds the store
         # and the drift residual.
         fold_input = rows if hasattr(rows, "todense") else dense
-        X = np.asarray(self._projector.project(fold_input), np.float32)
-        self.drift.observe(dense, X, self._H)
-        self._A = np.vstack([self._A, dense])
-        self._W = np.vstack([self._W, X])
-        with self._stats_lock:
-            self.stats.ingested_rows += b
-            self.stats.batches += 1
+        with _span("online.ingest", rows=b):
+            with _span("online.fold_in", rows=b):
+                X = np.asarray(self._projector.project(fold_input),
+                               np.float32)
+            with _span("online.drift"):
+                self.drift.observe(dense, X, self._H)
+            self._A = np.vstack([self._A, dense])
+            self._W = np.vstack([self._W, X])
+            self.stats.record_ingest(b)
 
-        rel = None
-        touched_idx: tuple = ()
-        if self.drift.should_refactor():
-            rel = self._refactor()
-            art = self.artifact.evolve(W=self._W, H=self._H,
-                                       rows_absorbed=b, refresh="full",
-                                       rel_error=rel)
-            action = "refactor"
-            with self._stats_lock:
-                self.stats.full_refactors += 1
-        elif (touched := self.drift.touched()).any():
-            touched_idx = tuple(int(i) for i in np.nonzero(touched)[0])
-            self._partial_refresh(touched)
-            art = self.artifact.evolve(W=self._W, H=self._H,
-                                       rows_absorbed=b, refresh="blocks")
-            self.drift.reset(touched)
-            action = "refresh"
-            with self._stats_lock:
-                self.stats.block_refreshes += 1
-        else:
-            # W grew by the fold-in codes; H (hence the Gram) is untouched
-            # — evolve() reuses it, so this publish does no numeric work.
-            art = self.artifact.evolve(W=self._W, rows_absorbed=b,
-                                       refresh="extend")
-            action = "extend"
-            with self._stats_lock:
-                self.stats.extends += 1
-        self._publish(art)
+            rel = None
+            touched_idx: tuple = ()
+            if self.drift.should_refactor():
+                with _span("online.refactor"):
+                    rel = self._refactor()
+                art = self.artifact.evolve(W=self._W, H=self._H,
+                                           rows_absorbed=b, refresh="full",
+                                           rel_error=rel)
+                action = "refactor"
+            elif (touched := self.drift.touched()).any():
+                touched_idx = tuple(int(i) for i in np.nonzero(touched)[0])
+                with _span("online.refresh", blocks=len(touched_idx)):
+                    self._partial_refresh(touched)
+                art = self.artifact.evolve(W=self._W, H=self._H,
+                                           rows_absorbed=b, refresh="blocks")
+                self.drift.reset(touched)
+                action = "refresh"
+            else:
+                # W grew by the fold-in codes; H (hence the Gram) is
+                # untouched — evolve() reuses it, so this publish does no
+                # numeric work.
+                art = self.artifact.evolve(W=self._W, rows_absorbed=b,
+                                           refresh="extend")
+                action = "extend"
+            self.stats.record_decision(action)
+            self._publish(art)
+        log_event(_log, "publish", version=art.version,
+                  parent_version=art.parent_version, decision=action,
+                  rows=b, drift_total=round(self.drift.total, 6))
         return IngestReport(action=action, version=art.version, rows=b,
                             touched_blocks=touched_idx,
                             drift_total=self.drift.total, rel_err=rel)

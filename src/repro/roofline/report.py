@@ -5,6 +5,15 @@ MODEL_FLOPS = 6·N·D (dense) /
 
   PYTHONPATH=src python -m repro.roofline.report            # print tables
   PYTHONPATH=src python -m repro.roofline.report --write    # update file
+
+This module covers the LM dry-run tables only.  The NMF-side breakdowns
+live elsewhere: ``repro.roofline.hlo`` counts communicated words in the
+compiled iteration HLO (model-vs-compiler), and the MEASURED per-phase
+protocol is ``NMFSolver.fit(profile=True)`` joined against
+``costmodel.schedule_cost_terms`` by ``repro.obs.report``
+(``python -m repro.obs.report``; CSV via ``benchmarks.run
+phase_breakdown``) — measured-vs-predicted per Gram / MM / LUC /
+collective phase, the paper-Fig-7 analog.
 """
 
 from __future__ import annotations

@@ -37,27 +37,93 @@ while the worker is still draining the queue the swap is accepted and the
 remaining batches run the new projector; it is rejected only once the
 worker has actually exited.  Either way every pending future is delivered
 against a definite projector — never dropped, never deadlocked.
+
+Metrics contract (``repro.obs.metrics``): every batcher registers its
+series in a ``MetricsRegistry`` — the process default, or an injected
+``registry=`` — under a process-unique ``instance`` label, so concurrent
+batchers never mix counts while one Prometheus scrape sees them all:
+
+    serve_batcher_requests_total{instance=...}   counter
+    serve_batcher_batches_total{instance=...}    counter
+    serve_batcher_batch_size{instance=...}       histogram (power-of-2)
+    serve_batcher_batch_latency_s{instance=...}  histogram (per-batch project)
+
+``MicroBatcher.stats`` (a ``BatcherStats``) is a live VIEW over those
+instruments: bounded memory no matter how long the batcher serves
+(``batch_sizes`` is a capped recent window; the full distribution lives
+in the histogram buckets).  The worker also emits ``batcher.*`` spans
+into the default tracer (``repro.obs.trace``) when tracing is enabled.
 """
 
 from __future__ import annotations
 
+import collections
 import queue
 import threading
 import time
 from concurrent.futures import Future, InvalidStateError
-from dataclasses import dataclass, field
 from typing import Any, Callable
 
 import numpy as np
 
+from repro.obs.metrics import (SIZE_BUCKETS, default_registry,
+                               next_instance_label)
+from repro.obs.trace import span as _span
+
 _STOP = object()
 
 
-@dataclass
 class BatcherStats:
-    requests: int = 0
-    batches: int = 0
-    batch_sizes: list = field(default_factory=list)
+    """Live view over one batcher's registry series (keeps the old
+    attribute API: ``requests``, ``batches``, ``batch_sizes``,
+    ``mean_batch``, ``max_batch_seen``).
+
+    ``batch_sizes`` is a capped recent window (last ``RECENT_WINDOW``
+    batches) — the compat spelling of what used to be an unbounded
+    per-batch list; the full distribution is in the
+    ``serve_batcher_batch_size`` histogram.
+    """
+
+    RECENT_WINDOW = 256
+
+    def __init__(self, registry=None):
+        reg = registry or default_registry()
+        labels = {"instance": next_instance_label()}
+        self._requests = reg.counter(
+            "serve_batcher_requests_total", labels=labels,
+            help="Fold-in requests submitted to the microbatcher")
+        self._batches = reg.counter(
+            "serve_batcher_batches_total", labels=labels,
+            help="Coalesced batches dispatched to the projector")
+        self._sizes = reg.histogram(
+            "serve_batcher_batch_size", buckets=SIZE_BUCKETS, labels=labels,
+            help="Requests per coalesced batch")
+        self._latency = reg.histogram(
+            "serve_batcher_batch_latency_s", labels=labels,
+            help="Seconds spent projecting one coalesced batch")
+        self._recent: collections.deque = collections.deque(
+            maxlen=self.RECENT_WINDOW)
+
+    def record_batch(self, size: int, latency_s: float | None = None) -> None:
+        self._requests.inc(size)
+        self._batches.inc()
+        self._sizes.observe(size)
+        if latency_s is not None:
+            self._latency.observe(latency_s)
+        self._recent.append(size)
+
+    @property
+    def requests(self) -> int:
+        return int(self._requests.value)
+
+    @property
+    def batches(self) -> int:
+        return int(self._batches.value)
+
+    @property
+    def batch_sizes(self) -> list:
+        """Sizes of the most recent batches (capped window)."""
+        return list(self._recent)
 
     @property
     def mean_batch(self) -> float:
@@ -65,7 +131,8 @@ class BatcherStats:
 
     @property
     def max_batch_seen(self) -> int:
-        return max(self.batch_sizes, default=0)
+        m = self._sizes.max
+        return 0 if self._sizes.count == 0 else int(m)
 
 
 def _deliver(fut: Future, *, result=None, exc: BaseException | None = None):
@@ -86,14 +153,15 @@ class MicroBatcher:
 
     def __init__(self, project: Callable[[Any], Any], *, max_batch: int = 64,
                  max_delay_s: float = 2e-3,
-                 stack: Callable[[list], Any] | None = None):
+                 stack: Callable[[list], Any] | None = None,
+                 registry=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.project = project
         self.max_batch = max_batch
         self.max_delay_s = max_delay_s
         self.stack = stack or (lambda rows: np.stack(rows))
-        self.stats = BatcherStats()
+        self.stats = BatcherStats(registry)
         self._q: "queue.Queue" = queue.Queue()
         self._closed = False
         # serialises the closed-check-then-enqueue against close(): without
@@ -109,12 +177,14 @@ class MicroBatcher:
     def submit(self, row) -> Future:
         """Enqueue one request; resolves to the request's own result row."""
         fut: Future = Future()
-        with self._lock:
-            if self._closed:
-                raise RuntimeError("MicroBatcher is closed")
-            # enqueued under the lock ⇒ strictly before close()'s sentinel,
-            # so the FIFO worker always processes it before exiting
-            self._q.put((row, fut))
+        with _span("batcher.enqueue"):
+            with self._lock:
+                if self._closed:
+                    raise RuntimeError("MicroBatcher is closed")
+                # enqueued under the lock ⇒ strictly before close()'s
+                # sentinel, so the FIFO worker always processes it before
+                # exiting
+                self._q.put((row, fut))
         return fut
 
     def swap(self, projector) -> None:
@@ -185,7 +255,8 @@ class MicroBatcher:
 
     def _run(self) -> None:
         while True:
-            batch = self._collect()
+            with _span("batcher.coalesce"):
+                batch = self._collect()
             if batch is None:
                 return
             rows = [r for r, _ in batch]
@@ -193,8 +264,10 @@ class MicroBatcher:
             # Sample the projection target ONCE per batch: a concurrent
             # swap() lands cleanly on the next batch boundary.
             project = self.project
+            t0 = time.perf_counter()
             try:
-                out = project(self.stack(rows))
+                with _span("batcher.project", batch=len(batch)):
+                    out = project(self.stack(rows))
                 # Arrays deliver per-row; a list/tuple delivers per-ITEM
                 # payloads verbatim (e.g. version-stamped results from
                 # repro.online — one (code, version) record per request).
@@ -209,8 +282,8 @@ class MicroBatcher:
                     _deliver(f, exc=e)
                 continue
             finally:
-                self.stats.requests += len(batch)
-                self.stats.batches += 1
-                self.stats.batch_sizes.append(len(batch))
-            for i, f in enumerate(futs):
-                _deliver(f, result=out[i])
+                self.stats.record_batch(len(batch),
+                                        time.perf_counter() - t0)
+            with _span("batcher.deliver", batch=len(batch)):
+                for i, f in enumerate(futs):
+                    _deliver(f, result=out[i])

@@ -55,12 +55,16 @@ all-zero, which every fold rule maps to x = 0 (sliced off before return).
 
 from __future__ import annotations
 
+import time as _time
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro import backends as _backends
+from repro.obs.metrics import default_registry as _default_registry
+from repro.obs.trace import span as _span
 from repro.backends.sparse import SparseOps, _is_bcoo
 from repro.core import blocksparse, rules as _rules
 from repro.serve.artifact import FactorArtifact, _gram_fp32
@@ -287,7 +291,25 @@ class FoldInProjector:
 
     def project(self, rows) -> jax.Array:
         """Latent codes (b, k) fp32 for a (b, n) batch of rows — a dense
-        array (jax/numpy) or a sparse BCOO / 1×1-grid BlockCOO."""
+        array (jax/numpy) or a sparse BCOO / 1×1-grid BlockCOO.
+
+        Instrumented (``repro.obs``): counts rows into the process
+        registry's ``serve_foldin_rows_total``, observes dispatch latency
+        in ``serve_foldin_project_latency_s`` (dispatch, not
+        block-until-ready — the async-friendly measure), and emits a
+        ``foldin.project`` span when the default tracer is enabled."""
+        t0 = _time.perf_counter()
+        with _span("foldin.project"):
+            out = self._project(rows)
+        reg = _default_registry()
+        reg.counter("serve_foldin_rows_total",
+                    help="Rows folded into the latent space").inc(len(out))
+        reg.histogram("serve_foldin_project_latency_s",
+                      help="Fold-in dispatch seconds per batch").observe(
+            _time.perf_counter() - t0)
+        return out
+
+    def _project(self, rows) -> jax.Array:
         if _is_bcoo(rows):
             return self._project_bcoo(rows.shape, np.asarray(rows.indices),
                                       np.asarray(rows.data))

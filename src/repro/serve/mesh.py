@@ -122,15 +122,27 @@ class MeshServer:
         publisher racing a redeploy must never roll a server back to stale
         factors.  (Equal versions pass: artifacts published outside a
         lineage all carry version 0.)"""
-        art, proj, topk = self._build(artifact)
-        if art.version < self.artifact.version:
-            raise ValueError(
-                f"stale swap: artifact version {art.version} < served "
-                f"version {self.artifact.version}; an online lineage only "
-                f"moves forward")
-        self.batcher.swap(proj.project)
-        with self._lock:
-            self.artifact, self.projector, self.topk = art, proj, topk
+        from repro.obs.log import get_logger, log_event
+        from repro.obs.trace import span as _span
+        log = get_logger("serve.mesh")
+        with _span("mesh.swap"):
+            art, proj, topk = self._build(artifact)
+            if art.version < self.artifact.version:
+                # surfaced to operators, not just the raising caller — a
+                # refused rollback is exactly the event someone pages on
+                log_event(log, "swap_refused",
+                          served_version=self.artifact.version,
+                          offered_version=art.version,
+                          offered_parent=art.parent_version)
+                raise ValueError(
+                    f"stale swap: artifact version {art.version} < served "
+                    f"version {self.artifact.version}; an online lineage "
+                    f"only moves forward")
+            self.batcher.swap(proj.project)
+            with self._lock:
+                self.artifact, self.projector, self.topk = art, proj, topk
+        log_event(log, "swap", version=art.version,
+                  parent_version=art.parent_version, rows=art.shape[0])
 
     def close(self) -> None:
         self.batcher.close()

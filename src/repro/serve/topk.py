@@ -329,7 +329,19 @@ class TopK:
         self.row_norms = norms if metric == "cosine" else None
 
     def query(self, latent_codes, *, k: int = 10):
-        return topk_rows(self.W, latent_codes, k=k, gram=self.gram,
-                         metric=self.metric, chunk=self.chunk,
-                         row_norms=self.row_norms, mesh=self.mesh,
-                         merge=self.merge, valid_rows=self.valid_rows)
+        import time as _time
+        from repro.obs.metrics import default_registry as _default_registry
+        from repro.obs.trace import span as _span
+        t0 = _time.perf_counter()
+        with _span("topk.query", k=k):
+            out = topk_rows(self.W, latent_codes, k=k, gram=self.gram,
+                            metric=self.metric, chunk=self.chunk,
+                            row_norms=self.row_norms, mesh=self.mesh,
+                            merge=self.merge, valid_rows=self.valid_rows)
+        reg = _default_registry()
+        reg.counter("serve_topk_queries_total",
+                    help="Top-k retrieval calls").inc()
+        reg.histogram("serve_topk_query_latency_s",
+                      help="Top-k dispatch seconds per call").observe(
+            _time.perf_counter() - t0)
+        return out

@@ -21,6 +21,7 @@ PAGES = {
     "algorithms.md": "custom rule rel err:",
     "backends.md": "final rel err:",
     "distributed.md": "compressed rel err:",
+    "observability.md": "phase profile:",
     "online.md": "streaming rel err:",
     "serving.md": "sharded parity:",
 }

@@ -1,0 +1,337 @@
+"""The observability layer (ISSUE 9): metrics registry, tracing, and the
+segmented phase profiler.
+
+The load-bearing checks:
+  * registry correctness under concurrent writers (the batcher worker +
+    client threads + the ingest thread all write at once in production);
+  * Prometheus text exposition — golden-format, because a scraper either
+    parses it or it is useless;
+  * ``fit(profile=True)`` — phase keys cover Gram/MM/NLS + every explicit
+    collective per schedule, the phase seconds are consistent with the
+    profiled fit's own wall-clock, and the numbers join against the cost
+    model with no missing cells on all four schedules;
+  * the stats views (``BatcherStats``, ``OnlineStats``) keep the legacy
+    attribute API while storing bounded state.
+"""
+
+import json
+import logging
+import math
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.engine import NMFSolver
+from repro.obs.log import get_logger, log_event
+from repro.obs.metrics import (LATENCY_BUCKETS_S, MetricsRegistry,
+                               default_registry)
+from repro.obs.phases import expected_phases, phase_group
+from repro.obs.report import breakdown_report, format_report
+from repro.obs.trace import Tracer
+from repro.serve.batcher import BatcherStats, MicroBatcher
+
+SCHEDULES = ("serial", "faun", "naive", "gspmd")
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+class TestMetricsRegistry:
+    def test_counter_gauge_histogram_basics(self):
+        reg = MetricsRegistry()
+        c = reg.counter("c_total")
+        c.inc()
+        c.inc(3)
+        assert c.value == 4
+        with pytest.raises(ValueError):
+            c.inc(-1)
+        g = reg.gauge("g")
+        g.set(7)
+        g.inc(-2)
+        assert g.value == 5
+        h = reg.histogram("h_s", buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 5.0):
+            h.observe(v)
+        assert h.count == 3 and h.counts == (1, 1, 1)
+        assert h.max == 5.0 and abs(h.mean - 5.55 / 3) < 1e-12
+        assert h.quantile(0.5) == 1.0          # bucket upper bound
+
+    def test_get_or_create_is_idempotent_and_kind_checked(self):
+        reg = MetricsRegistry()
+        assert reg.counter("x") is reg.counter("x")
+        assert reg.counter("x", labels={"a": "1"}) is not reg.counter("x")
+        with pytest.raises(TypeError):
+            reg.gauge("x")
+
+    def test_thread_safety_four_writers(self):
+        reg = MetricsRegistry()
+        c = reg.counter("writes_total")
+        h = reg.histogram("vals", buckets=(0.5,))
+        N, THREADS = 5_000, 4
+
+        def writer(tid):
+            for i in range(N):
+                c.inc()
+                h.observe(i % 2)               # alternates the two buckets
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(THREADS)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert c.value == N * THREADS
+        assert h.count == N * THREADS
+        assert sum(h.counts) == N * THREADS    # no lost bucket increments
+
+    def test_prometheus_exposition_golden(self):
+        reg = MetricsRegistry()
+        reg.counter("req_total", labels={"instance": "0"},
+                    help="requests").inc(3)
+        h = reg.histogram("lat_s", buckets=(0.1, 1.0), help="latency")
+        h.observe(0.05)
+        h.observe(0.5)
+        h.observe(7.0)
+        expected = (
+            "# HELP req_total requests\n"
+            "# TYPE req_total counter\n"
+            'req_total{instance="0"} 3\n'
+            "# HELP lat_s latency\n"
+            "# TYPE lat_s histogram\n"
+            'lat_s_bucket{le="0.1"} 1\n'
+            'lat_s_bucket{le="1"} 2\n'
+            'lat_s_bucket{le="+Inf"} 3\n'
+            "lat_s_sum 7.55\n"
+            "lat_s_count 3\n")
+        assert reg.to_prometheus() == expected
+
+    def test_snapshot_and_jsonl_export(self, tmp_path):
+        reg = MetricsRegistry()
+        reg.counter("a_total").inc(2)
+        reg.histogram("b_s", buckets=(1.0,)).observe(0.5)
+        path = tmp_path / "metrics.jsonl"
+        reg.export_jsonl(str(path))
+        reg.export_jsonl(str(path))            # appends
+        lines = path.read_text().splitlines()
+        assert len(lines) == 2
+        rec = json.loads(lines[-1])
+        assert rec["metrics"]["a_total"] == 2
+        assert rec["metrics"]["b_s"]["count"] == 1
+
+    def test_default_registry_is_a_process_singleton(self):
+        assert default_registry() is default_registry()
+
+
+# ---------------------------------------------------------------------------
+# Tracing
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_span_nesting_and_export_round_trip(self, tmp_path):
+        tr = Tracer()
+        with tr.span("outer", batch=4):
+            with tr.span("inner"):
+                time.sleep(0.002)
+        spans = {e.name: e for e in tr.spans()}
+        assert set(spans) == {"outer", "inner"}
+        inner, outer = spans["inner"], spans["outer"]
+        # containment: inner starts after outer and ends before it —
+        # exactly what makes Perfetto stack them as parent/child
+        assert outer.ts_us <= inner.ts_us
+        assert inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us + 1
+        assert dict(outer.args)["batch"] == 4
+
+        path = tmp_path / "trace.json"
+        tr.export(str(path))
+        doc = json.loads(path.read_text())
+        assert sorted(e["name"] for e in doc["traceEvents"]) == [
+            "inner", "outer"]
+        ev = doc["traceEvents"][0]
+        assert ev["ph"] == "X" and ev["dur"] > 0 and "pid" in ev
+
+    def test_disabled_tracer_is_free_and_records_nothing(self):
+        tr = Tracer(enabled=False)
+        with tr.span("nope"):
+            pass
+        tr.record("nope", 0.0, 1.0)
+        assert tr.spans() == []
+
+    def test_bounded_buffer_counts_drops(self):
+        tr = Tracer(max_events=2)
+        for i in range(5):
+            tr.record(f"s{i}", 0.0, 1.0)
+        assert len(tr.spans()) == 2 and tr.dropped == 3
+
+
+# ---------------------------------------------------------------------------
+# Structured logging shim
+# ---------------------------------------------------------------------------
+
+def test_log_event_renders_and_carries_fields(caplog):
+    log = get_logger("serve.test")
+    with caplog.at_level(logging.INFO, logger="repro.serve.test"):
+        msg = log_event(log, "swap_refused", served_version=3,
+                        offered_version=1, note="a b")
+    assert msg == 'swap_refused served_version=3 offered_version=1 note="a b"'
+    rec = caplog.records[-1]
+    assert rec.event == "swap_refused"
+    assert rec.fields["offered_version"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Phase profiling + measured-vs-predicted report
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.PRNGKey(20260808)
+    return jax.random.uniform(key, (96, 64), jnp.float32)
+
+
+class TestPhaseProfile:
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    def test_phase_keys_and_wall_clock_envelope(self, problem, schedule):
+        solver = NMFSolver(8, algo="mu", schedule=schedule, max_iters=3)
+        solver.fit(problem, profile=True)      # warm: compile all segments
+        t0 = time.perf_counter()
+        res = solver.fit(problem, profile=True)
+        wall = time.perf_counter() - t0
+        pt = res.extras["phase_times"]
+        assert set(pt) == set(expected_phases(schedule))
+        assert all(v >= 0 for v in pt.values())
+        total = sum(pt.values()) * res.iters
+        # the phases are timed segments OF the fit: their sum is bounded
+        # by the fit's own wall clock, and covers at least half of it
+        # (the other half is host loop + the untimed warm-up pass)
+        assert total <= wall
+        assert total >= wall / 2 or wall < 0.05
+
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    def test_profiled_matches_compiled_convergence(self, problem, schedule):
+        solver = NMFSolver(8, algo="hals", schedule=schedule, max_iters=4)
+        rels_p = solver.fit(problem, profile=True).rel_errors
+        rels_c = np.asarray(solver.fit(problem).rel_errors)
+        np.testing.assert_allclose(np.asarray(rels_p), rels_c,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_profile_adaptive_stopping(self, problem):
+        solver = NMFSolver(8, algo="mu", max_iters=50, tol=0.49)
+        res = solver.fit(problem, profile=True)
+        assert res.iters < 50 and res.extras["stopped_early"]
+        assert len(res.rel_errors) == res.iters
+
+    def test_profile_refuses_wire_format_knobs(self, problem):
+        s = NMFSolver(8, schedule="faun", panel_compression="int8")
+        with pytest.raises(ValueError, match="panel_compression"):
+            s.fit(problem, profile=True)
+
+    def test_profile_tracer_records_segments(self, problem):
+        tr = Tracer()
+        solver = NMFSolver(8, algo="mu", max_iters=2)
+        solver.fit(problem, profile=True, tracer=tr)
+        names = {e.name for e in tr.spans()}
+        assert "phase.gram_w" in names and "phase.iteration" in names
+
+    @pytest.mark.parametrize("schedule", SCHEDULES)
+    def test_report_joins_without_nan(self, problem, schedule):
+        solver = NMFSolver(8, algo="mu", schedule=schedule, max_iters=3)
+        res = solver.fit(problem, profile=True)
+        rows = breakdown_report(solver, res, *problem.shape)
+        groups = {r["group"] for r in rows}
+        assert {"gram", "mm", "luc", "error"} <= groups
+        if schedule in ("faun", "naive"):
+            assert "comm" in groups
+        for r in rows:
+            assert math.isfinite(r["measured_s"])
+            assert math.isfinite(r["predicted_s"])
+            if not isinstance(r["ratio"], str):
+                assert math.isfinite(r["ratio"])
+        table = format_report(rows, title=schedule)
+        assert "nan" not in table.lower()
+        assert len(table.splitlines()) == 1 + 1 + len(rows)
+
+    def test_phase_group_classification(self):
+        assert phase_group("gram_w") == "gram"
+        assert phase_group("allreduce_gram_h") == "comm"
+        assert phase_group("reduce_scatter_w") == "comm"
+        assert phase_group("allgather_h") == "comm"
+        assert phase_group("luc_h") == "luc"
+        assert phase_group("error") == "error"
+
+
+def test_cost_terms_partition_the_model_exactly():
+    mach = costmodel.Machine()
+    for schedule in SCHEDULES:
+        for pr, pc in ((1, 1), (2, 2), (4, 1)):
+            terms = costmodel.schedule_cost_terms(
+                schedule, 4096, 2048, 16, pr=pr, pc=pc, algo="mu",
+                machine=mach)
+            total = costmodel.schedule_cost(schedule, 4096, 2048, 16,
+                                            pr=pr, pc=pc, algo="mu")
+            part = (terms["gram"] + terms["mm"] + terms["luc"]
+                    + terms["comm"])
+            assert part == pytest.approx(total.time(mach), rel=1e-9), \
+                (schedule, pr, pc)
+            assert terms["error"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Stats views stay bounded and API-compatible
+# ---------------------------------------------------------------------------
+
+class TestBatcherStatsView:
+    def test_bounded_batch_sizes_window(self):
+        stats = BatcherStats(MetricsRegistry())
+        n = BatcherStats.RECENT_WINDOW + 50
+        for i in range(n):
+            stats.record_batch(1 + i % 4)
+        assert stats.batches == n
+        assert stats.requests == sum(1 + i % 4 for i in range(n))
+        assert len(stats.batch_sizes) == BatcherStats.RECENT_WINDOW
+        assert stats.max_batch_seen == 4
+        assert stats.mean_batch == pytest.approx(stats.requests / n)
+
+    def test_batcher_records_into_injected_registry(self):
+        reg = MetricsRegistry()
+        with MicroBatcher(lambda rows: np.asarray(rows) * 2.0, max_batch=4,
+                          registry=reg) as mb:
+            futs = [mb.submit(np.full((3,), float(i))) for i in range(8)]
+            for i, f in enumerate(futs):
+                np.testing.assert_allclose(f.result(), np.full((3,), 2.0 * i))
+        assert mb.stats.requests == 8
+        snap = reg.snapshot()
+        req_keys = [k for k in snap
+                    if k.startswith("serve_batcher_requests_total")]
+        assert len(req_keys) == 1 and snap[req_keys[0]] == 8
+        text = reg.to_prometheus()
+        assert "serve_batcher_batch_size_bucket" in text
+
+    def test_two_batchers_do_not_mix_series(self):
+        reg = MetricsRegistry()
+        a, b = BatcherStats(reg), BatcherStats(reg)
+        a.record_batch(5)
+        assert a.requests == 5 and b.requests == 0
+
+
+def test_foldin_and_topk_record_into_default_registry(problem):
+    from repro.serve.artifact import FactorArtifact
+    from repro.serve.foldin import FoldInProjector
+    from repro.serve.topk import TopK
+    res = NMFSolver(6, algo="bpp", max_iters=20).fit(problem)
+    art = FactorArtifact.from_result(res)
+    reg = default_registry()
+    rows0 = reg.counter("serve_foldin_rows_total").value
+    q0 = reg.counter("serve_topk_queries_total").value
+    proj = FoldInProjector(art, max_batch=8)
+    codes = proj.project(np.asarray(problem[:5]))
+    assert codes.shape == (5, 6)
+    TopK(art).query(codes, k=3)
+    assert reg.counter("serve_foldin_rows_total").value >= rows0 + 5
+    assert reg.counter("serve_topk_queries_total").value == q0 + 1
+    assert reg.histogram("serve_foldin_project_latency_s").count > 0
