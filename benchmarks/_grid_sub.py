@@ -1,10 +1,11 @@
 """Subprocess helper for bench_grid_sweep / bench_cost_table: needs fake
 devices, so it runs in its own process.  Prints CSV rows to stdout."""
 
-import os
 import sys
 
-os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={sys.argv[1]}"
+from repro.util import env
+
+env.force_host_device_count(int(sys.argv[1]))   # before any jax import
 
 import jax  # noqa: E402
 

@@ -15,10 +15,11 @@ Per mesh size p ∈ {1, 2, 4, 8}:
     arrival, so p99 includes coalescing + queueing under load.
 """
 
-import os
 import sys
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from repro.util import env
+
+env.force_host_device_count(8)   # before any jax import
 
 import threading  # noqa: E402
 import time  # noqa: E402

@@ -1,0 +1,116 @@
+"""Elastic checkpoint overhead vs segment length + restore latency.
+
+``segment_iters`` is the elastic runtime's one real knob: shorter
+segments bound crash loss tighter but cross the host-gather + write
+barrier more often.  This bench measures what the knob costs:
+
+  * wall-clock of an ElasticRunner fit at several segment lengths vs the
+    same solver's uninterrupted ``fit`` (overhead %), plus the measured
+    step-path blocking time per checkpoint (the async writer hides the
+    npz write; the gather + previous-write join is what the loop pays);
+  * restore latency — kill a run, time the resume back to a returned
+    result (checkpoint scan + verify + re-prepare + carry restore);
+  * remesh restore latency — the same resume landing on a different
+    schedule (the single-device stand-in for a pr×pc grid change).
+
+Writes ``results/elastic_overhead.csv`` (row per segment length +
+restore rows) — CI uploads it as an artifact.
+"""
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.engine import NMFSolver
+from repro.elastic import ElasticRunner, FaultPlan, InjectedFault, \
+    remesh_solver
+
+SEED, M, N, K = 5, 384, 256, 12
+ITERS = 30
+SEGMENTS = (2, 5, 10)
+
+
+def _A():
+    rng = np.random.RandomState(SEED)
+    return (rng.rand(M, K) @ rng.rand(K, N)
+            + 0.01 * rng.rand(M, N)).astype(np.float32)
+
+
+def _solver():
+    return NMFSolver(K, algo="hals", max_iters=ITERS)
+
+
+def _timed_fit(fn):
+    t0 = time.perf_counter()
+    res = fn()
+    jax.block_until_ready(res.W)
+    return res, time.perf_counter() - t0
+
+
+def main(emit):
+    A = _A()
+    key = jax.random.PRNGKey(SEED)
+    root = tempfile.mkdtemp(prefix="bench_elastic_")
+    rows = []
+    try:
+        # Warm the compile caches (fit and each segment length jit
+        # separately: iters is a static arg of the fixed-run scan).
+        _solver().fit(A, key=key)
+        for seg in SEGMENTS:
+            d = os.path.join(root, f"warm_{seg}")
+            ElasticRunner(_solver(), d, segment_iters=seg).fit(A, key=key)
+
+        _, base_s = _timed_fit(lambda: _solver().fit(A, key=key))
+        emit("elastic_baseline_fit", base_s * 1e6, f"iters={ITERS}")
+
+        for seg in SEGMENTS:
+            d = os.path.join(root, f"seg_{seg}")
+            runner = ElasticRunner(_solver(), d, segment_iters=seg)
+            _, wall_s = _timed_fit(lambda: runner.fit(A, key=key))
+            runner._wait_writer()
+            overhead = 100.0 * (wall_s - base_s) / base_s
+            block_mean = runner.ckpt_block_seconds.mean
+            emit(f"elastic_seg{seg}", wall_s * 1e6,
+                 f"overhead={overhead:.1f}%,block_mean_ms="
+                 f"{block_mean * 1e3:.2f},saves={int(runner.saves.value)}")
+            rows.append((f"segment_{seg}", wall_s, base_s, overhead,
+                         block_mean, int(runner.saves.value)))
+
+        # Restore latency: kill at iteration 20, resume to completion.
+        d = os.path.join(root, "restore")
+        try:
+            ElasticRunner(_solver(), d, segment_iters=10,
+                          fault_plan=FaultPlan(crash_at=(20,))) \
+                .fit(A, key=key)
+        except InjectedFault:
+            pass
+        for label, solver in [
+                ("elastic_restore", _solver()),
+                ("elastic_remesh_restore",
+                 remesh_solver(_solver(), schedule="faun"))]:
+            runner = ElasticRunner(solver, d, segment_iters=10)
+            _, t = _timed_fit(lambda: runner.fit(A))
+            emit(label, t * 1e6, "resumed_from=20")
+            rows.append((label, t, base_s, 100.0 * t / base_s, 0.0,
+                         int(runner.saves.value)))
+
+        out = os.path.join(os.path.dirname(__file__), "results",
+                           "elastic_overhead.csv")
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            f.write("case,wall_s,baseline_s,overhead_pct,"
+                    "ckpt_block_mean_s,saves\n")
+            for r in rows:
+                f.write(f"{r[0]},{r[1]:.4f},{r[2]:.4f},{r[3]:.1f},"
+                        f"{r[4]:.5f},{r[5]}\n")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main(lambda name, us, derived="": print(f"{name},{us:.2f},{derived}"))

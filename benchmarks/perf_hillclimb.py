@@ -1,5 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.util import env
+
+env.force_host_device_count(512)
 # (must precede any jax import — same rule as the dry-run)
 
 """§Perf hillclimb driver: hypothesis → change → re-lower → measure, on the

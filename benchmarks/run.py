@@ -9,9 +9,10 @@ import sys
 import time
 
 from benchmarks import (bench_autotune, bench_breakdown, bench_cost_table,
-                        bench_datasets, bench_error_curves, bench_grid_sweep,
-                        bench_k_sweep, bench_online, bench_serving,
-                        bench_strong_scaling, bench_time_to_tol)
+                        bench_datasets, bench_elastic, bench_error_curves,
+                        bench_grid_sweep, bench_k_sweep, bench_online,
+                        bench_serving, bench_strong_scaling,
+                        bench_time_to_tol)
 
 BENCHES = {
     "fig4_error_curves": bench_error_curves.main,
@@ -26,6 +27,7 @@ BENCHES = {
     "serve_scaling": bench_serving.scaling_main,
     "online_staleness": bench_online.main,
     "phase_breakdown": bench_breakdown.main,
+    "elastic_overhead": bench_elastic.main,
 }
 
 

@@ -7,15 +7,27 @@ optional background thread makes saves non-blocking (the train loop only
 blocks on the previous save).  Restore reshards to any target sharding tree
 (elastic re-scaling path: checkpoints are mesh-agnostic; device_put lays the
 host arrays onto the new mesh).
+
+Integrity: ``write_payload`` records a CRC-32 per array in ``meta.json``
+and ``read_payload`` re-verifies it, so a truncated or bit-rotted payload
+surfaces as a :class:`CheckpointCorrupt` error instead of silently feeding
+garbage factors back into a resumed run (``repro.elastic`` catches it and
+falls back to the previous step).  ``recover_payload`` repairs the one
+non-atomic window ``write_payload`` has — a crash between moving the old
+payload aside and publishing the new one leaves ``final`` absent with the
+previous version intact under ``.old_<base>_<pid>``.
 """
 
 from __future__ import annotations
 
+import glob
 import json
 import os
 import shutil
 import threading
 import time
+import zipfile
+import zlib
 from typing import Any
 
 import jax
@@ -23,6 +35,22 @@ import jax.numpy as jnp
 import numpy as np
 
 _SEP = "::"
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A payload failed to load or verify: missing file, unreadable npz,
+    or an array whose bytes no longer match the checksum recorded at write
+    time.  Callers with older checkpoints on disk should fall back to the
+    previous step (``repro.elastic.runner`` does)."""
+
+
+def _checksum(arr: np.ndarray) -> str:
+    """CRC-32 over the array bytes + dtype/shape (cheap, catches
+    truncation and bit rot; not cryptographic — this guards against disk
+    faults, not adversaries)."""
+    a = np.ascontiguousarray(arr)
+    crc = zlib.crc32(a.tobytes())
+    return f"crc32:{crc:08x}:{a.dtype.str}:{'x'.join(map(str, a.shape))}"
 
 
 def write_payload(final: str, arrays: dict[str, np.ndarray],
@@ -33,15 +61,20 @@ def write_payload(final: str, arrays: dict[str, np.ndarray],
     ``os.replace`` and deleted only after the new one is in place.  A crash
     at any point leaves intact payload dirs on disk — worst case (between
     the two renames) ``final`` is briefly absent with both versions
-    recoverable next to it, never half-written.  Shared by the train
-    checkpoints below and the serving factor artifacts
-    (``repro.serve.artifact``)."""
+    recoverable next to it (see ``recover_payload``), never half-written.
+    A per-array checksum lands in ``meta.json`` under ``"checksums"`` and
+    is verified on read.  Shared by the train checkpoints below, the
+    serving factor artifacts (``repro.serve.artifact``), and the elastic
+    run snapshots (``repro.elastic``)."""
     parent = os.path.dirname(final) or "."
     os.makedirs(parent, exist_ok=True)
     base = os.path.basename(final)
     tmp = os.path.join(parent, f".tmp_{base}_{os.getpid()}")
     os.makedirs(tmp, exist_ok=True)
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = dict(meta)
+    meta["checksums"] = {k: _checksum(np.asarray(v))
+                         for k, v in arrays.items()}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
     old = os.path.join(parent, f".old_{base}_{os.getpid()}")
@@ -54,13 +87,65 @@ def write_payload(final: str, arrays: dict[str, np.ndarray],
     return final
 
 
-def read_payload(path: str) -> tuple[dict[str, np.ndarray], dict]:
-    """Load a ``write_payload`` directory back as (arrays, meta)."""
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        arrays = {k: z[k] for k in z.files}
-    with open(os.path.join(path, "meta.json")) as f:
-        meta = json.load(f)
+def read_payload(path: str, *, verify: bool = True
+                 ) -> tuple[dict[str, np.ndarray], dict]:
+    """Load a ``write_payload`` directory back as (arrays, meta).
+
+    With ``verify`` (the default) every array whose checksum was recorded
+    at write time is re-hashed; any mismatch, truncation, or unreadable
+    file raises :class:`CheckpointCorrupt` (payloads written before
+    checksums existed load un-verified).  ``verify=False`` skips the hash
+    pass for hot paths that already trust the disk."""
+    npz = os.path.join(path, "arrays.npz")
+    try:
+        with np.load(npz) as z:
+            arrays = {k: z[k] for k in z.files}
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+    except (OSError, ValueError, KeyError, json.JSONDecodeError,
+            zipfile.BadZipFile, zlib.error, NotImplementedError) as e:
+        # NotImplementedError: flipped bits in the zip central directory
+        # masquerade as an unsupported compression method.
+        raise CheckpointCorrupt(f"unreadable payload {path}: "
+                                f"{type(e).__name__}: {e}") from e
+    if verify:
+        sums = meta.get("checksums")
+        if sums is not None:
+            missing = set(sums) - set(arrays)
+            if missing:
+                raise CheckpointCorrupt(
+                    f"payload {path} is missing arrays {sorted(missing)} "
+                    f"recorded in its manifest")
+            for name, expect in sums.items():
+                got = _checksum(arrays[name])
+                if got != expect:
+                    raise CheckpointCorrupt(
+                        f"payload {path} array {name!r} failed its "
+                        f"checksum (expected {expect}, got {got})")
     return arrays, meta
+
+
+def recover_payload(final: str) -> bool:
+    """Repair the crash-between-renames window of ``write_payload``: if
+    ``final`` is absent but a ``.old_<base>_<pid>`` sibling survives, move
+    the newest one back into place.  Returns True when a recovery
+    happened.  Leftover ``.tmp_*`` dirs for this base (saves that died
+    mid-write) are deleted either way — they may be half-written and must
+    never be promoted."""
+    parent = os.path.dirname(final) or "."
+    base = os.path.basename(final)
+    for tmp in glob.glob(os.path.join(parent, f".tmp_{base}_*")):
+        shutil.rmtree(tmp, ignore_errors=True)
+    if os.path.exists(final):
+        return False
+    olds = glob.glob(os.path.join(parent, f".old_{base}_*"))
+    if not olds:
+        return False
+    olds.sort(key=os.path.getmtime)
+    os.replace(olds[-1], final)
+    for stale in olds[:-1]:
+        shutil.rmtree(stale, ignore_errors=True)
+    return True
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:

@@ -198,15 +198,27 @@ def from_bcoo(A, gr: int, gc: int) -> BlockCOO:
 
 
 def _global_triplets(blk: BlockCOO):
-    """Host-side flat global-index triplets of a BlockCOO."""
+    """Host-side flat global-index triplets of a BlockCOO, padding
+    stripped.
+
+    The stored arrays carry zero-valued no-op entries — the per-block
+    nnz_max padding, and after ``sort_rows`` also the tile-alignment
+    padding and ``_stack_padded`` tails.  Re-blockifying those as if they
+    were real triplets inflates the new blocking's nnz_max on every grid
+    change (each remesh compounding the last), so drop them here: ALL
+    padding has val == 0 exactly, and zero-valued triplets are no-ops
+    under the scatter-add semantics, so this is lossless.  (Explicit
+    zero-valued entries from user BCOO data are dropped too — same
+    no-op argument; ``nnz`` metadata travels separately.)"""
     gr, gc = blk.grid
     mb, nb = blk.block_shape
-    V = np.asarray(blk.vals)
     bi = np.arange(gr, dtype=np.int64)[:, None, None]
     bj = np.arange(gc, dtype=np.int64)[None, :, None]
+    vals = np.asarray(blk.vals).reshape(-1)
     rows = (np.asarray(blk.rows, np.int64) + bi * mb).reshape(-1)
     cols = (np.asarray(blk.cols, np.int64) + bj * nb).reshape(-1)
-    return V.reshape(-1), rows, cols
+    keep = vals != 0
+    return vals[keep], rows[keep], cols[keep]
 
 
 def blockify(A, gr: int, gc: int) -> BlockCOO:

@@ -62,8 +62,8 @@ same compiled loops.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Callable
+from dataclasses import dataclass, field
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -102,6 +102,43 @@ class StoppingCriterion:
     @property
     def adaptive(self) -> bool:
         return self.tol is not None or self.stall_iters > 0
+
+
+# ---------------------------------------------------------------------------
+# Prepared run state — the segment API's carry
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RunState:
+    """Device-resident state of an in-flight run, between segments.
+
+    ``NMFSolver.prepare_state`` builds one (schedule-sharded A, factors,
+    loop carry); ``run_segment`` advances it a fixed number of iterations
+    in place; ``collect_result`` packs it into an ``NMFResult``.  Two
+    segments of the same compiled fixed run compose bit-identically to one
+    longer run — the segments re-enter the SAME jitted ``lax.scan`` body,
+    so the elastic runtime (``repro.elastic``) can checkpoint at segment
+    boundaries and a resumed run replays the uninterrupted trajectory
+    exactly.
+
+    ``step`` counts iterations completed so far; ``rel_history`` holds one
+    host rel-error array per segment (concatenated at collect time).
+    ``key`` is the PRNG key the factors were initialised from (None for
+    explicit / warm-started factors) — recorded in checkpoints for
+    provenance.
+    """
+
+    Arep: Any
+    W: Any
+    Ht: Any
+    normA_sq: Any
+    state: Any
+    m: int
+    n: int
+    dtype: Any
+    step: int = 0
+    rel_history: list = field(default_factory=list)
+    key: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -579,7 +616,6 @@ class NMFSolver:
             H0: jax.Array | None = None,
             W0: jax.Array | None = None, init=None,
             profile: bool = False, tracer=None) -> NMFResult:
-        m, n = A.shape
         if profile and self.panel_compression is not None:
             raise ValueError(
                 "profile=True times the uncompressed wire format; it does "
@@ -590,33 +626,13 @@ class NMFSolver:
             raise ValueError("profile=True does not compose with "
                              "panel_dtype (same wire-format reason as "
                              "panel_compression)")
-        dtype = getattr(A, "dtype", jnp.float32)
-        # Rules that size themselves from the problem (inner_iters=None)
-        # specialise here, where the global dims are first known; the
-        # prepared rule feeds the run-cache key, so shape changes recompile.
-        self.rule = self._base_rule.prepare_global(m, n, self.k)
-        if init is not None:
-            if H0 is not None or W0 is not None:
-                raise ValueError("pass either init= (a warm start) or "
-                                 "explicit W0/H0, not both")
-            W0, H0 = _warm_start_factors(init, m, n, self.k, dtype,
-                                         self.rule)
-        if key is None:
-            key = jax.random.PRNGKey(0)
-        if H0 is None:
-            H0 = init_h(key, n, self.k, dtype=dtype)
-        if W0 is None:
-            W0 = init_w(jax.random.fold_in(key, 1), m, self.k, self.rule,
-                        dtype=dtype)
-
-        Arep, W, Ht, normA_sq = self._schedule.prepare(A, W0, H0)
-        state0 = self._schedule.init_carry(m, n, dtype)
+        rs = self.prepare_state(A, key=key, H0=H0, W0=W0, init=init)
         crit = self.stopping
         if profile:
             from repro.obs import phases as _phases
             W, Ht, rels, iters_run, state, phase_times = _phases.run_profiled(
-                self._schedule, Arep, W, Ht, normA_sq, state0, crit,
-                tracer=tracer)
+                self._schedule, rs.Arep, rs.W, rs.Ht, rs.normA_sq, rs.state,
+                crit, tracer=tracer)
             W, H = self._schedule.collect(W, Ht)
             rule_state, _ = self._schedule.split_state(state)
             extras = {"schedule": self.schedule, "backend": self.backend,
@@ -628,23 +644,146 @@ class NMFSolver:
                              iters=iters_run, extras=extras)
         run = _cached_run(self._schedule, crit, self.donate)
         if crit.adaptive:
-            W, Ht, rels, i, state = run(Arep, W, Ht, normA_sq, state0)
-            iters_run = int(i)
-            rels = rels[:iters_run]
+            W, Ht, rels, i, state = run(rs.Arep, rs.W, rs.Ht, rs.normA_sq,
+                                        rs.state)
+            rs.step = int(i)
+            rels = rels[:rs.step]
         else:
-            W, Ht, rels, state = run(Arep, W, Ht, normA_sq, state0,
-                                     crit.max_iters)
-            iters_run = crit.max_iters
-        W, H = self._schedule.collect(W, Ht)
-        rule_state, residuals = self._schedule.split_state(state)
+            W, Ht, rels, state = run(rs.Arep, rs.W, rs.Ht, rs.normA_sq,
+                                     rs.state, crit.max_iters)
+            rs.step = crit.max_iters
+        rs.W, rs.Ht, rs.state = W, Ht, state
+        rs.rel_history.append(rels)
+        return self.collect_result(rs)
+
+    # -- segment API (the elastic runtime, repro.elastic) --------------------
+
+    def prepare_state(self, A, *, key: jax.Array | None = None,
+                      H0: jax.Array | None = None,
+                      W0: jax.Array | None = None, init=None) -> RunState:
+        """Resolve factors and lay the problem out for this solver's
+        schedule, without running any iterations: the first half of
+        ``fit``, exposed so segmented (checkpointed) runs share one
+        prepare path.  Explicit ``W0``/``H0`` are installed untouched —
+        this is the bit-identical resume path; ``init=`` warm starts go
+        through the same eps-flooring as ``fit(init=...)``."""
+        m, n = A.shape
+        dtype = getattr(A, "dtype", jnp.float32)
+        # Rules that size themselves from the problem (inner_iters=None)
+        # specialise here, where the global dims are first known; the
+        # prepared rule feeds the run-cache key, so shape changes recompile.
+        self.rule = self._base_rule.prepare_global(m, n, self.k)
+        if init is not None:
+            if H0 is not None or W0 is not None:
+                raise ValueError("pass either init= (a warm start) or "
+                                 "explicit W0/H0, not both")
+            W0, H0 = _warm_start_factors(init, m, n, self.k, dtype,
+                                         self.rule)
+        used_key = None
+        if H0 is None or W0 is None:
+            used_key = jax.random.PRNGKey(0) if key is None else key
+        if H0 is None:
+            H0 = init_h(used_key, n, self.k, dtype=dtype)
+        if W0 is None:
+            W0 = init_w(jax.random.fold_in(used_key, 1), m, self.k,
+                        self.rule, dtype=dtype)
+        Arep, W, Ht, normA_sq = self._schedule.prepare(A, W0, H0)
+        state0 = self._schedule.init_carry(m, n, dtype)
+        return RunState(Arep=Arep, W=W, Ht=Ht, normA_sq=normA_sq,
+                        state=state0, m=m, n=n, dtype=dtype, key=used_key)
+
+    def run_segment(self, rs: RunState, iters: int) -> RunState:
+        """Advance ``iters`` fixed iterations in place.  Segments re-enter
+        the same cached jitted fixed run ``fit`` uses, so N segments of
+        lengths summing to I are bit-identical to one ``fit`` of I
+        iterations (same ``lax.scan`` body, deterministic backends) —
+        the property the elastic checkpoint/restore tests assert."""
+        if iters <= 0:
+            return rs
+        run = _cached_run(self._schedule, StoppingCriterion(max_iters=iters),
+                          self.donate)
+        W, Ht, rels, state = run(rs.Arep, rs.W, rs.Ht, rs.normA_sq,
+                                 rs.state, iters)
+        rs.W, rs.Ht, rs.state = W, Ht, state
+        rs.step += iters
+        rs.rel_history.append(jax.device_get(rels))
+        return rs
+
+    def restore_carry(self, rs: RunState, *, rule_state=None,
+                      residuals=None) -> bool:
+        """Install a checkpointed loop carry into a freshly prepared state,
+        re-laid out for THIS solver's schedule.  The rule state is
+        grid-independent (replicated) and restores onto any layout.  Panel
+        residuals are grid-SHAPED: when their shapes match the current
+        schedule's residual template they are re-sharded onto it; on a
+        mismatch (a pr×pc remesh, or a schedule change) they are left at
+        their zero re-initialisation — error feedback restarts cleanly and
+        the resumed run matches the uninterrupted one within the
+        compression tolerance rather than bit-exactly.  Returns False when
+        that residual re-init happened, so callers can log/count it."""
+        compressed = (self.panel_compression is not None
+                      and self.schedule != "serial")
+        t_rule, t_res = self._schedule.split_state(rs.state)
+        new_rule = t_rule
+        if rule_state is not None:
+            if t_rule is None:
+                raise ValueError(
+                    f"checkpoint carries rule state but rule "
+                    f"{self.algo!r} is stateless — refusing to resume a "
+                    f"different algorithm's carry")
+            new_rule = jax.tree.map(
+                lambda t, s: jnp.asarray(s, t.dtype), t_rule, rule_state)
+        residuals_kept = True
+        new_res = t_res
+        if compressed and residuals is not None:
+            t_leaves, t_def = jax.tree_util.tree_flatten(t_res)
+            s_leaves, s_def = jax.tree_util.tree_flatten(residuals)
+            if (t_def == s_def and
+                    all(tuple(t.shape) == tuple(s.shape)
+                        for t, s in zip(t_leaves, s_leaves))):
+                new_res = jax.tree.map(
+                    lambda t, s: jax.device_put(jnp.asarray(s, t.dtype),
+                                                t.sharding), t_res, residuals)
+            else:
+                residuals_kept = False
+        rs.state = (new_rule, new_res) if compressed else new_rule
+        return residuals_kept
+
+    def collect_result(self, rs: RunState) -> NMFResult:
+        """Pack a run state into an ``NMFResult`` (the second half of
+        ``fit``): gather factors off the mesh, split the carry back into
+        rule state and panel residuals, concatenate the per-segment
+        rel-error history."""
+        W, H = self._schedule.collect(rs.W, rs.Ht)
+        rels = (jnp.concatenate([jnp.asarray(r) for r in rs.rel_history])
+                if rs.rel_history else jnp.zeros((0,), jnp.float32))
+        rule_state, residuals = self._schedule.split_state(rs.state)
         extras = {"schedule": self.schedule, "backend": self.backend,
-                  "stopped_early": iters_run < crit.max_iters,
+                  "stopped_early": rs.step < self.stopping.max_iters,
                   "rule_state": (None if rule_state is None
                                  else jax.device_get(rule_state))}
         if residuals is not None:
             extras["panel_residuals"] = jax.device_get(residuals)
         return NMFResult(W=W, H=H, rel_errors=rels, algo=self.algo,
-                         iters=iters_run, extras=extras)
+                         iters=rs.step, extras=extras)
+
+    def config_fingerprint(self) -> dict:
+        """JSON-able identity of this solver, recorded in every elastic
+        checkpoint.  The ``k`` and ``rule`` fields are ENFORCED on resume
+        (a checkpoint must never silently continue under a different rank,
+        algorithm, or regularisation); the layout fields (schedule,
+        backend, grid, compression) are recorded for provenance but MAY
+        change across a resume — that is the remesh path."""
+        ck = self._base_rule.cache_key()
+        return {"k": self.k,
+                "rule": f"{ck[0].__module__}.{ck[0].__qualname__}"
+                        f"{ck[1:]!r}",
+                "algo": self.algo,
+                "schedule": self.schedule, "backend": self.backend,
+                "grid": list(self._schedule.grid_shape()),
+                "panel_compression": self.panel_compression,
+                "panel_dtype": (None if self.panel_dtype is None
+                                else str(self.panel_dtype))}
 
     # -- AOT lowering (dry-run / roofline) ----------------------------------
 

@@ -1,0 +1,27 @@
+"""Elastic runtime: checkpointed segmented training with fault injection
+and pr×pc re-meshing.
+
+* ``repro.elastic.runner`` — :class:`ElasticRunner`: fit in
+  fixed-iteration segments, snapshot full resumable state at every
+  boundary (async, atomic, checksummed), auto-restore from the newest
+  valid checkpoint; bit-identical resume on the exact wire format.
+* ``repro.elastic.remesh`` — resume on a different pr×pc grid / device
+  count / schedule / backend (checkpoints are mesh-agnostic).
+* ``repro.elastic.faults`` — deterministic chaos: planned crashes, torn
+  saves, corruption, transients + bounded retry.
+"""
+
+from repro.elastic.faults import (FaultPlan, InjectedFault, RetryPolicy,
+                                  TransientFault, corrupt_payload,
+                                  torn_save, truncate_payload)
+from repro.elastic.remesh import (ElasticCheckpoint, load_checkpoint,
+                                  remesh_solver, resume)
+from repro.elastic.runner import (ENFORCED_FINGERPRINT, CheckpointMismatch,
+                                  ElasticRunner)
+
+__all__ = [
+    "CheckpointMismatch", "ENFORCED_FINGERPRINT", "ElasticCheckpoint",
+    "ElasticRunner", "FaultPlan", "InjectedFault", "RetryPolicy",
+    "TransientFault", "corrupt_payload", "load_checkpoint",
+    "remesh_solver", "resume", "torn_save", "truncate_payload",
+]

@@ -1,0 +1,128 @@
+"""Re-meshing: resume a checkpointed run on a different pr×pc grid,
+device count, schedule, or backend.
+
+Elastic checkpoints are **mesh-agnostic by construction**: ``runner``
+snapshots the GLOBAL factors (W, H), the replicated rule state, and the
+rel-error history — nothing in the payload encodes a device layout except
+the provenance fingerprint.  Resuming on a new layout is therefore just
+"construct a solver for the new layout, restore into it": the schedule's
+``prepare`` re-blockifies A for the new grid (dense reshards via
+``device_put``; BlockCOO re-blocks through ``blocksparse.blockify``,
+including ``sort_rows`` layouts, whose tile-alignment padding is stripped
+on the way), and ``restore_carry`` re-shards the loop carry.
+
+Parity across a remesh:
+
+  * **exact wire format** — bit-identical to the uninterrupted run on the
+    new grid from the same factors: the carry is replicated scalars/
+    factors only, nothing grid-shaped survives.
+  * **compressed panels** (``panel_compression="int8"``) — the
+    error-feedback residuals are grid-SHAPED, so a grid change re-zeroes
+    them (counted as ``elastic_residual_reinits_total``); the resumed run
+    matches the uninterrupted one within the compression tolerance.
+
+``tests/elastic_distributed_checks.py`` asserts both, across
+4×2 → 2×4 → 8×1 re-meshes on 8 forced host devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any
+
+import numpy as np
+
+from repro.checkpoint import checkpoint as _ckpt
+from repro.core.engine import NMFSolver
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticCheckpoint:
+    """One loaded elastic payload, layout-free: global factors + history +
+    the writing solver's provenance."""
+
+    step: int
+    W: np.ndarray
+    H: np.ndarray
+    rel_errors: np.ndarray
+    arrays: dict
+    meta: dict
+
+    @property
+    def fingerprint(self) -> dict:
+        return self.meta.get("fingerprint", {})
+
+    def to_result(self):
+        """An ``NMFResult`` view of the checkpoint — what warm starts and
+        the online loop's lineage root (``OnlineNMF.from_checkpoint``)
+        consume."""
+        from repro.core.aunmf import NMFResult
+        fp = self.fingerprint
+        return NMFResult(W=self.W, H=self.H, rel_errors=self.rel_errors,
+                         algo=fp.get("algo", "unknown"), iters=self.step,
+                         extras={"schedule": fp.get("schedule"),
+                                 "backend": fp.get("backend"),
+                                 "restored_step": self.step})
+
+
+def load_checkpoint(ckpt_dir: str, *, step: int | None = None
+                    ) -> ElasticCheckpoint:
+    """Load the newest valid payload under ``ckpt_dir`` (or an exact
+    ``step``), repairing torn saves and skipping corrupt payloads the same
+    way ``ElasticRunner.fit``'s restore scan does."""
+    from repro.elastic.runner import _candidate_steps
+    if not os.path.isdir(ckpt_dir):
+        raise FileNotFoundError(f"no checkpoint directory {ckpt_dir}")
+    candidates = ([step] if step is not None
+                  else _candidate_steps(ckpt_dir))
+    last_err: Exception | None = None
+    for s in candidates:
+        path = os.path.join(ckpt_dir, f"step_{s:08d}")
+        _ckpt.recover_payload(path)
+        if not os.path.isdir(path):
+            continue
+        try:
+            arrays, meta = _ckpt.read_payload(path)
+        except _ckpt.CheckpointCorrupt as e:
+            last_err = e
+            continue
+        return ElasticCheckpoint(
+            step=int(meta.get("step", s)), W=arrays["W"], H=arrays["H"],
+            rel_errors=arrays.get("rel_errors",
+                                  np.zeros((0,), np.float32)),
+            arrays=arrays, meta=meta)
+    raise (last_err or FileNotFoundError(
+        f"no valid checkpoint under {ckpt_dir}"))
+
+
+def remesh_solver(solver: NMFSolver, *, schedule: str | None = None,
+                  grid=None, mesh=None, axis: str = "p",
+                  backend=None) -> NMFSolver:
+    """A new solver with the SAME problem identity (k, rule, stopping
+    criterion, compression) on a different layout — exactly the fields a
+    resume is allowed to change.  The enforced fingerprint (k + rule) is
+    preserved by construction, so the remeshed solver accepts the old
+    solver's checkpoints."""
+    crit = solver.stopping
+    return NMFSolver(
+        solver.k, algo=solver._base_rule,
+        schedule=schedule or solver.schedule,
+        backend=solver.ops if backend is None else backend,
+        grid=grid, mesh=mesh, axis=axis,
+        max_iters=crit.max_iters, tol=crit.tol,
+        stall_iters=crit.stall_iters, stall_tol=crit.stall_tol,
+        panel_dtype=solver.panel_dtype,
+        panel_compression=solver.panel_compression, donate=solver.donate)
+
+
+def resume(solver: NMFSolver, ckpt_dir: str, A, *,
+           segment_iters: int = 10, max_iters: int | None = None,
+           **runner_kw):
+    """Resume (and finish) a checkpointed run under ``solver`` — which may
+    be laid out on a different grid/schedule/backend than the solver that
+    wrote the checkpoints.  Thin wrapper over ``ElasticRunner.fit``."""
+    from repro.elastic.runner import ElasticRunner
+    runner = ElasticRunner(solver, ckpt_dir, segment_iters=segment_iters,
+                           **runner_kw)
+    return runner.fit(A, max_iters=max_iters)

@@ -1,0 +1,374 @@
+"""ElasticRunner: checkpointed segmented training that survives death.
+
+``NMFSolver.fit`` runs a whole factorization inside one compiled loop — a
+crash at iteration 199/200 loses everything.  The runner slices the same
+run into fixed-iteration segments through the engine's segment API
+(``prepare_state`` / ``run_segment`` / ``collect_result``), snapshotting
+the FULL resumable state at every boundary:
+
+    W, H, rule state, panel-compression residuals, rel-error history,
+    the global step, the init PRNG key, and the solver's config
+    fingerprint
+
+via ``checkpoint.write_payload`` (atomic, checksummed) — asynchronously,
+off the step path: the loop only blocks to host-gather the snapshot and
+join the PREVIOUS write.  Because segments re-enter the same jitted
+``lax.scan`` body, a run killed at any boundary and resumed is
+**bit-identical** to the uninterrupted run on the exact wire format (the
+compressed-panel path restores its error-feedback residuals too, except
+across a remesh — see ``repro.elastic.remesh``).
+
+``fit`` auto-restores from the newest *valid* checkpoint: torn saves
+(crash between ``write_payload``'s two renames) are repaired via
+``recover_payload``, corrupt/truncated payloads (``CheckpointCorrupt``)
+are skipped in favour of the previous step, and a config-fingerprint
+mismatch refuses loudly (:class:`CheckpointMismatch`) — a run never
+silently resumes under a different rank, algorithm, or regularisation.
+The layout fields (schedule, backend, pr×pc grid) are NOT enforced: a
+checkpoint taken on one grid resumes on another — that re-meshing path
+lives in ``repro.elastic.remesh``.
+
+Deterministic chaos (``repro.elastic.faults``) injects crashes, torn
+saves, corruption, and bounded-retry transients at planned steps; every
+decision emits through ``repro.obs`` (counters, a checkpoint-overhead
+histogram, trace spans, structured event-log lines).
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as _ckpt
+from repro.core.engine import NMFSolver, RunState
+from repro.elastic.faults import FaultPlan, RetryPolicy, TransientFault
+from repro.obs.log import get_logger, log_event
+from repro.obs.metrics import (LATENCY_BUCKETS_S, default_registry,
+                               next_instance_label)
+from repro.obs.trace import default_tracer
+
+_log = get_logger("elastic.runner")
+_SEP = "::"
+
+#: Fingerprint fields a resume may never change (the rest — schedule,
+#: backend, grid, compression — are provenance and free to differ).
+ENFORCED_FINGERPRINT = ("k", "rule")
+
+
+class CheckpointMismatch(RuntimeError):
+    """The checkpoint was written by a solver with a different problem
+    identity (rank k, update rule, or regularisation).  Resuming would
+    silently optimise a different objective — refused.  Start a fresh
+    ``ckpt_dir``, or construct a matching solver (layout fields like the
+    pr×pc grid MAY differ; see ``repro.elastic.remesh``)."""
+
+
+def _tree_flatten_keyed(tree, prefix: str) -> dict[str, np.ndarray]:
+    """Flatten a pytree to host arrays under ``prefix`` + path keys (the
+    same ``::``-joined path scheme ``checkpoint._flatten`` uses)."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        flat[prefix + _SEP.join(parts)] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _tree_unflatten_keyed(template, arrays: dict, prefix: str):
+    """Rebuild ``template``'s structure from prefixed arrays; None when a
+    key is missing (the saved tree had a different structure — e.g. a
+    schedule change moved residual layouts)."""
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, _leaf in leaves_p:
+        parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        key = prefix + _SEP.join(parts)
+        if key not in arrays:
+            return None
+        out.append(arrays[key])
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _candidate_steps(ckpt_dir: str) -> list[int]:
+    """Checkpoint steps present on disk, newest first — including steps
+    whose final dir is absent but recoverable from a torn-save
+    ``.old_step_<N>_<pid>`` survivor."""
+    steps = set()
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_"):
+            steps.add(int(name.split("_")[1]))
+        elif name.startswith(".old_step_"):
+            steps.add(int(name.split("_")[2]))
+    return sorted(steps, reverse=True)
+
+
+class ElasticRunner:
+    """Run ``solver.fit(A)`` in checkpointed segments.
+
+    >>> runner = ElasticRunner(solver, ckpt_dir, segment_iters=10)
+    >>> result = runner.fit(A)        # crash anywhere...
+    >>> result = runner.fit(A)        # ...and this resumes, bit-identical
+
+    ``segment_iters`` sets the boundary spacing (the crash-loss bound and
+    the checkpoint-overhead knob the ``elastic_overhead`` benchmark
+    sweeps); ``keep_last`` bounds disk.  Adaptive stopping criteria on the
+    solver (tol / stall) are honoured at segment granularity: the compiled
+    segments stay fixed-length (that is what makes resume bit-exact) and
+    the criterion is evaluated host-side between them.
+
+    ``fault_plan`` (a ``repro.elastic.faults.FaultPlan``) injects
+    deterministic chaos; ``retry`` bounds transient-fault retries.  Saves
+    are async (one write in flight, the loop blocks only on host-gather +
+    the previous write) unless a fault plan needs the payload on disk
+    synchronously.  All counters/histograms land in ``registry`` (default
+    process registry) under a process-unique ``instance`` label.
+    """
+
+    def __init__(self, solver: NMFSolver, ckpt_dir: str, *,
+                 segment_iters: int = 10, keep_last: int = 3,
+                 fault_plan: FaultPlan | None = None,
+                 retry: RetryPolicy | None = None,
+                 registry=None, tracer=None, async_save: bool = True):
+        if segment_iters <= 0:
+            raise ValueError(f"segment_iters must be positive, got "
+                             f"{segment_iters}")
+        self.solver = solver
+        self.ckpt_dir = ckpt_dir
+        self.segment_iters = int(segment_iters)
+        self.keep_last = int(keep_last)
+        self.fault_plan = fault_plan
+        self.retry = retry or RetryPolicy()
+        self._tracer = tracer or default_tracer()
+        self.async_save = async_save
+        self._writer: threading.Thread | None = None
+        reg = registry or default_registry()
+        labels = {"instance": next_instance_label()}
+        c = lambda name, hlp: reg.counter(name, labels=labels, help=hlp)
+        self.saves = c("elastic_saves_total",
+                       "Segment checkpoints published")
+        self.restores = c("elastic_restores_total",
+                          "Runs resumed from a checkpoint")
+        self.corrupt_payloads = c("elastic_corrupt_payloads_total",
+                                  "Payloads skipped as corrupt/truncated")
+        self.recovered_payloads = c("elastic_recovered_payloads_total",
+                                    "Torn saves repaired from .old_ dirs")
+        self.retries = c("elastic_retries_total",
+                         "Segment retries after transient faults")
+        self.residual_reinits = c(
+            "elastic_residual_reinits_total",
+            "Panel residuals re-zeroed on restore (remesh path)")
+        self.ckpt_block_seconds = reg.histogram(
+            "elastic_checkpoint_block_seconds", buckets=LATENCY_BUCKETS_S,
+            labels=labels,
+            help="Step-path blocking time per checkpoint (gather + join)")
+
+    # -- checkpoint I/O ------------------------------------------------------
+
+    def _snapshot(self, rs: RunState) -> tuple[dict, dict]:
+        """Host-gather the full resumable state (the synchronous part of a
+        save)."""
+        W, H = self.solver._schedule.collect(rs.W, rs.Ht)
+        rule_state, residuals = self.solver._schedule.split_state(rs.state)
+        arrays: dict[str, np.ndarray] = {
+            "W": np.asarray(jax.device_get(W)),
+            "H": np.asarray(jax.device_get(H)),
+            "rel_errors": (np.concatenate(
+                [np.asarray(r) for r in rs.rel_history])
+                if rs.rel_history else np.zeros((0,), np.float32)),
+        }
+        if rule_state is not None:
+            arrays.update(_tree_flatten_keyed(rule_state, "rule" + _SEP))
+        if residuals is not None:
+            arrays.update(_tree_flatten_keyed(residuals, "res" + _SEP))
+        if rs.key is not None:
+            k = rs.key
+            if jnp.issubdtype(k.dtype, jax.dtypes.prng_key):
+                k = jax.random.key_data(k)
+            arrays["prng_key"] = np.asarray(jax.device_get(k))
+        meta = {"step": rs.step, "time": time.time(),
+                "m": rs.m, "n": rs.n, "dtype": str(np.dtype(rs.dtype)),
+                "segment_iters": self.segment_iters,
+                "fingerprint": self.solver.config_fingerprint()}
+        return arrays, meta
+
+    def _wait_writer(self) -> None:
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+
+    def _save(self, rs: RunState) -> str:
+        path = os.path.join(self.ckpt_dir, f"step_{rs.step:08d}")
+        t0 = time.perf_counter()
+        with self._tracer.span("elastic.save", step=rs.step):
+            self._wait_writer()                 # one write in flight
+            arrays, meta = self._snapshot(rs)
+
+        def _write():
+            _ckpt.write_payload(path, arrays, meta)
+            _ckpt._prune(self.ckpt_dir, self.keep_last)
+
+        # A fault plan mutates the payload right after the save — that
+        # needs the bytes on disk now, so chaos runs write synchronously.
+        if self.async_save and self.fault_plan is None:
+            self._writer = threading.Thread(target=_write, daemon=True)
+            self._writer.start()
+        else:
+            _write()
+        blocked = time.perf_counter() - t0
+        self.ckpt_block_seconds.observe(blocked)
+        self.saves.inc()
+        log_event(_log, "checkpoint_saved", step=rs.step, path=path,
+                  blocked_s=f"{blocked:.6f}")
+        if self.fault_plan is not None:
+            self.fault_plan.after_save(rs.step, path)
+        return path
+
+    def latest_valid(self) -> tuple[int, dict, dict] | None:
+        """(step, arrays, meta) of the newest checkpoint that loads and
+        verifies — repairing torn saves and skipping corrupt payloads on
+        the way down."""
+        if not os.path.isdir(self.ckpt_dir):
+            return None
+        for step in _candidate_steps(self.ckpt_dir):
+            path = os.path.join(self.ckpt_dir, f"step_{step:08d}")
+            if _ckpt.recover_payload(path):
+                self.recovered_payloads.inc()
+                log_event(_log, "torn_save_recovered", step=step, path=path)
+            if not os.path.isdir(path):
+                continue
+            try:
+                arrays, meta = _ckpt.read_payload(path)
+            except _ckpt.CheckpointCorrupt as e:
+                self.corrupt_payloads.inc()
+                log_event(_log, "corrupt_checkpoint_skipped", step=step,
+                          path=path, error=type(e).__name__,
+                          level=30)      # logging.WARNING
+                continue
+            return int(meta.get("step", step)), arrays, meta
+        return None
+
+    def _check_fingerprint(self, meta: dict) -> None:
+        saved = meta.get("fingerprint", {})
+        mine = self.solver.config_fingerprint()
+        for fld in ENFORCED_FINGERPRINT:
+            if saved.get(fld) != mine.get(fld):
+                raise CheckpointMismatch(
+                    f"checkpoint fingerprint field {fld!r} = "
+                    f"{saved.get(fld)!r} does not match this solver's "
+                    f"{mine.get(fld)!r}; refusing to resume under a "
+                    f"different problem identity (layout fields like the "
+                    f"grid may change, k/rule may not)")
+
+    # -- the run -------------------------------------------------------------
+
+    def _restore(self, A, step: int, arrays: dict, meta: dict) -> RunState:
+        solver = self.solver
+        m, n = A.shape
+        if tuple(arrays["W"].shape) != (m, solver.k) or \
+                tuple(arrays["H"].shape) != (solver.k, n):
+            raise CheckpointMismatch(
+                f"checkpoint factors W{arrays['W'].shape} / "
+                f"H{arrays['H'].shape} do not fit problem "
+                f"({m}, {n}) at k={solver.k}")
+        rs = solver.prepare_state(A, W0=arrays["W"], H0=arrays["H"])
+        t_rule, t_res = solver._schedule.split_state(rs.state)
+        rule_state = None
+        if t_rule is not None:
+            rule_state = _tree_unflatten_keyed(t_rule, arrays, "rule" + _SEP)
+        had_res = any(k.startswith("res" + _SEP) for k in arrays)
+        residuals = None
+        if had_res and t_res is not None:
+            residuals = _tree_unflatten_keyed(t_res, arrays, "res" + _SEP)
+        kept = solver.restore_carry(rs, rule_state=rule_state,
+                                    residuals=residuals)
+        if had_res and (residuals is None or not kept):
+            self.residual_reinits.inc()
+            log_event(_log, "panel_residuals_reinitialised", step=step,
+                      saved_grid=str(meta.get("fingerprint", {}).get("grid")),
+                      new_grid=str(solver.config_fingerprint()["grid"]))
+        rs.step = step
+        rels = arrays.get("rel_errors")
+        if rels is not None and rels.size:
+            rs.rel_history = [np.asarray(rels, np.float32)]
+        self.restores.inc()
+        log_event(_log, "run_resumed", step=step,
+                  saved_grid=str(meta.get("fingerprint", {}).get("grid")),
+                  new_grid=str(solver.config_fingerprint()["grid"]))
+        return rs
+
+    def _converged(self, rs: RunState) -> bool:
+        """Host-side evaluation of the solver's adaptive stopping criterion
+        over the accumulated rel-error history (segment-granular)."""
+        crit = self.solver.stopping
+        if not crit.adaptive or not rs.rel_history:
+            return False
+        rels = np.concatenate([np.asarray(r) for r in rs.rel_history])
+        if crit.tol is not None and rels[-1] <= crit.tol:
+            return True
+        if crit.stall_iters:
+            best, stall = np.inf, 0
+            for r in rels:
+                stall = 0 if r < best - crit.stall_tol else stall + 1
+                best = min(best, float(r))
+            return stall >= crit.stall_iters
+        return False
+
+    def _run_segment_with_retry(self, rs: RunState, seg: int) -> None:
+        attempt = 0
+        while True:
+            try:
+                if self.fault_plan is not None:
+                    self.fault_plan.before_segment(rs.step)
+                with self._tracer.span("elastic.segment", step=rs.step,
+                                       iters=seg):
+                    self.solver.run_segment(rs, seg)
+                return
+            except TransientFault as e:
+                if attempt >= self.retry.max_retries:
+                    log_event(_log, "segment_retries_exhausted",
+                              step=rs.step, attempts=attempt, level=40)
+                    raise
+                delay = self.retry.delay(attempt)
+                attempt += 1
+                self.retries.inc()
+                log_event(_log, "segment_retry", step=rs.step,
+                          attempt=attempt, delay_s=delay,
+                          error=str(e), level=30)
+                if delay:
+                    time.sleep(delay)
+
+    def fit(self, A, *, key=None, W0=None, H0=None, init=None,
+            max_iters: int | None = None):
+        """Segmented ``solver.fit(A)`` with auto-restore.  Fresh-start
+        arguments (``key``/``W0``/``H0``/``init``) apply only when no
+        checkpoint exists; a valid checkpoint always wins (its factors ARE
+        the run).  Returns the same ``NMFResult`` a plain fit would."""
+        solver = self.solver
+        total = solver.stopping.max_iters if max_iters is None else max_iters
+        loaded = self.latest_valid()
+        if loaded is not None:
+            step, arrays, meta = loaded
+            self._check_fingerprint(meta)
+            with self._tracer.span("elastic.restore", step=step):
+                rs = self._restore(A, step, arrays, meta)
+        else:
+            rs = solver.prepare_state(A, key=key, W0=W0, H0=H0, init=init)
+            log_event(_log, "run_started", total_iters=total,
+                      segment_iters=self.segment_iters,
+                      fingerprint=str(solver.config_fingerprint()["rule"]))
+        try:
+            while rs.step < total:
+                seg = min(self.segment_iters, total - rs.step)
+                self._run_segment_with_retry(rs, seg)
+                self._save(rs)
+                if self._converged(rs):
+                    log_event(_log, "run_converged", step=rs.step)
+                    break
+        finally:
+            self._wait_writer()
+        return solver.collect_result(rs)

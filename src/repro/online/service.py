@@ -260,6 +260,25 @@ class OnlineNMF:
                                     max_delay_s=max_delay_s,
                                     registry=registry)
 
+    @classmethod
+    def from_checkpoint(cls, A0, ckpt_dir: str, *, step: int | None = None,
+                        k: int | None = None, **kw) -> "OnlineNMF":
+        """Seed the online loop from an elastic training checkpoint
+        (``repro.elastic``) instead of fitting here: the checkpointed
+        factors become the lineage root (v0), so a run killed mid-training
+        flows straight into serving — the checkpoint's step count and
+        rel-error history ride along as the baseline the drift ladder
+        measures against.  ``A0`` must be the matrix the checkpoint was
+        trained on (its row count is validated against W)."""
+        from repro.elastic.remesh import load_checkpoint
+        ck = load_checkpoint(ckpt_dir, step=step)
+        if k is not None and k != ck.W.shape[1]:
+            raise ValueError(f"k={k} does not match the checkpoint's "
+                             f"rank {ck.W.shape[1]}")
+        if "solver" not in kw and ck.fingerprint.get("algo"):
+            kw.setdefault("algo", ck.fingerprint["algo"])
+        return cls(A0, k=int(ck.W.shape[1]), result=ck.to_result(), **kw)
+
     # -- helpers -------------------------------------------------------------
 
     @staticmethod

@@ -1,14 +1,17 @@
 import os
 import sys
 
-# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
-# (the dry-run sets its own 512-device flag in its own process).
+# NOTE: no forced device count here — smoke tests and benches must see 1
+# device (each distributed-check driver configures its own subprocess via
+# repro.util.env before importing jax).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import pytest
+from repro.util import env
 
-jax.config.update("jax_enable_x64", False)
+env.enable_x64(False)
+
+import jax  # noqa: E402  (after env config, the required order)
+import pytest  # noqa: E402
 
 # One seed for the whole session, overridable for replay: every streaming /
 # randomized test derives its PRNG state from this (never from time or a

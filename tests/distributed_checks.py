@@ -3,9 +3,9 @@
 amortises jax startup).  Prints "PASS <name>" per check; exits nonzero on
 any failure."""
 
-import os
+from repro.util import env
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+env.configure(host_device_count=8)   # before any jax import
 
 import sys
 import traceback

@@ -14,9 +14,9 @@ Covers the acceptance criteria of the engine refactor:
   * tolerance-based stopping halts early on every schedule.
 """
 
-import os
+from repro.util import env
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+env.configure(host_device_count=8)   # before any jax import
 
 import sys
 import traceback

@@ -17,10 +17,11 @@ Covers the acceptance criteria of the online train→serve loop on a mesh:
     match an independent cold projection at their stamped version.
 """
 
+from repro.util import env
+
+env.configure(host_device_count=8)   # before any jax import
+
 import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-
 import sys
 import threading
 import time

@@ -19,10 +19,11 @@ Covers the acceptance criteria of mesh-sharded serving:
     artifacts under live traffic.
 """
 
+from repro.util import env
+
+env.configure(host_device_count=8)   # before any jax import
+
 import os
-
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-
 import sys
 import tempfile
 import threading

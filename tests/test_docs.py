@@ -21,6 +21,7 @@ PAGES = {
     "algorithms.md": "custom rule rel err:",
     "backends.md": "final rel err:",
     "distributed.md": "compressed rel err:",
+    "elastic.md": "resumed bit-identical to the uninterrupted run: True",
     "observability.md": "phase profile:",
     "online.md": "streaming rel err:",
     "serving.md": "sharded parity:",

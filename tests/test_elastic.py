@@ -1,0 +1,329 @@
+"""Elastic runtime: segmented training, checkpoint integrity, fault
+injection, resume semantics (single-device tier; the remesh / multi-device
+parity checks live in elastic_distributed_checks.py)."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import blocksparse as bs
+from repro.core.engine import NMFSolver
+from repro.elastic import (CheckpointMismatch, ElasticRunner, FaultPlan,
+                           InjectedFault, RetryPolicy, TransientFault,
+                           load_checkpoint, remesh_solver)
+
+HERE = os.path.dirname(__file__)
+KEY = jax.random.PRNGKey(11)
+M, N, K = 48, 32, 4
+RNG = np.random.RandomState(4)
+A = (RNG.rand(M, K) @ RNG.rand(K, N) + 0.01 * RNG.rand(M, N)) \
+    .astype(np.float32)
+
+#: every schedule runs on one device (faun/gspmd on a 1×1 grid, naive on a
+#: length-1 mesh); "amu" carries rule state, so resume must restore it too.
+SCHEDULES = ["serial", "faun", "naive", "gspmd"]
+
+
+def _solver(schedule, **kw):
+    kw.setdefault("algo", "amu")
+    kw.setdefault("max_iters", 12)
+    return NMFSolver(K, schedule=schedule, **kw)
+
+
+def _assert_same_result(res, ref, schedule=""):
+    assert np.array_equal(np.asarray(res.W), np.asarray(ref.W)), schedule
+    assert np.array_equal(np.asarray(res.H), np.asarray(ref.H)), schedule
+    np.testing.assert_array_equal(np.asarray(res.rel_errors),
+                                  np.asarray(ref.rel_errors))
+    assert res.iters == ref.iters
+
+
+# ------------------------------------------------------- segmented == fit
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_uninterrupted_segmented_run_matches_fit(schedule, tmp_path):
+    ref = _solver(schedule).fit(A, key=KEY)
+    res = ElasticRunner(_solver(schedule), str(tmp_path),
+                        segment_iters=4).fit(A, key=KEY)
+    _assert_same_result(res, ref, schedule)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_killed_at_every_segment_boundary_resumes_bit_identical(
+        schedule, tmp_path):
+    """The headline property: crash after ANY checkpoint, resume, and the
+    completed run is bit-identical to the uninterrupted one — including
+    the stateful rule's carry (amu's inner-sweep counters)."""
+    ref = _solver(schedule).fit(A, key=KEY)
+    for boundary in (4, 8):
+        d = str(tmp_path / f"kill_{boundary}")
+        plan = FaultPlan(crash_at=(boundary,))
+        with pytest.raises(InjectedFault):
+            ElasticRunner(_solver(schedule), d, segment_iters=4,
+                          fault_plan=plan).fit(A, key=KEY)
+        runner = ElasticRunner(_solver(schedule), d, segment_iters=4)
+        res = runner.fit(A)
+        _assert_same_result(res, ref, f"{schedule}@{boundary}")
+        assert runner.restores.value == 1
+
+
+def test_resume_restores_rule_state_not_just_factors(tmp_path):
+    plan = FaultPlan(crash_at=(8,))
+    with pytest.raises(InjectedFault):
+        ElasticRunner(_solver("serial"), str(tmp_path), segment_iters=4,
+                      fault_plan=plan).fit(A, key=KEY)
+    res = ElasticRunner(_solver("serial"), str(tmp_path),
+                        segment_iters=4).fit(A)
+    ref = _solver("serial").fit(A, key=KEY)
+    for field in ("inner_w", "inner_h"):
+        assert int(res.extras["rule_state"][field]) == \
+            int(ref.extras["rule_state"][field])
+
+
+def test_adaptive_tol_honoured_at_segment_granularity(tmp_path):
+    solver = NMFSolver(K, algo="mu", max_iters=200, tol=0.3)
+    res = ElasticRunner(solver, str(tmp_path), segment_iters=5).fit(A,
+                                                                    key=KEY)
+    assert res.iters < 200 and res.iters % 5 == 0
+    assert float(np.asarray(res.rel_errors)[-1]) <= 0.3
+    assert res.extras["stopped_early"]
+
+
+# ------------------------------------------------------ payload integrity
+
+def test_write_read_payload_checksum_roundtrip(tmp_path):
+    path = str(tmp_path / "p")
+    arrays = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+              "b": np.ones((2,), np.int32)}
+    ckpt.write_payload(path, arrays, {"x": 1})
+    out, meta = ckpt.read_payload(path)
+    assert meta["x"] == 1 and set(meta["checksums"]) == {"a", "b"}
+    np.testing.assert_array_equal(out["a"], arrays["a"])
+
+
+def test_corrupt_payload_raises_checkpoint_corrupt(tmp_path):
+    from repro.elastic import corrupt_payload
+    path = str(tmp_path / "p")
+    ckpt.write_payload(path, {"a": np.zeros((64,), np.float32)}, {})
+    corrupt_payload(path)
+    with pytest.raises(ckpt.CheckpointCorrupt):
+        ckpt.read_payload(path)
+
+
+def test_truncated_payload_raises_checkpoint_corrupt(tmp_path):
+    from repro.elastic import truncate_payload
+    path = str(tmp_path / "p")
+    ckpt.write_payload(path, {"a": np.zeros((64,), np.float32)}, {})
+    truncate_payload(path)
+    with pytest.raises(ckpt.CheckpointCorrupt):
+        ckpt.read_payload(path)
+
+
+def test_payload_without_checksums_still_loads(tmp_path):
+    # pre-hardening payloads (older FactorArtifacts) must keep loading
+    import json
+    path = str(tmp_path / "p")
+    ckpt.write_payload(path, {"a": np.ones((3,), np.float32)}, {})
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    del meta["checksums"]
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    out, _ = ckpt.read_payload(path)
+    np.testing.assert_array_equal(out["a"], np.ones((3,), np.float32))
+
+
+def test_recover_payload_repairs_torn_save(tmp_path):
+    from repro.elastic import torn_save
+    path = str(tmp_path / "step_00000004")
+    ckpt.write_payload(path, {"a": np.ones((3,), np.float32)}, {"step": 4})
+    torn_save(path)
+    assert not os.path.exists(path)
+    assert ckpt.recover_payload(path)
+    out, meta = ckpt.read_payload(path)
+    assert meta["step"] == 4
+    assert not ckpt.recover_payload(path)       # idempotent: nothing to do
+
+
+# ----------------------------------------------------------- fault chaos
+
+def test_corrupt_checkpoint_falls_back_to_previous_step(tmp_path):
+    ref = _solver("serial", algo="mu").fit(A, key=KEY)
+    plan = FaultPlan(corrupt_at=(8,), crash_at=(8,))
+    with pytest.raises(InjectedFault):
+        ElasticRunner(_solver("serial", algo="mu"), str(tmp_path),
+                      segment_iters=4, fault_plan=plan).fit(A, key=KEY)
+    runner = ElasticRunner(_solver("serial", algo="mu"), str(tmp_path),
+                           segment_iters=4)
+    res = runner.fit(A)                  # resumes from step 4, not 8
+    _assert_same_result(res, ref)
+    assert runner.corrupt_payloads.value == 1
+
+
+def test_torn_save_recovered_on_resume(tmp_path):
+    ref = _solver("serial", algo="mu").fit(A, key=KEY)
+    plan = FaultPlan(torn_at=(8,), crash_at=(8,))
+    with pytest.raises(InjectedFault):
+        ElasticRunner(_solver("serial", algo="mu"), str(tmp_path),
+                      segment_iters=4, fault_plan=plan).fit(A, key=KEY)
+    assert not os.path.exists(str(tmp_path / "step_00000008"))
+    runner = ElasticRunner(_solver("serial", algo="mu"), str(tmp_path),
+                           segment_iters=4)
+    res = runner.fit(A)
+    _assert_same_result(res, ref)
+    assert runner.recovered_payloads.value == 1
+
+
+def test_transient_faults_retried_then_succeed(tmp_path):
+    ref = _solver("serial", algo="mu").fit(A, key=KEY)
+    plan = FaultPlan(transient_at={4: 2})
+    runner = ElasticRunner(_solver("serial", algo="mu"), str(tmp_path),
+                           segment_iters=4, fault_plan=plan,
+                           retry=RetryPolicy(max_retries=3, backoff_s=0.0))
+    res = runner.fit(A, key=KEY)
+    _assert_same_result(res, ref)
+    assert runner.retries.value == 2
+
+
+def test_retry_budget_exhaustion_raises(tmp_path):
+    plan = FaultPlan(transient_at={0: 5})
+    runner = ElasticRunner(_solver("serial", algo="mu"), str(tmp_path),
+                           segment_iters=4, fault_plan=plan,
+                           retry=RetryPolicy(max_retries=1))
+    with pytest.raises(TransientFault):
+        runner.fit(A, key=KEY)
+    assert runner.retries.value == 1
+
+
+# -------------------------------------------------- fingerprint enforcement
+
+def test_fingerprint_mismatch_refuses_resume(tmp_path):
+    ElasticRunner(_solver("serial", algo="mu"), str(tmp_path),
+                  segment_iters=6).fit(A, key=KEY)
+    # different rank
+    with pytest.raises(CheckpointMismatch, match="'k'"):
+        ElasticRunner(NMFSolver(5, algo="mu", max_iters=12),
+                      str(tmp_path), segment_iters=6).fit(A)
+    # different algorithm
+    with pytest.raises(CheckpointMismatch, match="'rule'"):
+        ElasticRunner(NMFSolver(K, algo="hals", max_iters=12),
+                      str(tmp_path), segment_iters=6).fit(A)
+    # different regularisation — same class, still refused
+    from repro.core.rules import MURule
+    with pytest.raises(CheckpointMismatch, match="'rule'"):
+        ElasticRunner(NMFSolver(K, algo=MURule(l1=0.1), max_iters=12),
+                      str(tmp_path), segment_iters=6).fit(A)
+
+
+def test_remesh_solver_preserves_enforced_fingerprint():
+    s = NMFSolver(K, algo="amu", schedule="faun", max_iters=20, tol=1e-5)
+    r = remesh_solver(s, schedule="serial")
+    assert r.config_fingerprint()["rule"] == s.config_fingerprint()["rule"]
+    assert r.config_fingerprint()["k"] == K
+    assert r.stopping == s.stopping and r.schedule == "serial"
+
+
+# -------------------------------------------------------- load/lineage
+
+def test_load_checkpoint_and_online_lineage(tmp_path):
+    solver = _solver("serial", algo="mu", max_iters=10)
+    ElasticRunner(solver, str(tmp_path), segment_iters=5).fit(A, key=KEY)
+    ck = load_checkpoint(str(tmp_path))
+    assert ck.step == 10 and ck.W.shape == (M, K)
+    assert ck.fingerprint["algo"] == "mu"
+
+    from repro.online.service import OnlineNMF
+    svc = OnlineNMF.from_checkpoint(A, str(tmp_path), max_delay_s=1e-4)
+    try:
+        assert svc.artifact.version == 0
+        assert svc._rule.name == "mu"
+        rep = svc.ingest(RNG.rand(4, N).astype(np.float32))
+        assert rep.version == 1
+    finally:
+        svc.close()
+
+
+def test_load_checkpoint_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path / "nope"))
+
+
+# ------------------------------------------- sorted re-blockify (remesh)
+
+def test_reblockify_strips_padding_and_preserves_values():
+    D = RNG.rand(64, 48).astype(np.float32)
+    D[D < 0.8] = 0.0
+    fresh = bs.blockify(D, 2, 4)
+    for blk in (bs.blockify(D, 4, 2),
+                bs.blockify(D, 4, 2).sort_rows(align=64),
+                bs.blockify(D, 4, 2).sort_rows(align=64, orient="cols")):
+        re = bs.blockify(blk, 2, 4)
+        np.testing.assert_allclose(re.todense(), D)
+        assert re.vals.shape[-1] == fresh.vals.shape[-1], \
+            "re-blockify inflated nnz_max"
+
+
+def test_elastic_sparse_resume(tmp_path):
+    """Sparse backend end-to-end through kill/resume (BlockCOO snapshot
+    path: A re-blockifies on restore)."""
+    from jax.experimental import sparse as jsparse
+    Asp = jsparse.BCOO.fromdense(np.where(A > np.median(A), A, 0.0))
+    mk = lambda: NMFSolver(K, algo="mu", schedule="serial",
+                           backend="sparse", max_iters=8)
+    ref = mk().fit(Asp, key=KEY)
+    with pytest.raises(InjectedFault):
+        ElasticRunner(mk(), str(tmp_path), segment_iters=4,
+                      fault_plan=FaultPlan(crash_at=(4,))).fit(Asp, key=KEY)
+    res = ElasticRunner(mk(), str(tmp_path), segment_iters=4).fit(Asp)
+    _assert_same_result(res, ref)
+
+
+# ------------------------------------------------------- observability
+
+def test_runner_emits_metrics_and_events(tmp_path, caplog):
+    import logging
+    from repro.obs import Tracer
+    tracer = Tracer()
+    runner = ElasticRunner(_solver("serial", algo="mu"), str(tmp_path),
+                           segment_iters=4, tracer=tracer)
+    with caplog.at_level(logging.INFO, logger="repro.elastic.runner"):
+        runner.fit(A, key=KEY)
+    assert runner.saves.value == 3
+    assert runner.ckpt_block_seconds.count == 3
+    events = [r.event for r in caplog.records if hasattr(r, "event")]
+    assert "run_started" in events and "checkpoint_saved" in events
+    names = {s.name for s in tracer.spans()}
+    assert {"elastic.segment", "elastic.save"} <= names
+
+
+def test_keep_last_prunes_old_checkpoints(tmp_path):
+    ElasticRunner(_solver("serial", algo="mu", max_iters=20), str(tmp_path),
+                  segment_iters=4, keep_last=2).fit(A, key=KEY)
+    steps = sorted(d for d in os.listdir(str(tmp_path))
+                   if d.startswith("step_"))
+    assert steps == ["step_00000016", "step_00000020"]
+
+
+# ------------------------------------------------- multi-device (slow tier)
+
+@pytest.mark.slow
+@pytest.mark.timeout(1200)
+def test_elastic_distributed_checks():
+    """Runs elastic_distributed_checks.py in one subprocess with 8 fake
+    host devices (same harness as the other *_distributed_checks)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "elastic_distributed_checks.py")],
+        capture_output=True, text=True, env=env, timeout=1150)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "elastic distributed checks failed"
+    assert "0 failures" in proc.stdout
